@@ -1,0 +1,208 @@
+"""Shared benchmark harness: builds the full Floe system once (reduced
+configs, CPU) and caches every artifact the per-table benchmarks need.
+
+The "cloud LLM" is given its general-knowledge advantage by instruction-
+tuning on the FULL task mixture; edge clients see only their non-IID
+shards (alpha=0.05) — reproducing the paper's capability split between
+Gemma-7B and per-user Gemma-2B adapters at CPU scale.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import fusion as FUS
+from repro.core import lora as LORA
+from repro.data import pipeline as PIPE
+from repro.data.tasks import TASKS, make_dataset, make_mixed_dataset
+from repro.federated.simulation import (SimConfig, make_fleet, run_fedavg,
+                                        run_local_only, run_simulation)
+from repro.models.model import LM
+from repro.training import optimizer as OPT
+from repro.training import train_step as TS
+
+_CACHE: Dict[str, Any] = {}
+
+
+def timer(fn, *args, repeats: int = 3):
+    fn(*args)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / repeats * 1e6, out  # us
+
+
+def row(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line
+
+
+@dataclass
+class System:
+    slm: LM
+    slm_params: Any
+    llm: LM
+    llm_params: Any
+    mlp: Any                        # alignment MLP (trained)
+    sim_result: Any                 # federated run (clustered experts)
+    fedavg_adapter: Any
+    local_adapters: List[Any]
+    fleet: Any
+    seq_len: int = 40
+
+
+def _pretrain_llm(lm, params, steps: int = 60, seed: int = 0):
+    """Give the cloud LLM broad multi-task knowledge (full fine-tune of a
+    LoRA at high rank on ALL tasks)."""
+    opt = OPT.adamw(OPT.constant_schedule(5e-3))
+    step = TS.make_lora_train_step(lm, opt)
+    bank = LORA.single_expert_bank(
+        LORA.init_adapter(lm, jax.random.key(seed + 7), rank=16))
+    ostate = opt.init({k: v for k, v in bank.items()
+                       if not k.startswith("_")})
+    ds = make_mixed_dataset(list(TASKS), 512, seed=seed)
+    it = PIPE.batches(ds, 8, 40, seed=seed)
+    g = jnp.ones((1,))
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        bank, ostate, _ = step(params, bank, ostate, b, g, None)
+    return bank
+
+
+def get_system(seed: int = 0) -> System:
+    if "system" in _CACHE:
+        return _CACHE["system"]
+    import dataclasses
+    scfg = get_config("floe-slm-2b").reduced()
+    # the reduced LLM keeps a genuine capacity advantage over the SLM
+    # (deeper + wider FFN) so the capability split survives reduction
+    lcfg = dataclasses.replace(get_config("floe-llm-7b").reduced(),
+                               num_layers=4, d_ff=1024)
+    slm = LM(scfg, remat=False)
+    llm = LM(lcfg, remat=False)
+    sp = slm.init(jax.random.key(seed))
+    lp = llm.init(jax.random.key(seed + 1))
+
+    # cloud LLM: general knowledge (all tasks)
+    llm_bank = _pretrain_llm(llm, lp, steps=60, seed=seed)
+
+    # federated phase on the SLM fleet
+    sim = SimConfig(num_clients=6, examples_per_client=72, rounds=1,
+                    local_steps=16, seq_len=40, batch_size=6, alpha=0.05,
+                    lr=5e-3, seed=seed)
+    fleet = make_fleet(sim)
+    res = run_simulation(slm, sp, sim, fleet=fleet)
+    fedavg = run_fedavg(slm, sp, sim, fleet=fleet)
+    locals_ = run_local_only(slm, sp, sim, fleet=fleet)
+
+    # alignment MLP trained on fused next-token prediction
+    mlp = FUS.init_alignment(jax.random.key(seed + 2), scfg.vocab_size)
+    mlp = _train_alignment(slm, sp, res, llm, lp, llm_bank, mlp, seed)
+
+    sys = System(slm, sp, llm, (lp, llm_bank), mlp, res, fedavg, locals_,
+                 fleet)
+    _CACHE["system"] = sys
+    return sys
+
+
+def llm_logits(sys: System, tokens):
+    lp, bank = sys.llm_params
+    logits, _ = sys.llm.train_logits(lp, {"tokens": tokens},
+                                     lora=LORA.bank_for_model(bank),
+                                     gates=jnp.ones((1,)))
+    return logits
+
+
+def slm_logits(sys: System, tokens, gates=None, which: str = "floe"):
+    if which == "base":
+        logits, _ = sys.slm.train_logits(sys.slm_params, {"tokens": tokens})
+        return logits
+    if which == "fedavg":
+        bank = LORA.single_expert_bank(sys.fedavg_adapter)
+        g = jnp.ones((1,))
+    else:
+        bank = sys.sim_result.server.expert_bank()
+        g = gates if gates is not None else jnp.ones(
+            (1, len(sys.sim_result.server.state.experts))) / len(
+                sys.sim_result.server.state.experts)
+    logits, _ = sys.slm.train_logits(sys.slm_params, {"tokens": tokens},
+                                     lora=LORA.bank_for_model(bank), gates=g)
+    return logits
+
+
+def _train_alignment(slm, sp, res, llm, lp, llm_bank, mlp, seed):
+    ds = make_mixed_dataset(list(TASKS), 64, seed=seed + 50)
+    b = PIPE.make_batch(ds[:32], 40)
+    toks = jnp.asarray(b["tokens"])
+    bank = res.server.expert_bank()
+    e = len(res.server.state.experts)
+    sl, _ = slm.train_logits(sp, {"tokens": toks},
+                             lora=LORA.bank_for_model(bank),
+                             gates=jnp.ones((1, e)) / e)
+    ll, _ = llm.train_logits(lp, {"tokens": toks},
+                             lora=LORA.bank_for_model(llm_bank),
+                             gates=jnp.ones((1,)))
+    mask = np.asarray(b["mask"]) > 0
+    rows_s, rows_l, tg = [], [], []
+    tgt = np.asarray(b["targets"])
+    for i in range(toks.shape[0]):
+        idx = np.where(mask[i])[0]
+        for j in idx[:6]:
+            rows_s.append(np.asarray(sl[i, j]))
+            rows_l.append(np.asarray(ll[i, j]))
+            tg.append(tgt[i, j])
+    batches = [(jnp.asarray(np.stack(rows_s)), jnp.asarray(np.stack(rows_l)),
+                jnp.asarray(np.asarray(tg)))]
+    mlp, _ = FUS.train_alignment(mlp, batches, lr=2e-2, steps=150)
+    return mlp
+
+
+def fused_accuracy(sys: System, dataset, gates_fn=None,
+                   fixed_w: Optional[float] = None,
+                   llm_only: bool = False, slm_which: str = "floe",
+                   slm_only: bool = False) -> float:
+    """Teacher-forced answer accuracy of the fused (or solo) system."""
+    hits = total = 0
+    router = sys.sim_result.server.router()
+    for i in range(0, len(dataset), 8):
+        chunk = dataset[i:i + 8]
+        b = PIPE.make_batch(chunk, sys.seq_len)
+        toks = jnp.asarray(b["tokens"])
+        if slm_only or not llm_only:
+            if gates_fn is not None:
+                g = jnp.asarray(np.stack(
+                    [gates_fn(ex.prompt) for ex in chunk]))
+            else:
+                g = None
+            sl = slm_logits(sys, toks, g, which=slm_which)
+        if not slm_only:
+            ll = llm_logits(sys, toks)
+        if llm_only:
+            probs = jax.nn.softmax(ll.astype(jnp.float32), -1)
+        elif slm_only:
+            probs = jax.nn.softmax(sl.astype(jnp.float32), -1)
+        else:
+            B, S, V = sl.shape
+            p, w = FUS.fused_distribution(
+                sys.mlp, sl.reshape(B * S, V), ll.reshape(B * S, V))
+            if fixed_w is not None:
+                p = FUS.fuse(jax.nn.softmax(sl.reshape(B * S, V), -1),
+                             jax.nn.softmax(ll.reshape(B * S, V), -1),
+                             jnp.full((B * S,), fixed_w))
+            probs = p.reshape(B, S, V)
+        pred = np.asarray(jnp.argmax(probs, -1))
+        m = b["mask"] > 0
+        for j in range(pred.shape[0]):
+            if m[j].sum() == 0:
+                continue
+            total += int(m[j].sum())
+            hits += int((pred[j][m[j]] == b["targets"][j][m[j]]).sum())
+    return hits / max(1, total)

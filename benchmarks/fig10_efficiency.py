@@ -1,0 +1,50 @@
+"""Fig. 10: system-efficiency comparison — vanilla LLM vs compressed
+(20%/50%) vs Floe's SLM+LoRA, on params / memory / MACs / comm latency
+(analytic, full-size configs) plus measured CPU µs/token on the reduced
+models."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.configs import get_config
+from repro.core.rank_select import lora_params, model_base_params
+from repro.models.model import LM
+
+
+def run():
+    llm = get_config("floe-llm-7b")       # Gemma-7B geometry
+    slm = get_config("floe-slm-2b")       # Gemma-2B geometry
+    n_llm = model_base_params(llm)
+    n_slm = model_base_params(slm)
+    lora_n = lora_params(slm, 16)
+    bw = 100e6                            # 100 MBps uplink (paper Sec. V-C)
+
+    variants = {
+        "vanilla-LLM-7B": (n_llm, 2 * n_llm, n_llm),
+        "compressed-20%": (0.8 * n_llm, 1.6 * n_llm, 0.8 * n_llm),
+        "compressed-50%": (0.5 * n_llm, 1.0 * n_llm, 0.5 * n_llm),
+        "floe-SLM+LoRA": (n_slm, 2 * n_slm, lora_n),   # only LoRA moves
+    }
+    for name, (params, mem_bytes, comm_params) in variants.items():
+        comm_s = 2 * comm_params * 2 / bw            # up+down, bf16
+        C.row(f"fig10/{name}", 0,
+              f"params={params/1e9:.2f}B mem={mem_bytes/1e9:.1f}GB "
+              f"comm={comm_s:.1f}s")
+    red = 1 - (2 * lora_params(slm, 16)) / (2 * n_llm)
+    C.row("fig10/comm_reduction_vs_llm", 0, f"{red*100:.1f}%")
+
+    # measured CPU forward µs/token on the reduced pair
+    sys = C.get_system()
+    toks = jnp.ones((1, 32), jnp.int32)
+    f_s = jax.jit(lambda t: sys.slm.train_logits(sys.slm_params,
+                                                 {"tokens": t})[0])
+    f_l = jax.jit(lambda t: C.llm_logits(sys, t))
+    us_s, _ = C.timer(lambda t: jax.block_until_ready(f_s(t)), toks)
+    us_l, _ = C.timer(lambda t: jax.block_until_ready(f_l(t)), toks)
+    C.row("fig10/cpu_us_slm_fwd32", us_s, f"speedup={us_l/us_s:.2f}x")
+    C.row("fig10/cpu_us_llm_fwd32", us_l, "1.0x")
+    return variants

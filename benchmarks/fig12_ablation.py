@@ -1,0 +1,39 @@
+"""Fig. 12: ablations — Local-only, Floe^-P (no task clustering, M=1),
+Floe^-R (no router: uniform gates), full Floe — per downstream task."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.data.tasks import make_dataset
+
+
+def run():
+    sys = C.get_system()
+    router = sys.sim_result.server.router()
+    tasks = sorted({c.task for c in sys.fleet})[:4]
+
+    def routed(p):
+        return router.gate_weights(p)
+
+    t0 = time.perf_counter()
+    table = {}
+    for task in tasks:
+        test = make_dataset(task, 32, seed=321)
+        table[(task, "Floe-P(fedavg)")] = C.fused_accuracy(
+            sys, test, slm_only=True, slm_which="fedavg")
+        table[(task, "Floe-R(uniform)")] = C.fused_accuracy(
+            sys, test, slm_only=True)          # uniform gates
+        table[(task, "Floe")] = C.fused_accuracy(
+            sys, test, slm_only=True, gates_fn=routed)
+    us = (time.perf_counter() - t0) * 1e6 / max(1, len(table))
+    for (task, variant), acc in table.items():
+        C.row(f"fig12/{task}/{variant}", us, f"acc={acc:.3f}")
+    floe = np.mean([table[(t, "Floe")] for t in tasks])
+    noP = np.mean([table[(t, "Floe-P(fedavg)")] for t in tasks])
+    noR = np.mean([table[(t, "Floe-R(uniform)")] for t in tasks])
+    C.row("fig12/mean", 0,
+          f"floe={floe:.3f} -P={noP:.3f} -R={noR:.3f}")
+    return table

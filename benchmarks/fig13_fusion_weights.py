@@ -1,0 +1,37 @@
+"""Fig. 13: distribution of dynamic fusion weights w across tokens —
+validates the Specialization Hypothesis (skew towards w > 0.5 on
+domain tokens the SLM was specialized for)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import fusion as FUS
+from repro.core import lora as LORA
+from repro.data import pipeline as PIPE
+from repro.data.tasks import TASKS, make_mixed_dataset
+
+
+def run():
+    sys = C.get_system()
+    ds = make_mixed_dataset(list(TASKS), 48, seed=999)
+    b = PIPE.make_batch(ds, sys.seq_len)
+    toks = jnp.asarray(b["tokens"])
+    bank = sys.sim_result.server.expert_bank()
+    e = len(sys.sim_result.server.state.experts)
+    sl, _ = sys.slm.train_logits(sys.slm_params, {"tokens": toks},
+                                 lora=LORA.bank_for_model(bank),
+                                 gates=jnp.ones((1, e)) / e)
+    ll = C.llm_logits(sys, toks)
+    B, S, V = sl.shape
+    mask = np.asarray(b["mask"]).reshape(-1) > 0
+    _, w = FUS.fused_distribution(sys.mlp, sl.reshape(B * S, V),
+                                  ll.reshape(B * S, V))
+    w = np.asarray(w)[mask]
+    hist, _ = np.histogram(w, bins=5, range=(0, 1))
+    C.row("fig13/w_mean", 0, f"{w.mean():.3f}")
+    C.row("fig13/w_std", 0, f"{w.std():.3f}")
+    C.row("fig13/hist[0,.2,.4,.6,.8,1]", 0, hist.tolist())
+    C.row("fig13/frac_w_gt_0.5", 0, f"{(w > 0.5).mean():.3f}")
+    return w

@@ -1,0 +1,60 @@
+"""Fig. 14: sensitivity to the number of LoRA experts — accuracy on the
+mixed-task stream as the expert pool grows (1, 2, 4, all)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import lora as LORA
+from repro.core.router import ExpertMeta, Router, expert_embedding
+from repro.data.tasks import TASKS, make_mixed_dataset
+
+
+def run():
+    sys = C.get_system()
+    experts = sys.sim_result.server.state.experts
+    tasks = sys.sim_result.server.state.expert_tasks
+    test = make_mixed_dataset(list(TASKS), 64, seed=4321)
+    t0 = time.perf_counter()
+    accs = {}
+    for n in range(1, len(experts) + 1):
+        bank = LORA.stack_adapters(experts[:n])
+        metas = [ExpertMeta(f"e{j}",
+                            expert_embedding(tasks[j] or ["generic"]), j)
+                 for j in range(n)]
+        router = Router(metas)
+
+        def gates_fn(p, r=router):
+            return r.gate_weights(p)
+
+        accs[n] = _acc(sys, test, bank, gates_fn)
+    us = (time.perf_counter() - t0) * 1e6 / len(accs)
+    for n, a in accs.items():
+        C.row(f"fig14/num_experts={n}", us, f"acc={a:.3f}")
+    ns = sorted(accs)
+    C.row("fig14/monotone_trend", 0, accs[ns[-1]] >= accs[ns[0]] - 0.02)
+    return accs
+
+
+def _acc(sys, test, bank, gates_fn):
+    import jax
+    import jax.numpy as jnp
+    from repro.data import pipeline as PIPE
+    hits = total = 0
+    for i in range(0, len(test), 8):
+        chunk = test[i:i + 8]
+        b = PIPE.make_batch(chunk, sys.seq_len)
+        g = jnp.asarray(np.stack([gates_fn(ex.prompt) for ex in chunk]))
+        logits, _ = sys.slm.train_logits(
+            sys.slm_params, {"tokens": jnp.asarray(b["tokens"])},
+            lora=LORA.bank_for_model(bank), gates=g)
+        pred = np.asarray(jnp.argmax(logits, -1))
+        m = b["mask"] > 0
+        for j in range(pred.shape[0]):
+            if m[j].sum() == 0:
+                continue
+            total += int(m[j].sum())
+            hits += int((pred[j][m[j]] == b["targets"][j][m[j]]).sum())
+    return hits / max(1, total)

@@ -1,0 +1,27 @@
+"""Fig. 16: end-to-end token latency vs network RTT — the masked
+(RTT<~100ms) and bounded (fallback-capped) regimes of Sec. IV-D."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.serving.latency import LatencyModel
+
+
+def run():
+    rows = {}
+    for rtt in (0, 25, 50, 75, 100, 150, 200, 300, 400, 500):
+        lat = LatencyModel(rtt_ms=rtt, jitter_ms=3.0, seed=1)
+        samples = [lat.token_latency_ms(200.0) for _ in range(500)]
+        ms = np.asarray([s[0] for s in samples])
+        cloud = np.asarray([s[1] for s in samples])
+        rows[rtt] = (ms.mean(), ms.max(), 1 - cloud.mean())
+        C.row(f"fig16/rtt={rtt}ms", ms.mean() * 1e3,
+              f"mean={ms.mean():.1f}ms p100={ms.max():.1f}ms "
+              f"fallback={1-cloud.mean():.2f}")
+    # masked region flat at edge latency; bounded region capped at timeout
+    assert abs(rows[0][0] - 65.0) < 2.0
+    assert rows[500][1] <= 200.0 + 1e-6
+    C.row("fig16/masked_region_flat", 0, f"{rows[0][0]:.1f}==65ms")
+    C.row("fig16/bounded_by_timeout", 0, f"max={rows[500][1]:.1f}<=200ms")
+    return rows

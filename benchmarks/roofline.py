@@ -1,0 +1,57 @@
+"""Roofline report: reads experiments/rooflines.jsonl (written by
+launch/dryrun.py) and prints the per-(arch x shape x mesh) table used in
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common as C
+
+PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "rooflines.jsonl")
+
+
+def load(path: str = PATH, tag=None):
+    if not os.path.exists(path):
+        return []
+    rows = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if tag is None or r.get("tag") == tag:
+                rows.append(r)
+    # last row wins per (arch, shape, mesh, tag)
+    dedup = {}
+    for r in rows:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("tag"))] = r
+    return list(dedup.values())
+
+
+def run():
+    rows = load()
+    if not rows:
+        C.row("roofline/missing", 0,
+              "run: python -m repro.launch.dryrun --all --out "
+              "experiments/rooflines.jsonl")
+        return []
+    done = [r for r in rows if "t_compute_s" in r]
+    skipped = [r for r in rows if r.get("skipped")]
+    failed = [r for r in rows if r.get("error")]
+    for r in sorted(done, key=lambda x: (x["arch"], x["shape"])):
+        C.row(f"roofline/{r['arch']}/{r['shape']}@{r['mesh']}",
+              r.get("compile_s", 0) * 1e6,
+              f"tc={r['t_compute_s']*1e3:.2f}ms "
+              f"tm={r['t_memory_s']*1e3:.2f}ms "
+              f"tcoll={r['t_collective_s']*1e3:.2f}ms "
+              f"dom={r['dominant']} useful={r.get('useful_ratio', 0):.3f}")
+    for r in skipped:
+        C.row(f"roofline/{r['arch']}/{r['shape']}", 0,
+              f"SKIP:{r['skipped'][:50]}")
+    for r in failed:
+        C.row(f"roofline/{r['arch']}/{r['shape']}", 0,
+              f"ERROR:{r['error'][:60]}")
+    C.row("roofline/summary", 0,
+          f"ok={len(done)} skipped={len(skipped)} failed={len(failed)}")
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  CPU-scale: model-accuracy
+benchmarks use the reduced config pair; hardware-scale numbers come from
+the dry-run roofline table (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+MODULES = [
+    "benchmarks.privacy_f1",
+    "benchmarks.fig16_rtt",
+    "benchmarks.fig11_membudget",
+    "benchmarks.fig10_efficiency",
+    "benchmarks.table3_methods",
+    "benchmarks.table4_hybrid",
+    "benchmarks.table5_pairs",
+    "benchmarks.fig12_ablation",
+    "benchmarks.fig13_fusion_weights",
+    "benchmarks.fig14_experts",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    t0 = time.perf_counter()
+    failures = []
+    for name in MODULES:
+        if only and only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod = __import__(name, fromlist=["run"])
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"# total_seconds,{time.perf_counter()-t0:.1f}")
+    if failures:
+        print(f"# FAILURES: {failures}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

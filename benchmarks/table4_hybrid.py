@@ -1,0 +1,38 @@
+"""Table IV: hybrid (LLM+specialized SLM) vs standalone models, per domain."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.data.tasks import make_dataset
+
+
+DOMAINS = ["arithmetic", "translation", "sentiment"]   # Table IV's 3 columns
+
+
+def run():
+    sys = C.get_system()
+    router = sys.sim_result.server.router()
+
+    def routed(prompt):
+        return router.gate_weights(prompt)
+
+    out = {}
+    t0 = time.perf_counter()
+    for dom in DOMAINS:
+        test = make_dataset(dom, 48, seed=77)
+        out[(dom, "LLM-only")] = C.fused_accuracy(sys, test, llm_only=True)
+        out[(dom, "SLM-only")] = C.fused_accuracy(sys, test, slm_only=True,
+                                                  gates_fn=routed)
+        out[(dom, "LLM+SLM")] = C.fused_accuracy(sys, test, gates_fn=routed)
+    us = (time.perf_counter() - t0) * 1e6 / len(out)
+    for (dom, method), acc in out.items():
+        C.row(f"table4/{dom}/{method}", us, f"acc={acc:.3f}")
+    # hybrid should match-or-beat the better standalone on average
+    import numpy as np
+    hyb = np.mean([out[(d, "LLM+SLM")] for d in DOMAINS])
+    best = np.mean([max(out[(d, "LLM-only")], out[(d, "SLM-only")])
+                    for d in DOMAINS])
+    C.row("table4/hybrid_vs_best_standalone", 0,
+          f"{hyb:.3f} vs {best:.3f}")
+    return out

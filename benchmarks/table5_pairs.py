@@ -1,0 +1,84 @@
+"""Table V: model-heterogeneity ablation — gain scales with local (SLM)
+capacity.  We vary the edge adapter rank (2 vs 16) as the capacity knob."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core import lora as LORA
+from repro.data import pipeline as PIPE
+from repro.data.tasks import TASKS, make_dataset, make_mixed_dataset
+from repro.training import optimizer as OPT
+from repro.training import train_step as TS
+
+
+def _tune_rank(sys, rank, steps=25, seed=5):
+    opt = OPT.adamw(OPT.constant_schedule(5e-3))
+    step = TS.make_lora_train_step(sys.slm, opt)
+    bank = LORA.single_expert_bank(
+        LORA.init_adapter(sys.slm, jax.random.key(seed), rank=rank))
+    ostate = opt.init({k: v for k, v in bank.items()
+                       if not k.startswith("_")})
+    ds = make_dataset("arithmetic", 128, seed=seed)
+    it = PIPE.batches(ds, 8, 40, seed=seed)
+    g = jnp.ones((1,))
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        bank, ostate, _ = step(sys.slm_params, bank, ostate, b, g, None)
+    return bank
+
+
+def run():
+    sys = C.get_system()
+    test = make_dataset("arithmetic", 48, seed=88)
+    llm_only = C.fused_accuracy(sys, test, llm_only=True)
+    t0 = time.perf_counter()
+    gains = {}
+    for rank in (2, 16):
+        bank = _tune_rank(sys, rank)
+        # swap the expert bank for this capacity probe
+        import benchmarks.common as CC
+        saved = sys.sim_result.server.state.experts
+        acc_solo = _acc(sys, test, bank)
+        acc_fused = _acc(sys, test, bank, fused=True)
+        gains[rank] = (acc_solo, acc_fused, acc_fused - llm_only)
+    us = (time.perf_counter() - t0) * 1e6 / 2
+    C.row("table5/LLM-only", us, f"acc={llm_only:.3f}")
+    for rank, (solo, fused, gain) in gains.items():
+        C.row(f"table5/rank{rank}", us,
+              f"slm={solo:.3f} floe={fused:.3f} gain={gain:+.3f}")
+    C.row("table5/gain_scales_with_capacity", 0,
+          gains[16][1] >= gains[2][1] - 0.02)
+    return gains
+
+
+def _acc(sys, test, bank, fused=False):
+    import numpy as np
+    import jax
+    from repro.core import fusion as FUS
+    hits = total = 0
+    g = jnp.ones((1, 1))
+    for i in range(0, len(test), 8):
+        b = PIPE.make_batch(test[i:i + 8], sys.seq_len)
+        toks = jnp.asarray(b["tokens"])
+        sl, _ = sys.slm.train_logits(sys.slm_params, {"tokens": toks},
+                                     lora=LORA.bank_for_model(bank), gates=g)
+        if fused:
+            ll = C.llm_logits(sys, toks)
+            B, S, V = sl.shape
+            p, _ = FUS.fused_distribution(sys.mlp, sl.reshape(B * S, V),
+                                          ll.reshape(B * S, V))
+            probs = p.reshape(B, S, V)
+        else:
+            probs = jax.nn.softmax(sl.astype(jnp.float32), -1)
+        pred = np.asarray(jnp.argmax(probs, -1))
+        m = b["mask"] > 0
+        for j in range(pred.shape[0]):
+            if m[j].sum() == 0:
+                continue
+            total += int(m[j].sum())
+            hits += int((pred[j][m[j]] == b["targets"][j][m[j]]).sum())
+    return hits / max(1, total)

@@ -1,0 +1,80 @@
+"""End-to-end driver: federated fine-tuning of a ~100M-class SLM across a
+heterogeneous edge fleet for a few hundred local steps total.
+
+Full Floe fine-tuning phase (paper Fig. 6): Dirichlet non-IID shards,
+Algorithm-1 rank selection per device per round, local LoRA training,
+optional DP, silhouette-clustered aggregation, router publication —
+then evaluates routed vs FedAvg accuracy per task.
+
+    PYTHONPATH=src python examples/federated_finetune.py [--rounds 2]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import lora as LORA
+from repro.data import pipeline as PIPE
+from repro.data.tasks import make_dataset
+from repro.federated.simulation import SimConfig, make_fleet, run_simulation
+from repro.models.model import LM
+from repro.training import checkpoint as CKPT
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--local-steps", type=int, default=20)
+    ap.add_argument("--dp-noise", type=float, default=0.0)
+    ap.add_argument("--async-mode", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/floe_experts.npz")
+    args = ap.parse_args()
+
+    # ~100M-class model: the reduced config scaled up a bit
+    cfg = get_config("floe-slm-2b").reduced()
+    lm = LM(cfg, remat=False)
+    params = lm.init(jax.random.key(0))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"SLM params: {n_params/1e6:.1f}M (reduced geometry)")
+
+    sim = SimConfig(
+        num_clients=args.clients, examples_per_client=72,
+        rounds=args.rounds, local_steps=args.local_steps,
+        seq_len=40, batch_size=6, alpha=0.05, lr=5e-3,
+        dp_clip=1.0 if args.dp_noise else None, dp_noise=args.dp_noise,
+        async_mode=args.async_mode, seed=7)
+    fleet = make_fleet(sim)
+    for c in fleet:
+        print(f"  client {c.cid}: {c.device.name} "
+              f"bg_load={c.background_load:.2f} task={c.task}")
+
+    res = run_simulation(lm, params, sim, fleet=fleet)
+    for i, h in enumerate(res.server.state.history):
+        print(f"round {i}: clients={h['clients']} clusters={h['clusters']} "
+              f"sil={h['silhouette']:.2f} mean_rank={h['mean_rank']:.0f} "
+              f"loss={h['mean_loss']:.3f} dropped={res.dropped_per_round[i]}")
+
+    bank = res.server.expert_bank()
+    router = res.server.router()
+    print(f"experts: {[e.name for e in router.experts]}")
+
+    # checkpoint the expert bank (servable artifact)
+    CKPT.save(args.ckpt, LORA.bank_for_model(bank))
+    print(f"expert bank saved to {args.ckpt}")
+
+    # evaluate routed accuracy on each client's dominant task
+    for task in sorted({c.task for c in fleet})[:4]:
+        test = make_dataset(task, 24, seed=99)
+        g = jnp.asarray(router.gate_weights(test[0].prompt))[None]
+        acc = PIPE.eval_accuracy(lm, params, test, 40, per_token=True,
+                                 lora=LORA.bank_for_model(bank), gates=g)
+        base = PIPE.eval_accuracy(lm, params, test, 40, per_token=True)
+        print(f"task {task:12s}: base={base:.2f} floe-routed={acc:.2f} "
+              f"(answer-token accuracy)")
+
+
+if __name__ == "__main__":
+    main()

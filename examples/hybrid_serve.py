@@ -1,0 +1,61 @@
+"""Hybrid LLM-SLM serving (paper inference phase, Fig. 8): privacy
+detector -> router -> parallel SLM/LLM decode -> logit fusion with the
+200 ms timeout fallback, over a batch of requests with varying network
+conditions.
+
+    PYTHONPATH=src python examples/hybrid_serve.py [--rtt-ms 50]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import fusion as FUS
+from repro.models.model import LM
+from repro.serving.engine import HybridEngine
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import Scheduler, summarize
+
+PROMPTS = [
+    "math: compute 12 plus 7 =",
+    "my ssn is 123-45-6789, fill the benefits form",       # private
+    "translate to french: water ->",
+    "my doctor said my blood pressure is 140 over 90",     # private
+    "sort ascending: 40 12 77 31 ->",
+    "remind me that my password is hunter2",               # private
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rtt-ms", type=float, default=50.0)
+    ap.add_argument("--timeout-ms", type=float, default=200.0)
+    ap.add_argument("--tokens", type=int, default=6)
+    args = ap.parse_args()
+
+    slm_cfg = get_config("floe-slm-2b").reduced()
+    llm_cfg = get_config("floe-llm-7b").reduced()
+    slm, llm = LM(slm_cfg, remat=False), LM(llm_cfg, remat=False)
+    sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
+    mlp = FUS.init_alignment(jax.random.key(2), slm_cfg.vocab_size)
+
+    for rtt in (args.rtt_ms, 400.0):
+        print(f"\n=== network RTT {rtt:.0f} ms ===")
+        eng = HybridEngine(slm, sp, llm, lp, mlp,
+                           latency=LatencyModel(rtt_ms=rtt, seed=3),
+                           timeout_ms=args.timeout_ms, max_seq=64)
+        sched = Scheduler(eng)
+        for p in PROMPTS:
+            sched.submit(p, max_new_tokens=args.tokens)
+        responses = sched.run()
+        for r in responses:
+            tag = "PRIVATE" if r.stats.private else (
+                "fallback" if r.stats.fallback_tokens else "cloud+edge")
+            print(f"[{r.rid}] {tag:9s} lat={r.stats.mean_latency_ms:6.1f}ms "
+                  f"cloud={r.stats.cloud_tokens}/{r.stats.tokens} "
+                  f"w~{sum(r.stats.fusion_w)/max(1,len(r.stats.fusion_w)):.2f}")
+        print(summarize(responses))
+
+
+if __name__ == "__main__":
+    main()

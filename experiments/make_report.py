@@ -1,0 +1,168 @@
+"""Fill EXPERIMENTS.md placeholders from experiments/*.jsonl."""
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path, tag=None):
+    rows = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if tag and r.get("tag") != tag:
+                continue
+            rows[(r.get("arch"), r.get("shape"), r.get("mesh"),
+                  r.get("absorb"), r.get("optimizer"))] = r
+    return list(rows.values())
+
+
+def fmt_ms(s):
+    return f"{s*1e3:,.1f}"
+
+
+def gb(x):
+    return f"{(x or 0)/1e9:.1f}"
+
+
+def baseline_table(rows):
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "dominant | MODEL/HLO | coll mix | args GB/dev | temp GB/dev |",
+           "|---|---|---:|---:|---:|---|---:|---|---:|---:|"]
+    skips = []
+    for r in sorted(rows, key=lambda x: (x.get("arch") or "",
+                                         x.get("shape") or "")):
+        if r.get("skipped"):
+            skips.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP (sub-quadratic rule) | — | — | — | — |")
+            continue
+        if "t_compute_s" not in r:
+            continue
+        mix = max(r.get("coll_by_type", {"-": 0}).items(),
+                  key=lambda kv: kv[1])[0] if r.get("coll_by_type") else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute_s'])} | "
+            f"{fmt_ms(r['t_memory_s'])} | {fmt_ms(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {r.get('useful_ratio', 0):.3f} | "
+            f"{mix} | {gb(r.get('argument_bytes'))} | "
+            f"{gb(r.get('per_device_bytes'))} |")
+    return "\n".join(out + skips)
+
+
+def multipod_table(rows):
+    out = ["| arch | shape | mesh | compile | args GB/dev | temp GB/dev |",
+           "|---|---|---|---:|---:|---:|"]
+    n_ok = n_skip = 0
+    for r in sorted(rows, key=lambda x: (x.get("arch") or "",
+                                         x.get("shape") or "")):
+        if r.get("skipped"):
+            n_skip += 1
+            continue
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | ERROR | — | — |")
+            continue
+        n_ok += 1
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                   f"{r.get('compile_s', 0):.1f}s | "
+                   f"{gb(r.get('argument_bytes'))} | "
+                   f"{gb(r.get('per_device_bytes'))} |")
+    out.append("")
+    out.append(f"**{n_ok} combinations lower + compile on the 2×16×16 "
+               f"mesh; {n_skip} sub-quadratic skips (same rule as "
+               f"single-pod).**")
+    return "\n".join(out)
+
+
+def memory_notes(rows):
+    notes = []
+    for r in rows:
+        if r.get("skipped") or "argument_bytes" not in r:
+            continue
+        args = (r.get("argument_bytes") or 0) / 1e9
+        temp = (r.get("per_device_bytes") or 0) / 1e9
+        if args + temp > 16.0:
+            notes.append(
+                f"- **{r['arch']} × {r['shape']}**: {args:.1f} GB args + "
+                f"{temp:.1f} GB temp per device exceeds the 16 GB v5e HBM "
+                f"on a single pod — needs the 512-chip multi-pod mesh "
+                f"and/or the optimizer/remat knobs (`--optimizer "
+                f"adafactor`, bf16 states).")
+    if not notes:
+        notes = ["- all (arch × shape) combinations fit within "
+                 "16 GB/device on the single-pod mesh."]
+    return "\n".join(notes)
+
+
+def _advice(r):
+    """One sentence on what would move the dominant term down."""
+    dom = r["dominant"]
+    shape = r["shape"]
+    decode = shape in ("decode_32k", "long_500k")
+    coll = r.get("coll_by_type", {})
+    top_coll = max(coll.items(), key=lambda kv: kv[1])[0] if coll else "-"
+    if dom == "collective":
+        if decode and top_coll == "all-gather":
+            return ("per-step FSDP weight all-gather dominates a 1-token "
+                    "step — switch to weight-stationary inference sharding "
+                    "(`--param-rules inference`) or widen the model axis "
+                    "(`--mesh 4x64`).")
+        if top_coll == "all-gather":
+            return ("per-layer activation/weight all-gather over the "
+                    "model axis — sequence-parallel residual sharding "
+                    "(`--act-policy seqpar`) removes the MLP-path gather.")
+        if top_coll == "all-to-all":
+            return ("expert-parallel all-to-all dispatch dominates — "
+                    "larger expert capacity chunks or fewer expert shards "
+                    "per device amortise it.")
+        return "rebalance the mesh so the largest collective shrinks."
+    if dom == "memory":
+        if decode:
+            return ("KV/latent cache reads dominate — window ring caches "
+                    "(`--ring-cache`), MLA latent caches, or KV "
+                    "quantisation cut resident bytes.")
+        return ("HBM-bound: raise arithmetic intensity via larger "
+                "per-device batch, fused kernels (flash attention), or "
+                "bf16 intermediates.")
+    return ("compute-bound — already at the MXU roofline; only lower-"
+            "precision matmuls or fewer FLOPs/token move this.")
+
+
+def analysis_section(rows):
+    out = []
+    for r in sorted(rows, key=lambda x: (x.get("arch") or "",
+                                         x.get("shape") or "")):
+        if r.get("skipped") or "t_compute_s" not in r:
+            continue
+        out.append(
+            f"- **{r['arch']} × {r['shape']}** — terms (s): "
+            f"compute {r['t_compute_s']:.4f} / memory "
+            f"{r['t_memory_s']:.4f} / collective "
+            f"{r['t_collective_s']:.4f}; **{r['dominant']}-bound**. "
+            f"MODEL_FLOPS={r['model_flops']:.3e}, "
+            f"HLO_FLOPs={r['hlo_flops']:.3e}, useful ratio "
+            f"{r.get('useful_ratio', 0):.3f}. {_advice(r)}")
+    return "\n".join(out)
+
+
+def main():
+    base = load(os.path.join(ROOT, "experiments", "rooflines.jsonl"),
+                tag="baseline")
+    multi = load(os.path.join(ROOT, "experiments",
+                              "rooflines_multipod.jsonl"))
+    md_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    md = open(md_path).read()
+    md = md.replace("<!-- ROOFLINE_TABLE -->", baseline_table(base))
+    md = md.replace("<!-- MULTIPOD_TABLE -->", multipod_table(multi))
+    md = md.replace("<!-- MEMORY_NOTES -->", memory_notes(base))
+    md = md.replace("<!-- ROOFLINE_ANALYSIS -->", analysis_section(base))
+    open(md_path, "w").write(md)
+    print(f"wrote tables: {len(base)} baseline rows, {len(multi)} "
+          f"multi-pod rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Config registry — importing this package registers all architectures."""
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    list_archs,
+    shape_applicable,
+)
+from repro.configs import (  # noqa: F401
+    llama3_405b,
+    qwen2_5_14b,
+    gemma3_1b,
+    whisper_small,
+    minitron_4b,
+    deepseek_v3_671b,
+    zamba2_7b,
+    falcon_mamba_7b,
+    phi3_vision_4_2b,
+    granite_moe_3b,
+    floe_pair,
+)
+
+ASSIGNED_ARCHS = (
+    "llama3-405b",
+    "qwen2.5-14b",
+    "gemma3-1b",
+    "whisper-small",
+    "minitron-4b",
+    "deepseek-v3-671b",
+    "zamba2-7b",
+    "falcon-mamba-7b",
+    "phi-3-vision-4.2b",
+    "granite-moe-3b-a800m",
+)

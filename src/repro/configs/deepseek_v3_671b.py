@@ -1,0 +1,35 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437] — MLA attention, 1 shared + 256
+routed experts (top-8), first 3 layers dense. d_ff=2048 is the per-expert
+hidden dim per the assignment; dense layers use 4*?  — the paper's dense
+FFN is 18432 wide."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("deepseek-v3-671b")
+def deepseek_v3_671b() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        source="arXiv:2412.19437",
+        num_layers=61,
+        d_model=7_168,
+        num_heads=128,
+        num_kv_heads=128,           # MLA: logical kv heads == heads
+        head_dim=128,
+        d_ff=18_432,                # dense layers (first_k_dense)
+        vocab_size=129_280,
+        attn_type="full",
+        rope_theta=10_000.0,
+        mlp_type="swiglu",
+        num_experts=256,
+        experts_per_token=8,
+        num_shared_experts=1,
+        moe_d_ff=2_048,
+        first_k_dense=3,
+        use_mla=True,
+        kv_lora_rank=512,
+        q_lora_rank=1_536,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+    )

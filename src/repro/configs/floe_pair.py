@@ -1,0 +1,68 @@
+"""The paper's own model pair (Sec. V-A2): a cloud "LLM" and an edge "SLM"
+in the Gemma-7B / Gemma-2B proportion, used by the Floe fusion serving
+dry-run and the end-to-end examples.  ``floe-llm-7b``/``floe-slm-2b`` are
+the full-size stand-ins; examples use their ``reduced()`` variants.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("floe-llm-7b")
+def floe_llm_7b() -> ModelConfig:
+    # Gemma-7B geometry [arXiv:2403.08295]
+    return ModelConfig(
+        name="floe-llm-7b",
+        family="dense",
+        source="arXiv:2403.08295 (Gemma-7B)",
+        num_layers=28,
+        d_model=3_072,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=256,
+        d_ff=24_576,
+        vocab_size=256_000,
+        attn_type="full",
+        mlp_type="geglu",
+        tie_embeddings=True,
+        embed_scale=True,
+    )
+
+
+@register("floe-slm-tiny")
+def floe_slm_tiny() -> ModelConfig:
+    # TinyLlama-1.1B geometry [arXiv:2401.02385] — the paper's edge SLM
+    # for the GPT-4-Turbo pairing (Sec. V-A2)
+    return ModelConfig(
+        name="floe-slm-tiny",
+        family="dense",
+        source="arXiv:2401.02385 (TinyLlama-1.1B)",
+        num_layers=22,
+        d_model=2_048,
+        num_heads=32,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=5_632,
+        vocab_size=32_000,
+        attn_type="full",
+        mlp_type="swiglu",
+    )
+
+
+@register("floe-slm-2b")
+def floe_slm_2b() -> ModelConfig:
+    # Gemma-2B geometry [arXiv:2403.08295]
+    return ModelConfig(
+        name="floe-slm-2b",
+        family="dense",
+        source="arXiv:2403.08295 (Gemma-2B)",
+        num_layers=18,
+        d_model=2_048,
+        num_heads=8,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=16_384,
+        vocab_size=256_000,
+        attn_type="full",
+        mlp_type="geglu",
+        tie_embeddings=True,
+        embed_scale=True,
+    )

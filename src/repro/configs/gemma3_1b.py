@@ -1,0 +1,28 @@
+"""Gemma-3 1B [hf:google/gemma-3-1b-pt] — 5:1 local:global sliding window,
+262k vocab, head_dim 256, single KV head, tied embeddings."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("gemma3-1b")
+def gemma3_1b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b",
+        family="dense",
+        source="hf:google/gemma-3-1b-pt",
+        num_layers=26,
+        d_model=1_152,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=6_912,
+        vocab_size=262_144,
+        attn_type="mixed",          # 5 sliding : 1 global
+        sliding_window=512,
+        global_every=6,
+        rope_theta=10_000.0,
+        rope_theta_global=1_000_000.0,
+        use_qk_norm=True,
+        mlp_type="geglu",
+        tie_embeddings=True,
+        embed_scale=True,
+    )

@@ -1,0 +1,21 @@
+"""Llama-3 405B [arXiv:2407.21783] — dense GQA, 128k vocab."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llama3-405b")
+def llama3_405b() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b",
+        family="dense",
+        source="arXiv:2407.21783",
+        num_layers=126,
+        d_model=16_384,
+        num_heads=128,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=53_248,
+        vocab_size=128_256,
+        attn_type="full",
+        rope_theta=500_000.0,
+        mlp_type="swiglu",
+    )

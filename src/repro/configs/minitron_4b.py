@@ -1,0 +1,21 @@
+"""Minitron-4B [arXiv:2407.14679] — pruned Nemotron, dense GQA, 256k vocab."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("minitron-4b")
+def minitron_4b() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-4b",
+        family="dense",
+        source="arXiv:2407.14679",
+        num_layers=32,
+        d_model=3_072,
+        num_heads=24,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=9_216,
+        vocab_size=256_000,
+        attn_type="full",
+        rope_theta=10_000.0,
+        mlp_type="swiglu",
+    )

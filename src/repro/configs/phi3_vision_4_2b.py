@@ -1,0 +1,25 @@
+"""Phi-3-Vision 4.2B [hf:microsoft/Phi-3-vision-128k-instruct] — phi3-mini
+text backbone; CLIP ViT-L/14-336 vision encoder is a stub: input_specs
+provides 576 precomputed patch embeddings."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("phi-3-vision-4.2b")
+def phi3_vision() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b",
+        family="vlm",
+        source="hf:microsoft/Phi-3-vision-128k-instruct",
+        num_layers=32,
+        d_model=3_072,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=96,
+        d_ff=8_192,
+        vocab_size=32_064,
+        attn_type="full",
+        rope_theta=10_000.0,
+        mlp_type="swiglu",
+        frontend="vision_stub",
+        num_patches=576,
+    )

@@ -1,0 +1,22 @@
+"""Qwen2.5-14B [hf:Qwen/Qwen2.5-0.5B family] — dense GQA with QKV bias."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen2.5-14b")
+def qwen2_5_14b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-14b",
+        family="dense",
+        source="hf:Qwen/Qwen2.5-0.5B (family card)",
+        num_layers=48,
+        d_model=5_120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=13_824,
+        vocab_size=152_064,
+        attn_type="full",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        mlp_type="swiglu",
+    )

@@ -1,0 +1,27 @@
+"""Whisper-small [arXiv:2212.04356] — encoder-decoder; conv/mel frontend is a
+stub per the brief: input_specs provides precomputed frame embeddings."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-small")
+def whisper_small() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        family="audio",
+        source="arXiv:2212.04356",
+        num_layers=12,              # decoder layers
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        head_dim=64,
+        d_ff=3_072,
+        vocab_size=51_865,
+        attn_type="full",
+        mlp_type="gelu",
+        norm_type="layernorm",
+        is_encoder_decoder=True,
+        encoder_layers=12,
+        encoder_seq=1_500,
+        frontend="audio_stub",
+        tie_embeddings=True,
+    )

@@ -1,0 +1,11 @@
+"""Floe core: the paper's contribution as composable JAX modules.
+
+  lora        — heterogeneous-rank multi-expert LoRA banks (Sec. III-B)
+  rank_select — Algorithm 1 heterogeneity-aware rank selection
+  embedding   — deterministic Γ sentence encoder (BGE stand-in)
+  router      — parameter-free prompt-wise MoE router (Eq. 8-11)
+  aggregator  — task-clustered LoRA aggregation (Eq. 3-5, silhouette-M)
+  fusion      — logit-level LLM-SLM alignment (Eq. 12-15) + fallback
+  privacy     — two-stage privacy detector (Algorithm 2)
+  dp          — configurable local DP (DP-SGD clip+noise)
+"""

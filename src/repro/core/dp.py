@@ -1,0 +1,50 @@
+"""Configurable local differential privacy (paper Sec. III-B, DP-SGD).
+
+g̃ = clip(g, C) + N(0, σ²C²I) — standard DP-SGD [67].  Applied to the
+client's LoRA update before upload.  A simple moments-style accountant
+approximation is provided for budget reporting.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, clip: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), n
+
+
+def privatize(tree, key, clip: float, noise_multiplier: float):
+    """Clip to C and add N(0, (σC)² I) — returns (noised_tree, pre_clip_norm)."""
+    clipped, n = clip_by_global_norm(tree, clip)
+    leaves, treedef = jax.tree.flatten(clipped)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    std = noise_multiplier * clip
+    noised = [
+        (x.astype(jnp.float32)
+         + std * jax.random.normal(k, x.shape, jnp.float32)).astype(x.dtype)
+        for x, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noised), n
+
+
+def epsilon_estimate(noise_multiplier: float, steps: int,
+                     sampling_rate: float = 1.0,
+                     delta: float = 1e-5) -> float:
+    """Strong-composition style estimate (reporting only, not a proof):
+    ε ≈ q·sqrt(2·T·ln(1/δ)) / σ."""
+    if noise_multiplier <= 0:
+        return math.inf
+    return sampling_rate * math.sqrt(2.0 * steps * math.log(1.0 / delta)) \
+        / noise_multiplier

@@ -1,0 +1,127 @@
+"""Multi-expert LoRA adapter banks (paper Sec. III-B, Eq. 1-2, Eq. 8).
+
+An *adapter* is one client's LoRA module φ_i: per layer-stack, per target
+projection, matrices A (r_max × d_in, Kaiming-init) and B (d_out × r_max,
+zero-init).  Ranks below ``r_max`` are realised by a rank mask — the
+compression operator Q_r of Theorem 1 — so every client has identical
+(static) shapes and pjit never re-specialises.
+
+A *bank* stacks E adapters along a new expert axis; the model consumes
+banks directly (layers.lora_delta computes Σ_j ω_j B_j A_j x).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+def rank_mask(ranks: Sequence[int], r_max: int) -> jax.Array:
+    """(E, r_max) 0/1 mask — expert j uses only its first ranks[j] ranks."""
+    e = len(ranks)
+    m = np.zeros((e, r_max), np.float32)
+    for j, r in enumerate(ranks):
+        m[j, : int(r)] = 1.0
+    return jnp.asarray(m)
+
+
+def init_adapter(model, key, rank: int, r_max: Optional[int] = None,
+                 dtype=jnp.float32) -> Dict[str, Any]:
+    """One client's LoRA module (no expert axis).  B zero-init => ΔW=0."""
+    r_max = r_max or model.cfg.lora_rank_max
+    layout = model.lora_layout()
+    out: Dict[str, Any] = {"_rank": jnp.asarray(rank, jnp.int32)}
+    keys = jax.random.split(key, max(1, len(layout)))
+    for (stack, (dims, targets)), sk in zip(sorted(layout.items()), keys):
+        tks = jax.random.split(sk, max(1, len(targets)))
+        st = {}
+        for (tgt, (din, dout)), tk in zip(sorted(targets.items()), tks):
+            a = jax.random.normal(tk, dims + (r_max, din), jnp.float32)
+            a = a * math.sqrt(2.0 / din)              # Kaiming-uniform-ish
+            mask = (jnp.arange(r_max) < rank).astype(jnp.float32)
+            a = a * mask[:, None]
+            st[tgt] = {"A": a.astype(dtype),
+                       "B": jnp.zeros(dims + (dout, r_max), dtype)}
+        out[stack] = st
+    return out
+
+
+def stack_adapters(adapters: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """E adapters -> bank with expert axis inserted after the stack dims.
+
+    A: (*dims, r, din) -> (*dims, E, r, din);  B likewise."""
+    def merge(*leaves):
+        return jnp.stack(leaves, axis=leaves[0].ndim - 2)
+    ranks = jnp.stack([a["_rank"] for a in adapters])
+    bodies = [{k: v for k, v in a.items() if k != "_rank"} for a in adapters]
+    bank = jax.tree.map(merge, *bodies)
+    bank["_ranks"] = ranks
+    return bank
+
+
+def bank_for_model(bank: Dict[str, Any]) -> Dict[str, Any]:
+    """Strip metadata -> the tree the model's ``lora=`` argument expects."""
+    return {k: v for k, v in bank.items() if not k.startswith("_")}
+
+
+def adapter_of(bank: Dict[str, Any], j: int) -> Dict[str, Any]:
+    """Extract expert j back out of a bank (expert axis removed)."""
+    def take(t):
+        return t[(slice(None),) * (t.ndim - 3) + (j,)]
+    out = jax.tree.map(take, bank_for_model(bank))
+    out["_rank"] = bank["_ranks"][j]
+    return out
+
+
+def single_expert_bank(adapter: Dict[str, Any]) -> Dict[str, Any]:
+    """Wrap one adapter as an E=1 bank (for local client training)."""
+    return stack_adapters([adapter])
+
+
+def adapter_vector(adapter: Dict[str, Any], dim: int = 64,
+                   seed: int = 0) -> np.ndarray:
+    """Fixed random projection of the flattened adapter -> R^dim.
+
+    Part of the domain-conditioned encoder E(φ) (Sec. III-C): captures the
+    *fine-tuning dynamics* component; aggregator.py concatenates it with
+    the task-data embedding (the *adaptation semantics* component)."""
+    leaves = [np.asarray(x, np.float32).ravel()
+              for x in jax.tree.leaves(
+                  {k: v for k, v in adapter.items() if k != "_rank"})]
+    flat = np.concatenate(leaves) if leaves else np.zeros(1, np.float32)
+    rng = np.random.RandomState(seed)
+    # chunked projection to keep memory bounded
+    out = np.zeros(dim, np.float32)
+    chunk = 1 << 16
+    for i in range(0, flat.size, chunk):
+        seg = flat[i:i + chunk]
+        proj = rng.standard_normal((seg.size, dim)).astype(np.float32)
+        out += seg @ proj
+    n = np.linalg.norm(out)
+    return out / n if n > 0 else out
+
+
+def average_adapters(adapters: List[Dict[str, Any]],
+                     weights: Optional[Sequence[float]] = None
+                     ) -> Dict[str, Any]:
+    """Eq. 4 (uniform) / Eq. 5 (weighted) parameter averaging."""
+    if weights is None:
+        weights = [1.0 / len(adapters)] * len(adapters)
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    bodies = [{k: v for k, v in a.items() if k != "_rank"} for a in adapters]
+    avg = jax.tree.map(
+        lambda *xs: sum(float(wi) * x for wi, x in zip(w, xs)), *bodies)
+    avg["_rank"] = jnp.asarray(
+        int(max(int(a["_rank"]) for a in adapters)), jnp.int32)
+    return avg
+
+
+def count_params(adapter: Dict[str, Any]) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(
+        {k: v for k, v in adapter.items() if k != "_rank"}))

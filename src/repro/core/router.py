@@ -1,0 +1,77 @@
+"""Prompt-wise parameter-free MoE router — paper Sec. IV-B, Eq. 8-11.
+
+No trainable gate: expert LoRA modules carry a pre-computed domain
+embedding Γ(φ) (Eq. 9, averaged from k non-private representative
+samples); at inference the router embeds the prompt, takes cosine
+similarities (Eq. 10) and a softmax (Eq. 11) to produce gate weights ω
+that the model's merged-LoRA delta consumes (Eq. 8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import embedding as E
+
+
+@dataclass
+class ExpertMeta:
+    """A router-visible expert: aggregated LoRA cluster + domain embedding."""
+    name: str
+    embedding: np.ndarray            # Γ(φ), Eq. 9 — no private data inside
+    bank_index: int                  # position in the stacked LoRA bank
+
+
+def expert_embedding(representative_samples: Sequence[str]) -> np.ndarray:
+    """Eq. 9: Γ(φ) = mean of embeddings of k server-held public samples."""
+    return E.centroid(representative_samples)
+
+
+class Router:
+    def __init__(self, experts: List[ExpertMeta], temperature: float = 0.1):
+        assert experts, "router needs at least one expert"
+        self.experts = experts
+        self.embs = np.stack([e.embedding for e in experts])
+        self.temperature = temperature
+
+    def gate_weights(self, prompt: str) -> np.ndarray:
+        """ω = softmax(cos(Γ(x), Γ(φ_j)) / T)  — Eq. 10-11.  Returns (E,)
+        ordered by bank_index."""
+        g = E.embed_text(prompt)
+        sims = self.embs @ g                         # embeddings unit-norm
+        z = sims / self.temperature
+        z = z - z.max()
+        w = np.exp(z)
+        w = w / w.sum()
+        out = np.zeros(len(self.experts), np.float32)
+        for e, wi in zip(self.experts, w):
+            out[e.bank_index] = wi
+        return out
+
+    def gate_weights_batch(self, prompts: Sequence[str]) -> np.ndarray:
+        return np.stack([self.gate_weights(p) for p in prompts])
+
+    def top1(self, prompt: str) -> ExpertMeta:
+        g = E.embed_text(prompt)
+        return self.experts[int(np.argmax(self.embs @ g))]
+
+    # ------------------------------------------------------------- admin
+    def add_expert(self, meta: ExpertMeta) -> None:
+        """Plug-and-play expert addition (Sec. IV-B advantage 3) — no
+        retraining of the routing mechanism."""
+        self.experts.append(meta)
+        self.embs = np.stack([e.embedding for e in self.experts])
+
+    def remove_expert(self, name: str) -> None:
+        self.experts = [e for e in self.experts if e.name != name]
+        self.embs = np.stack([e.embedding for e in self.experts])
+
+
+def routing_alignment_accuracy(router: Router,
+                               labeled_prompts: Sequence[tuple]) -> float:
+    """Sec. V-E 'routing alignment accuracy': Top-1 expert vs true domain."""
+    hits = sum(1 for text, domain in labeled_prompts
+               if router.top1(text).name == domain)
+    return hits / max(1, len(labeled_prompts))

@@ -1,0 +1,2 @@
+"""Data substrate: byte tokenizer, synthetic multi-task suite, non-IID
+partitioning, batching pipeline."""

@@ -1,0 +1,38 @@
+"""Byte-level tokenizer (no external vocab files on this box).
+
+IDs: 0=pad, 1=bos, 2=eos, 3..258 = bytes.  Models with larger vocabs
+simply never emit the higher ids during CPU experiments; the full vocab
+sizes matter for the dry-run shapes only.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+BYTE_OFFSET = 3
+VOCAB = 256 + BYTE_OFFSET
+
+
+def encode(text: str, bos: bool = True, eos: bool = False) -> List[int]:
+    ids = [b + BYTE_OFFSET for b in text.encode("utf-8")]
+    if bos:
+        ids = [BOS] + ids
+    if eos:
+        ids = ids + [EOS]
+    return ids
+
+
+def decode(ids: Sequence[int]) -> str:
+    bs = bytes(i - BYTE_OFFSET for i in ids
+               if i >= BYTE_OFFSET and i < VOCAB)
+    return bs.decode("utf-8", errors="replace")
+
+
+def pad_batch(seqs: Sequence[Sequence[int]], length: int) -> np.ndarray:
+    out = np.full((len(seqs), length), PAD, np.int32)
+    for i, s in enumerate(seqs):
+        s = list(s)[:length]
+        out[i, : len(s)] = s
+    return out

@@ -1,0 +1,1 @@
+"""Federated fine-tuning runtime (paper Sec. III): clients, server, sim."""

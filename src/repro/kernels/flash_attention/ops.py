@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On CPU (this container) ``interpret=True`` executes the kernel body with
+the Pallas interpreter for correctness; on TPU the same call lowers to a
+Mosaic kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def mha(q, k, v, causal: bool = True, window: int = 0,
+        block_q: int = 128, block_k: int = 128):
+    """Flash attention with layout (B, S, H, D) (model-native layout)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k,
+                          interpret=_on_cpu())
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,S,D); k/v: (B,KVH,S,D) -> (B,H,S,D).  Naive softmax."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

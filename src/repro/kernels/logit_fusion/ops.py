@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the fused logit-fusion kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.logit_fusion.kernel import fuse_logits
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def fused_probs(slm_logits, llm_logits, w, block_b: int = 4):
+    return fuse_logits(slm_logits, llm_logits, w, block_b=block_b,
+                       interpret=_on_cpu())

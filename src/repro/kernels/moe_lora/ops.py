@@ -1,0 +1,28 @@
+"""Jit'd wrapper: merged multi-LoRA apply y = Wx + Δ (kernel for Δ)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_lora.kernel import moe_lora_delta
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_t",))
+def lora_apply(x, w, a, b, gates, block_t: int = 128):
+    """x: (..., k); w: (k, n); a: (E,r,k); b: (E,n,r); gates: (..., E)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xf = x.reshape(-1, k)
+    gf = gates.reshape(-1, gates.shape[-1]).astype(x.dtype)
+    if gf.shape[0] == 1 and xf.shape[0] > 1:
+        gf = jnp.broadcast_to(gf, (xf.shape[0], gf.shape[1]))
+    base = xf @ w
+    delta = moe_lora_delta(xf, a, b, gf, block_t=block_t,
+                           interpret=_on_cpu())
+    return (base + delta.astype(base.dtype)).reshape(*lead, w.shape[1])

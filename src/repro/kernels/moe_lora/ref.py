@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the merged multi-LoRA delta (Eq. 8)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_lora_delta_ref(x, a, b, gates):
+    """x: (T,k); a: (E,r,k); b: (E,n,r); gates: (T,E) -> (T,n)."""
+    u = jnp.einsum("tk,erk->ter", x.astype(jnp.float32),
+                   a.astype(jnp.float32))
+    u = u * gates.astype(jnp.float32)[:, :, None]
+    return jnp.einsum("ter,enr->tn", u, b.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,85 @@
+"""Mamba-1 selective-scan Pallas kernel (chunked recurrence).
+
+Grid: (batch, d_inner_blocks, seq_chunks) — chunks innermost; the SSM
+state h (bd × N) persists in VMEM scratch across chunk steps.  Inside a
+chunk the recurrence h_t = exp(dt_t·A)·h_{t-1} + (dt_t·x_t)·B_t runs as a
+``fori_loop`` over the chunk rows (VPU element-wise work; N ≤ 64 keeps
+the state block tiny), emitting y_t = Σ_N C_t ⊙ h_t per row.
+
+This is the TPU adaptation of the paper-adjacent CUDA selective-scan:
+HBM→VMEM chunk staging replaces shared-memory tiles, and the sequential
+grid axis replaces the CUDA block-level scan (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, h_ref,
+                *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)                 # (bd, N)
+
+    def step(t, h):
+        dt = dt_ref[0, t, :].astype(jnp.float32)       # (bd,)
+        x = x_ref[0, t, :].astype(jnp.float32)         # (bd,)
+        bm = b_ref[0, t, :].astype(jnp.float32)        # (N,)
+        cm = c_ref[0, t, :].astype(jnp.float32)        # (N,)
+        da = jnp.exp(dt[:, None] * a)                  # (bd, N)
+        h = da * h + (dt * x)[:, None] * bm[None, :]
+        y_ref[0, t, :] = (h * cm[None, :]).sum(-1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssm_scan(dt, x, bm, cm, a, *, chunk: int = 64, block_d: int = 256,
+             interpret: bool = False):
+    """Selective scan.  dt/x: (B,S,di); bm/cm: (B,S,N); a: (di,N).
+
+    Returns (y (B,S,di), h_final (B,di,N))."""
+    b, s, di = x.shape
+    n = bm.shape[-1]
+    c = min(chunk, s)
+    bd = min(block_d, di)
+    assert s % c == 0 and di % bd == 0, (s, c, di, bd)
+    nc = s // c
+
+    kernel = functools.partial(_ssm_kernel, chunk=c, nc=nc)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(b, di // bd, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, bd), lambda bi, d_, ci: (bi, ci, d_)),  # dt
+            pl.BlockSpec((1, c, bd), lambda bi, d_, ci: (bi, ci, d_)),  # x
+            pl.BlockSpec((1, c, n), lambda bi, d_, ci: (bi, ci, 0)),    # B
+            pl.BlockSpec((1, c, n), lambda bi, d_, ci: (bi, ci, 0)),    # C
+            pl.BlockSpec((bd, n), lambda bi, d_, ci: (d_, 0)),          # A
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, bd), lambda bi, d_, ci: (bi, ci, d_)),  # y
+            pl.BlockSpec((1, bd, n), lambda bi, d_, ci: (bi, d_, 0)),   # h
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, di), x.dtype),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, bm, cm, a)
+    return y, h

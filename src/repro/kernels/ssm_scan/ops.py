@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the mamba-1 selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_d"))
+def selective_scan(dt, x, bm, cm, a, chunk: int = 64, block_d: int = 256):
+    return ssm_scan(dt, x, bm, cm, a, chunk=chunk, block_d=block_d,
+                    interpret=_on_cpu())

@@ -1,0 +1,27 @@
+"""Pure-jnp sequential oracle for the mamba-1 selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, x, bm, cm, a):
+    """dt/x: (B,S,di); bm/cm: (B,S,N); a: (di,N) ->
+    (y (B,S,di), h (B,di,N)).  Step-by-step lax.scan recurrence."""
+    b, s, di = x.shape
+    n = bm.shape[-1]
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp                     # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a[None])       # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = (h * c_t[:, None, :]).sum(-1)             # (B,di)
+        return h, y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = (dt.swapaxes(0, 1).astype(jnp.float32),
+          x.swapaxes(0, 1).astype(jnp.float32),
+          bm.swapaxes(0, 1).astype(jnp.float32),
+          cm.swapaxes(0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), h

@@ -1,0 +1,184 @@
+"""Roofline analysis from compiled dry-run artifacts (spec §ROOFLINE).
+
+  compute term    = HLO_FLOPs / (chips · 197 TF/s)
+  memory term     = HLO_bytes / (chips · 819 GB/s)
+  collective term = collective_bytes / (chips · 50 GB/s)
+
+cost_analysis() supplies FLOPs/bytes; collective bytes are parsed from
+the optimized HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute operand sizes).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64)"
+    r"\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op, by type."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt = m.group(1) or m.group(2)
+        op = m.group(3)
+        out[op] = out.get(op, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    coll_by_type: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0
+    per_device_bytes: Optional[float] = None
+    argument_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "coll_by_type": self.coll_by_type,
+            "per_device_bytes": self.per_device_bytes,
+            "argument_bytes": self.argument_bytes,
+        }
+
+
+def model_flops_estimate(cfg, tokens: int, kind: str,
+                         context: int = 0) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference fwd), N = active
+    params; decode adds attention-over-cache FLOPs."""
+    n_active = active_params(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    f = mult * n_active * tokens
+    if kind == "decode" and cfg.num_heads and context:
+        # one token attending to `context` cached positions
+        if cfg.use_mla:
+            att = 2 * cfg.num_heads * (cfg.kv_lora_rank + cfg.qk_rope_dim) \
+                * context * 2
+        else:
+            att = 2 * cfg.num_heads * cfg.head_dim * context * 2
+        win = cfg.sliding_window if cfg.attn_type in ("sliding", "mixed") \
+            else context
+        f += tokens * att * min(context, win) / max(context, 1)
+    if kind == "prefill" and cfg.num_heads and context:
+        f += 2.0 * 2 * cfg.num_heads * cfg.head_dim * tokens * context / 2
+    return f
+
+
+def active_params(cfg) -> int:
+    d, l, v = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    per_layer = 0.0
+    if cfg.num_heads:
+        if cfg.use_mla:
+            per_layer += d * (cfg.q_lora_rank + cfg.kv_lora_rank
+                              + cfg.qk_rope_dim)
+            per_layer += cfg.q_lora_rank * cfg.num_heads * (
+                cfg.qk_nope_dim + cfg.qk_rope_dim)
+            per_layer += cfg.kv_lora_rank * cfg.num_heads * (
+                cfg.qk_nope_dim + cfg.v_head_dim)
+            per_layer += cfg.num_heads * cfg.v_head_dim * d
+        else:
+            per_layer += d * (cfg.num_heads + 2 * cfg.num_kv_heads) \
+                * cfg.head_dim + cfg.num_heads * cfg.head_dim * d
+    if cfg.family == "moe":
+        kd = cfg.first_k_dense
+        moe_l = l - kd
+        dense_ffn = 3 * d * cfg.d_ff * kd / max(l, 1)
+        active_experts = cfg.experts_per_token + cfg.num_shared_experts
+        moe_ffn = 3 * d * cfg.moe_d_ff * active_experts * moe_l / max(l, 1)
+        per_layer += dense_ffn + moe_ffn
+    elif cfg.d_ff:
+        per_layer += 3 * d * cfg.d_ff
+    if cfg.ssm_version:
+        di = cfg.d_inner
+        if cfg.ssm_version == 1:
+            per_layer += d * 2 * di + di * d \
+                + di * (cfg.dt_rank + 2 * cfg.ssm_state) + cfg.dt_rank * di
+        else:
+            per_layer += d * (2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                              + cfg.ssm_nheads) + di * d
+        if cfg.family == "hybrid" and cfg.attn_every:
+            # only 1/attn_every layers have attention+mlp; rest mamba
+            frac_attn = 1.0 / cfg.attn_every
+            per_layer = per_layer * (1 - frac_attn) + frac_attn * (
+                d * 4 * cfg.num_heads * cfg.head_dim + 3 * d * cfg.d_ff)
+    total = l * per_layer + v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.is_encoder_decoder:
+        total += cfg.encoder_layers * (4 * d * cfg.num_heads * cfg.head_dim
+                                       + 2 * d * cfg.d_ff)
+    return int(total)
+
+
+def total_params(cfg) -> int:
+    if cfg.family != "moe":
+        return active_params(cfg)
+    d, l = cfg.d_model, cfg.num_layers
+    kd = cfg.first_k_dense
+    base = active_params(cfg)
+    active_e = cfg.experts_per_token + cfg.num_shared_experts
+    all_e = cfg.num_experts + cfg.num_shared_experts
+    moe_ffn_active = 3 * d * cfg.moe_d_ff * active_e * (l - kd)
+    moe_ffn_total = 3 * d * cfg.moe_d_ff * all_e * (l - kd)
+    return int(base - moe_ffn_active + moe_ffn_total)

@@ -1,0 +1,69 @@
+"""Serving launcher.
+
+  * --local: run the real hybrid LLM-SLM engine on CPU (reduced configs)
+    with batched requests through the scheduler.
+  * default: lower the fused co-serving decode step (or a single-arch
+    serve step) onto the production mesh.
+"""
+import os
+if "--local" not in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="single-arch serve step; default: fused pair")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rtt-ms", type=float, default=50.0)
+    ap.add_argument("--timeout-ms", type=float, default=200.0)
+    args = ap.parse_args()
+
+    if args.local:
+        import jax
+        from repro.configs import get_config
+        from repro.core import fusion as FUS
+        from repro.models.model import LM
+        from repro.serving.engine import HybridEngine
+        from repro.serving.latency import LatencyModel
+        from repro.serving.scheduler import Scheduler, summarize
+        slm_cfg = get_config("floe-slm-2b").reduced()
+        llm_cfg = get_config("floe-llm-7b").reduced()
+        slm, llm = LM(slm_cfg, remat=False), LM(llm_cfg, remat=False)
+        sp = slm.init(jax.random.key(0))
+        lp = llm.init(jax.random.key(1))
+        mlp = FUS.init_alignment(jax.random.key(2), slm_cfg.vocab_size)
+        eng = HybridEngine(slm, sp, llm, lp, mlp,
+                           latency=LatencyModel(rtt_ms=args.rtt_ms),
+                           timeout_ms=args.timeout_ms)
+        sched = Scheduler(eng)
+        for prompt in [
+            "math: compute 12 plus 7 =",
+            "my ssn is 123-45-6789, fill the benefits form",
+            "translate to french: water ->",
+            "my doctor said my blood pressure is 140 over 90",
+        ]:
+            sched.submit(prompt, max_new_tokens=8)
+        res = sched.run()
+        for r in res:
+            print(f"[{r.rid}] private={r.stats.private} "
+                  f"cloud={r.stats.cloud_tokens}/{r.stats.tokens} "
+                  f"lat={r.stats.mean_latency_ms:.0f}ms  {r.text!r}")
+        print(summarize(res))
+        return
+
+    from repro.launch.dryrun import run_fusion, run_one
+    if args.arch:
+        run_one(args.arch, args.shape, multi_pod=args.multi_pod)
+    else:
+        run_fusion(args.shape, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

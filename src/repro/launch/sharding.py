@@ -1,0 +1,247 @@
+"""Logical-axis -> mesh-axis mapping with divisibility fallbacks.
+
+One rule set covers every architecture (DESIGN.md §3):
+  * FSDP over ``data``: the d_model axis of every weight matrix
+  * tensor/expert parallel over ``model``: heads, d_ff, experts, vocab,
+    d_inner — the "wide" axis of each projection
+  * ``pod`` is pure data parallelism (params replicated across pods)
+
+A dim is sharded only if divisible by the mesh axis size and the axis is
+not already used by another dim of the same param; otherwise it falls
+back to replication (e.g. kv_hd = 8·128 = 1024 is model-shardable for
+llama but gemma3's 4-head q stays replicated on a 16-wide model axis
+only when 4·256 % 16 != 0 — it is 0, so it shards).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axis (training default: FSDP over `data`
+# on d_model + tensor/expert parallel over `model`)
+RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "vocab2": "model",
+    "d_model": "data",
+    "heads_hd": "model",
+    "kv_hd": "model",
+    "d_ff": "model",
+    "d_ff_gated": "model",
+    "experts": "model",
+    "d_inner": "model",
+    "d_inner_gated": "model",
+    "kv_lora": None,
+    "q_lora": None,
+    "d_state": None,
+    "ssm_heads": None,
+    "head_dim": None,
+}
+
+# inference rules (§Perf): weight-stationary decode — no FSDP gather per
+# step; params replicated over `data`, sharded over `model` only.
+RULES_INFERENCE: Dict[str, Optional[str]] = dict(RULES, d_model=None)
+
+RULESETS = {"fsdp": RULES, "inference": RULES_INFERENCE}
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             mesh: Mesh, rules: Optional[Dict[str, Optional[str]]] = None
+             ) -> P:
+    rules = rules or RULES
+    sizes = dict(mesh.shape)
+    used = set()
+    out = []
+    for ax_name, dim in zip(axes, shape):
+        mesh_ax = rules.get(ax_name) if ax_name else None
+        if (mesh_ax and mesh_ax in sizes and mesh_ax not in used
+                and dim % sizes[mesh_ax] == 0):
+            out.append(mesh_ax)
+            used.add(mesh_ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_shardings(axes_tree: Any, specs_tree: Any, mesh: Mesh,
+                    rules: Optional[Dict[str, Optional[str]]] = None) -> Any:
+    """axes_tree: logical axes per param; specs_tree: matching P specs
+    (for shapes).  Returns NamedSharding tree."""
+    from repro.models.layers import P as ParamSpec
+
+    def f(spec: ParamSpec):
+        return NamedSharding(mesh, spec_for(spec.axes, spec.shape, mesh,
+                                            rules))
+
+    return jax.tree.map(f, specs_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def like_tree(tree: Any, mesh: Mesh, spec: P) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, spec), tree)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes used for batch data parallelism."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_sharding(mesh: Mesh, batch_size: int, ndim: int,
+                   seq_axis_to_data: bool = False,
+                   seq_dim: int = 1) -> NamedSharding:
+    """Shard dim0 (batch) over (pod, data) when divisible; for batch-1
+    decode optionally shard the sequence dim over data instead."""
+    axes = batch_axes(mesh)
+    sizes = dict(mesh.shape)
+    total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    spec = [None] * ndim
+    if batch_size % max(total, 1) == 0 and total > 1:
+        spec[0] = axes if len(axes) > 1 else axes[0]
+    elif seq_axis_to_data and "data" in sizes:
+        spec[seq_dim] = "data"
+    return NamedSharding(mesh, P(*spec))
+
+
+def make_activation_policy(cfg, mesh, global_batch: int,
+                           shard_seq: bool = False,
+                           seqpar: bool = False,
+                           seq_len: int = 0,
+                           kv_seq_model: bool = False):
+    """Policy for models.sharding_hooks: pins cache/residual/logits
+    PartitionSpecs so GSPMD propagation cannot drift layer-to-layer.
+
+    seqpar (§Perf): Megatron-style sequence parallelism — the residual
+    stream between blocks is sharded over `model` on the sequence axis,
+    so the MLP path (pointwise over tokens) runs fully sharded and the
+    per-layer d_model all-gather disappears; attention re-gathers the
+    sequence only where it genuinely mixes positions."""
+    import jax as _jax
+    sizes = dict(mesh.shape)
+    daxes = batch_axes(mesh)
+    total = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+    b_ok = global_batch % max(total, 1) == 0 and total > 1
+    bspec = (daxes if len(daxes) > 1 else daxes[0]) if b_ok else None
+    seqpar_ok = (seqpar and "model" in sizes and seq_len
+                 and seq_len % sizes["model"] == 0)
+
+    def model_dim(shape, candidates):
+        for md in candidates:
+            if "model" in sizes and shape[md] % sizes["model"] == 0:
+                return md
+        return None
+
+    def pol(x, kind):
+        spec = [None] * x.ndim
+        if kind == "cache_kv":               # (B,S,KV,hd)
+            spec[0] = bspec
+            if kv_seq_model and "model" in sizes \
+                    and x.shape[1] % sizes["model"] == 0:
+                spec[1] = "model"
+            else:
+                if spec[0] is None and shard_seq and "data" in sizes \
+                        and x.shape[1] % sizes["data"] == 0:
+                    spec[1] = "data"
+                md = model_dim(x.shape, (2, 3))
+                if md is not None:
+                    spec[md] = "model"
+        elif kind == "cache_mla":            # (B,S,dc)
+            spec[0] = bspec
+            if kv_seq_model and "model" in sizes \
+                    and x.shape[1] % sizes["model"] == 0:
+                spec[1] = "model"
+            else:
+                if spec[0] is None and shard_seq and "data" in sizes \
+                        and x.shape[1] % sizes["data"] == 0:
+                    spec[1] = "data"
+                md = model_dim(x.shape, (2,))
+                if md is not None:
+                    spec[md] = "model"
+        elif kind == "resid":                # (B,S,d)
+            spec[0] = bspec
+            if seqpar_ok and x.ndim >= 2 and x.shape[1] == seq_len:
+                spec[1] = "model"
+        elif kind == "logits":               # (B,S,V)
+            spec[0] = bspec
+            md = model_dim(x.shape, (x.ndim - 1,))
+            if md is not None:
+                spec[md] = "model"
+        else:
+            return x
+        return _jax.lax.with_sharding_constraint(x, P(*spec))
+
+    return pol
+
+
+# ----------------------------------------------------------------- caches
+
+
+def cache_shardings(cfg, cache_abstract: Any, mesh: Mesh,
+                    shard_seq: bool = False,
+                    kv_seq_model: bool = False) -> Any:
+    """Shardings for the decode cache tree.
+
+    Heuristic by leaf shape/meaning (see model.init_cache):
+      attention k/v  (L,B,S,KV,hd): B->data (or S->data for batch-1),
+                                     KV*? -> model when KV divisible
+      mla c/kr       (L,B,S,dc):    B/S->data, dc->model if divisible
+      ssm conv       (...,B,k-1,C): B->data, C->model
+      ssm h          (...,B,di,N) | (...,B,H,P,N): B->data, di|H->model
+    """
+    sizes = dict(mesh.shape)
+    daxes = batch_axes(mesh)
+    total = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+
+    def bspec(shape, batch_dim, seq_dim=None, model_dims=()):
+        spec = [None] * len(shape)
+        if shape[batch_dim] % total == 0 and total > 1:
+            spec[batch_dim] = daxes if len(daxes) > 1 else daxes[0]
+        elif shard_seq and seq_dim is not None and "data" in sizes \
+                and shape[seq_dim] % sizes["data"] == 0:
+            spec[seq_dim] = "data"
+        if isinstance(model_dims, int):
+            model_dims = (model_dims,)
+        for md in model_dims:
+            if md is not None and "model" in sizes \
+                    and shape[md] % sizes["model"] == 0:
+                spec[md] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    def walk2(path, node):
+        if isinstance(node, dict):
+            return {k: walk2(path + (k,), v) for k, v in node.items()}
+        shape = node.shape
+        name = path[-1]
+        if name == "pos" or len(shape) == 0:
+            return NamedSharding(mesh, P())
+        n = len(shape)
+        if name in ("k", "v", "xk", "xv"):        # (...,B,S,KV,hd)
+            if kv_seq_model and "model" in sizes \
+                    and shape[n - 3] % sizes["model"] == 0:
+                # flash-decode/context-parallel: shard cache SEQ over
+                # `model` — scores computed shard-locally, only tiny
+                # softmax-stats/output all-reduces cross shards (§Perf)
+                sp = bspec(shape, n - 4, None, ())
+                spec = list(sp.spec) + [None] * (n - len(sp.spec))
+                spec[n - 3] = "model"
+                return NamedSharding(mesh, P(*spec))
+            return bspec(shape, n - 4, n - 3, (n - 2, n - 1))
+        if name in ("c", "kr"):                   # (...,B,S,dc)
+            if kv_seq_model and "model" in sizes \
+                    and shape[n - 2] % sizes["model"] == 0:
+                sp = bspec(shape, n - 3, None, ())
+                spec = list(sp.spec) + [None] * (n - len(sp.spec))
+                spec[n - 2] = "model"
+                return NamedSharding(mesh, P(*spec))
+            return bspec(shape, n - 3, n - 2, (n - 1,))
+        if name == "conv":
+            return bspec(shape, len(shape) - 3, None, (len(shape) - 1,))
+        if name == "h":
+            if cfg.ssm_version == 2:              # (...,B,H,P,N)
+                return bspec(shape, len(shape) - 4, None, (len(shape) - 3,))
+            return bspec(shape, len(shape) - 3, None, (len(shape) - 2,))
+        return NamedSharding(mesh, P())
+
+    return walk2((), cache_abstract)

@@ -1,0 +1,52 @@
+"""Training launcher.
+
+Two modes:
+  * --local: CPU-scale end-to-end federated fine-tuning (real compute,
+    reduced config) — the runnable counterpart of examples/.
+  * default: production-mesh lowering of the train step for the chosen
+    arch (delegates to dryrun.run_one) — what you'd launch on a real pod.
+"""
+import os
+if "--local" not in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import sys       # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="floe-slm-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--optimizer", default="adamw")
+    args = ap.parse_args()
+
+    if args.local:
+        import jax
+        from repro.configs import get_config
+        from repro.models.model import LM
+        from repro.federated.simulation import SimConfig, run_simulation
+        cfg = get_config(args.arch).reduced()
+        lm = LM(cfg, remat=False)
+        params = lm.init(jax.random.key(0))
+        sim = SimConfig(num_clients=args.clients, rounds=args.rounds)
+        res = run_simulation(lm, params, sim)
+        for i, h in enumerate(res.server.state.history):
+            print(f"round {i}: {h}")
+        print(f"experts: {res.server.state.history[-1]['clusters']}, "
+              f"dropped: {res.dropped_per_round}")
+        return
+
+    from repro.launch.dryrun import run_one
+    run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+            optimizer=args.optimizer)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: unified LM over dense/GQA, MLA+MoE, SSM, hybrid, enc-dec, VLM."""
+from repro.models.model import LM  # noqa: F401

@@ -1,0 +1,228 @@
+"""Attention: GQA with full-causal, sliding-window and decode paths.
+
+Prefill/train attention is *query-chunked* with static KV slices per chunk
+(Python loop over chunks -> static shapes, exact-causal FLOPs, O(chunk·S)
+peak memory instead of O(S²)).  Sliding-window layers slice only the
+window neighbourhood, giving honest O(S·w) FLOPs for long contexts.
+Decode attends one token against the cache (optionally window-sliced).
+
+The Pallas flash-attention kernel in ``repro/kernels/flash_attention`` is
+the TPU-target implementation of the same math; this module is the jnp
+path used for CPU tests and dry-run lowering.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding_hooks import constrain
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "q": L.linear_spec(d, h * hd, "d_model", "heads_hd", bias=cfg.qkv_bias),
+        "k": L.linear_spec(d, kv * hd, "d_model", "kv_hd", bias=cfg.qkv_bias),
+        "v": L.linear_spec(d, kv * hd, "d_model", "kv_hd", bias=cfg.qkv_bias),
+        "o": L.linear_spec(h * hd, d, "heads_hd", "d_model"),
+    }
+    if cfg.use_qk_norm:
+        s["q_norm"] = {"scale": L.P((hd,), ("head_dim",), "ones")}
+        s["k_norm"] = {"scale": L.P((hd,), ("head_dim",), "ones")}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,KV,G,hd)  k/v: (B,Sk,KV,hd)  mask: (B?,Sq,Sk) bool."""
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _group(q, num_kv):
+    b, s, hhd = q.shape[0], q.shape[1], q.shape[2] * q.shape[3]
+    h = q.shape[2]
+    g = h // num_kv
+    return q.reshape(b, s, num_kv, g, q.shape[3])
+
+
+def chunked_causal_attention(q, k, v, q_pos, kv_pos, window: int = 0,
+                             chunk: int = 1024):
+    """Exact causal (optionally sliding-window) attention.
+
+    q: (B, S, H, hd); k/v: (B, S, KV, hd); q_pos/kv_pos: (S,) absolute.
+    Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    qg = _group(q, kvh)                                    # (B,S,KV,G,hd)
+    if s <= chunk:
+        mask = kv_pos[None, None, :] <= q_pos[None, :, None]
+        if window:
+            mask &= kv_pos[None, None, :] > q_pos[None, :, None] - window
+        out = _sdpa(qg, k, v, mask, scale)
+        return out.reshape(b, s, h, hd)
+
+    n_chunks = -(-s // chunk)
+    outs = []
+    for i in range(n_chunks):
+        lo, hi = i * chunk, min((i + 1) * chunk, s)
+        qc = qg[:, lo:hi]
+        qp = q_pos[lo:hi]
+        if window:
+            # only the window neighbourhood can be visible
+            k_lo = max(0, hi - chunk - window)
+        else:
+            k_lo = 0
+        kc, vc = k[:, k_lo:hi], v[:, k_lo:hi]
+        kp = kv_pos[k_lo:hi]
+        mask = kp[None, None, :] <= qp[None, :, None]
+        if window:
+            mask &= kp[None, None, :] > qp[None, :, None] - window
+        outs.append(_sdpa(qc, kc, vc, mask, scale).reshape(b, hi - lo, h, hd))
+    return jnp.concatenate(outs, axis=1)
+
+
+def bidirectional_attention(q, k, v):
+    """Whisper encoder / cross attention (no mask)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _group(q, kvh)
+    mask = jnp.ones((1, s, k.shape[1]), bool)
+    return _sdpa(qg, k, v, mask, 1.0 / math.sqrt(hd)).reshape(b, s, h, hd)
+
+
+def decode_attention(q, cache_k, cache_v, pos, window: int = 0):
+    """One-token decode: q (B,1,H,hd), cache (B,S,KV,hd), pos scalar."""
+    b, _, h, hd = q.shape
+    s_max = cache_k.shape[1]
+    kvh = cache_k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    if window and window < s_max:
+        start = jnp.clip(pos + 1 - window, 0, s_max - window)
+        k = jax.lax.dynamic_slice_in_dim(cache_k, start, window, axis=1)
+        v = jax.lax.dynamic_slice_in_dim(cache_v, start, window, axis=1)
+        kv_pos = start + jnp.arange(window)
+    else:
+        k, v, kv_pos = cache_k, cache_v, jnp.arange(s_max)
+    qg = _group(q, kvh)
+    mask = (kv_pos <= pos)[None, None, :]
+    return _sdpa(qg, k, v, mask, scale).reshape(b, 1, h, hd)
+
+
+def ring_decode_attention(q, cache_k, cache_v, pos, window: int):
+    """Decode against a ring-buffered window cache (B, window, KV, hd).
+
+    Slot i holds absolute position p = pos - ((pos - i) mod window); the
+    mask keeps p in [max(0, pos-window+1), pos]."""
+    b, _, h, hd = q.shape
+    kvh = cache_k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    slots = jnp.arange(window)
+    kv_pos = pos - jnp.mod(pos - slots, window)
+    mask = ((kv_pos >= 0) & (kv_pos <= pos))[None, None, :]
+    qg = _group(q, kvh)
+    return _sdpa(qg, cache_k, cache_v, mask, scale).reshape(b, 1, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache plumbing + LoRA hooks)
+# ---------------------------------------------------------------------------
+
+
+def _qk_norm(p, x, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
+                    is_global: bool = True,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    mode: str = "train",
+                    rope_enabled: bool = True) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full attention sub-layer.  Returns (output, new_cache_or_None).
+
+    mode: "train" (no cache) | "prefill" (build cache) | "decode" (use+update).
+    ``is_global``: for attn_type=="mixed"/"sliding", False -> windowed.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def get_lora(tag):
+        return (lora or {}).get(tag)
+
+    q = L.linear(p["q"], x, get_lora("q"), gates).reshape(b, s, h, hd)
+    k = L.linear(p["k"], x, get_lora("k"), gates).reshape(b, s, kvh, hd)
+    v = L.linear(p["v"], x, get_lora("v"), gates).reshape(b, s, kvh, hd)
+
+    if cfg.use_qk_norm:
+        q = _qk_norm(p["q_norm"], q, cfg.norm_eps)
+        k = _qk_norm(p["k_norm"], k, cfg.norm_eps)
+
+    if rope_enabled:
+        theta = cfg.rope_theta_global if (
+            is_global and cfg.rope_theta_global) else cfg.rope_theta
+        q = L.rope(q, positions, theta)
+        k = L.rope(k, positions, theta)
+
+    window = 0
+    if cfg.attn_type == "sliding" or (cfg.attn_type == "mixed" and not is_global):
+        window = cfg.sliding_window
+
+    if mode == "train":
+        pos1d = positions if positions.ndim == 1 else positions[0]
+        out = chunked_causal_attention(q, k, v, pos1d, pos1d, window)
+        new_cache = None
+    elif mode == "prefill":
+        pos1d = positions if positions.ndim == 1 else positions[0]
+        out = chunked_causal_attention(q, k, v, pos1d, pos1d, window)
+        new_cache = {"k": k, "v": v}
+    elif mode == "decode":
+        pos = positions if positions.ndim == 0 else positions.reshape(())
+        ring = window and cache["k"].shape[1] == window
+        if ring:
+            # ring buffer: sliding-window layers keep only `window` slots
+            # (beyond-paper §Perf: cuts local-layer cache footprint by
+            # seq_len/window, e.g. 1024x for gemma3 @ 500k)
+            slot = jnp.mod(pos, window)
+            ck = constrain(jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, slot, axis=1), "cache_kv")
+            cv = constrain(jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, slot, axis=1), "cache_kv")
+            out = ring_decode_attention(q, ck, cv, pos, window)
+        else:
+            ck = constrain(jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, pos, axis=1), "cache_kv")
+            cv = constrain(jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, pos, axis=1), "cache_kv")
+            out = decode_attention(q, ck, cv, pos, window)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        raise ValueError(mode)
+
+    y = L.linear(p["o"], out.reshape(b, s, h * hd), get_lora("o"), gates)
+    return y, new_cache

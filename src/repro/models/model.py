@@ -1,0 +1,716 @@
+"""Unified language model covering every assigned architecture family.
+
+One ``LM`` class; the config decides the layer stack:
+  dense            — [attn, mlp] × L, optionally with a 5:1 local:global
+                     grouped pattern (gemma3)
+  moe              — [attn|mla, moe_ffn] × L with first_k_dense dense layers
+  ssm              — [mamba1] × L
+  hybrid           — groups of (attn_every-1) mamba2 layers + one SHARED
+                     attention block (zamba2)
+  audio (enc-dec)  — whisper: encoder over stub frame embeddings + decoder
+                     with self+cross attention
+  vlm              — phi3: stub patch embeddings prepended to the token
+                     sequence
+
+All stacks are ``lax.scan`` over stacked parameters (compact HLO at 126
+layers); mixed/hybrid archs use a grouped scan (outer scan over groups,
+inner scan over the homogeneous sub-stack) so no per-layer ``lax.cond``
+is ever traced.
+
+Floe integration: every projection accepts per-layer, per-expert LoRA
+tensors (core/lora.py) merged with router gate weights ω (Eq. 8) — the
+paper's technique is a first-class argument of every entry point.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as ATT
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.sharding_hooks import constrain
+
+
+def sinusoidal_positions(s: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d)
+    out = jnp.zeros((s, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return out.astype(dtype)
+
+
+def sinusoidal_at(pos, d: int, dtype) -> jax.Array:
+    """Sinusoidal embedding at a single (traced) position -> (d,)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, dim / d)
+    out = jnp.zeros((d,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    return out.astype(dtype)
+
+
+def _tree_index(tree, idx):
+    return jax.tree.map(lambda t: t[idx] if t is not None else None, tree)
+
+
+# ===========================================================================
+# Layer bodies
+# ===========================================================================
+
+
+def dense_layer_spec(cfg, use_moe: bool = False, d_ff: Optional[int] = None):
+    s = {
+        "ln1": L.norm_spec(cfg),
+        "attn": MLA.mla_spec(cfg) if cfg.use_mla else ATT.attn_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+    }
+    if use_moe:
+        s["moe"] = MOE.moe_spec(cfg)
+    else:
+        s["mlp"] = L.mlp_spec(cfg, d_ff)
+    return s
+
+
+def dense_layer(cfg, p, x, *, positions, mode, cache, lora, gates,
+                is_global=True, absorb=False):
+    """Pre-norm [attn|mla] + [mlp|moe].  Returns (x, new_cache, aux)."""
+    h = L.norm(cfg, p["ln1"], x)
+    if cfg.use_mla:
+        a, new_cache = MLA.mla_block(cfg, p["attn"], h, positions=positions,
+                                     lora=lora, gates=gates, cache=cache,
+                                     mode=mode, absorb=absorb)
+    else:
+        a, new_cache = ATT.attention_block(cfg, p["attn"], h,
+                                           positions=positions, lora=lora,
+                                           gates=gates, is_global=is_global,
+                                           cache=cache, mode=mode)
+    x = x + a
+    h = L.norm(cfg, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        m, aux = MOE.moe_ffn(cfg, p["moe"], h, lora, gates)
+    else:
+        m = L.mlp(cfg, p["mlp"], h, (lora or {}).get("mlp_in"),
+                  (lora or {}).get("mlp_out"), gates)
+    return constrain(x + m, "resid"), new_cache, aux
+
+
+def ssm_layer_spec(cfg):
+    if cfg.ssm_version == 1:
+        return {"ln": L.norm_spec(cfg), "ssm": SSM.mamba1_spec(cfg)}
+    s = {"ln": L.norm_spec(cfg), "ssm": SSM.mamba2_spec(cfg)}
+    if cfg.d_ff:                                   # zamba2 mamba layers: +MLP
+        s["ln2"] = L.norm_spec(cfg)
+        s["mlp"] = L.mlp_spec(cfg)
+    return s
+
+
+def ssm_layer(cfg, p, x, *, mode, cache, lora, gates, unroll: int = 1):
+    h = L.norm(cfg, p["ln"], x)
+    block = SSM.mamba1_block if cfg.ssm_version == 1 else SSM.mamba2_block
+    y, new_cache = block(cfg, p["ssm"], h, lora=lora, gates=gates,
+                         cache=cache, mode=mode, unroll=unroll)
+    x = x + y
+    if "mlp" in p:
+        h = L.norm(cfg, p["ln2"], x)
+        x = x + L.mlp(cfg, p["mlp"], h, (lora or {}).get("mlp_in"),
+                      (lora or {}).get("mlp_out"), gates)
+    return constrain(x, "resid"), new_cache, jnp.zeros((), jnp.float32)
+
+
+def encoder_layer_spec(cfg):
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": ATT.attn_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def encoder_layer(cfg, p, x, lora, gates):
+    h = L.norm(cfg, p["ln1"], x)
+    b, s, d = h.shape
+    hh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    get = (lora or {}).get
+    q = L.linear(p["attn"]["q"], h, get("q"), gates).reshape(b, s, hh, hd)
+    k = L.linear(p["attn"]["k"], h, get("k"), gates).reshape(b, s, kvh, hd)
+    v = L.linear(p["attn"]["v"], h, get("v"), gates).reshape(b, s, kvh, hd)
+    o = ATT.bidirectional_attention(q, k, v).reshape(b, s, hh * hd)
+    x = x + L.linear(p["attn"]["o"], o, get("o"), gates)
+    h = L.norm(cfg, p["ln2"], x)
+    return x + L.mlp(cfg, p["mlp"], h, get("mlp_in"), get("mlp_out"), gates)
+
+
+def decoder_layer_spec(cfg):
+    return {
+        "ln1": L.norm_spec(cfg),
+        "self_attn": ATT.attn_spec(cfg),
+        "ln_x": L.norm_spec(cfg),
+        "cross_attn": ATT.attn_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def decoder_layer(cfg, p, x, *, positions, enc, mode, cache, lora, gates):
+    """Whisper decoder layer.  cache = {"k","v","xk","xv"}; enc: encoder out
+    (needed when cross K/V are not yet cached, i.e. train)."""
+    b, s, d = x.shape
+    hh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    get = (lora or {}).get
+    # self attention (causal, cached)
+    h = L.norm(cfg, p["ln1"], x)
+    self_cache = None if mode == "train" else \
+        ({"k": cache["k"], "v": cache["v"]} if mode == "decode" else None)
+    a, new_self = ATT.attention_block(cfg, p["self_attn"], h,
+                                      positions=positions, lora=lora,
+                                      gates=gates, cache=self_cache,
+                                      mode=mode, rope_enabled=False)
+    x = x + a
+    # cross attention
+    h = L.norm(cfg, p["ln_x"], x)
+    q = L.linear(p["cross_attn"]["q"], h, get("q"), gates).reshape(b, s, hh, hd)
+    if mode == "decode":
+        xk, xv = cache["xk"], cache["xv"]
+    else:
+        xk = L.linear(p["cross_attn"]["k"], enc).reshape(
+            b, enc.shape[1], kvh, hd)
+        xv = L.linear(p["cross_attn"]["v"], enc).reshape(
+            b, enc.shape[1], kvh, hd)
+    o = ATT.bidirectional_attention(q, xk, xv).reshape(b, s, hh * hd)
+    x = x + L.linear(p["cross_attn"]["o"], o, get("o"), gates)
+    h = L.norm(cfg, p["ln2"], x)
+    x = x + L.mlp(cfg, p["mlp"], h, get("mlp_in"), get("mlp_out"), gates)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"k": new_self["k"], "v": new_self["v"], "xk": xk, "xv": xv}
+    elif mode == "decode":
+        new_cache = {"k": new_self["k"], "v": new_self["v"],
+                     "xk": cache["xk"], "xv": cache["xv"]}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ===========================================================================
+# LM
+# ===========================================================================
+
+
+def _stack_specs(spec: Dict, n: Tuple[int, ...]) -> Dict:
+    """Prepend stacking dims to every P in a spec tree."""
+    def f(p: L.P) -> L.P:
+        return L.P(tuple(n) + p.shape, (None,) * len(n) + p.axes,
+                   p.init, p.scale)
+    return jax.tree.map(f, spec, is_leaf=lambda x: isinstance(x, L.P))
+
+
+class LM:
+    """Functional model bundle for one ModelConfig."""
+
+    def __init__(self, cfg, remat: bool = True, unroll_layers: bool = False,
+                 ssm_unroll: int = 1, ring_cache: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        # ring_cache (§Perf): sliding-window layers keep a window-sized
+        # ring buffer instead of a full-sequence cache
+        self.ring_cache = ring_cache
+        # unroll_layers: unroll the layer scans (dry-run accuracy: XLA
+        # cost_analysis counts while-loop bodies ONCE; unrolling restores
+        # exact FLOP/collective accounting — see launch/analysis.py)
+        self.unroll_layers = unroll_layers
+        # ssm_unroll: unroll factor of the mamba chunk scan (2-point
+        # FLOP-correction probe in launch/dryrun.py)
+        self.ssm_unroll = ssm_unroll
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------- layout
+    def _layout(self):
+        """Stack layout: (kind, n_groups, group_size, tail)."""
+        cfg = self.cfg
+        if cfg.family == "hybrid" and cfg.attn_every:
+            g = cfg.attn_every
+            n_groups = cfg.num_layers // g
+            tail = cfg.num_layers - n_groups * g
+            return ("grouped", n_groups, g, tail)
+        if cfg.attn_type == "mixed" and cfg.global_every:
+            g = cfg.global_every
+            n_groups = cfg.num_layers // g
+            tail = cfg.num_layers - n_groups * g
+            return ("grouped", n_groups, g, tail)
+        return ("plain", cfg.num_layers, 1, 0)
+
+    # -------------------------------------------------------------- specs
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"embed": L.embed_spec(cfg),
+                             "ln_f": L.norm_spec(cfg)}
+        kind, n_groups, g, tail = self._layout()
+
+        if cfg.family == "audio":
+            s["enc"] = _stack_specs(encoder_layer_spec(cfg),
+                                    (cfg.encoder_layers,))
+            s["enc_ln"] = L.norm_spec(cfg)
+            s["dec"] = _stack_specs(decoder_layer_spec(cfg),
+                                    (cfg.num_layers,))
+            return s
+        if cfg.family == "vlm":
+            s["proj"] = L.linear_spec(cfg.d_model, cfg.d_model,
+                                      "d_model", "d_model")
+        if cfg.family == "ssm":
+            s["layers"] = _stack_specs(ssm_layer_spec(cfg), (cfg.num_layers,))
+            return s
+        if cfg.family == "hybrid":
+            # inner mamba2 layers grouped; one SHARED attention block
+            s["inner"] = _stack_specs(ssm_layer_spec(cfg), (n_groups, g - 1))
+            s["tail"] = _stack_specs(ssm_layer_spec(cfg), (tail,))
+            s["shared_attn"] = dense_layer_spec(cfg)   # weight-tied block
+            return s
+        if cfg.family == "moe":
+            kd = cfg.first_k_dense
+            if kd:
+                s["dense_layers"] = _stack_specs(
+                    dense_layer_spec(cfg, use_moe=False), (kd,))
+            s["layers"] = _stack_specs(
+                dense_layer_spec(cfg, use_moe=True), (cfg.num_layers - kd,))
+            return s
+        # dense (incl. gemma3 mixed + vlm backbone)
+        if kind == "grouped":
+            s["inner"] = _stack_specs(dense_layer_spec(cfg), (n_groups, g - 1))
+            s["tail"] = _stack_specs(dense_layer_spec(cfg), (tail,))
+            s["global_layers"] = _stack_specs(dense_layer_spec(cfg),
+                                              (n_groups,))
+        else:
+            s["layers"] = _stack_specs(dense_layer_spec(cfg),
+                                       (cfg.num_layers,))
+        return s
+
+    def lora_layout(self) -> Dict[str, Tuple[Tuple[int, ...], Dict[str, Tuple[int, int]]]]:
+        """{stack_key: (stack_dims, {target: (d_in, d_out)})} — the contract
+        between core/lora.py adapter trees and ``_run_stack`` lora slicing."""
+        cfg = self.cfg
+        kind, n_groups, g, tail = self._layout()
+        d, f = cfg.d_model, cfg.d_ff
+        h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        gate_mult = 2 if cfg.mlp_type in ("swiglu", "geglu") else 1
+
+        def attn_targets():
+            if cfg.use_mla:
+                return {"q": (d, cfg.q_lora_rank),
+                        "kv": (d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                        "o": (h * cfg.v_head_dim, d)}
+            return {"q": (d, h * hd), "k": (d, kv * hd), "v": (d, kv * hd),
+                    "o": (h * hd, d)}
+
+        def mlp_targets(ff=None):
+            ff = ff or f
+            return {"mlp_in": (d, gate_mult * ff), "mlp_out": (ff, d)}
+
+        def ssm_targets():
+            di, n = cfg.d_inner, cfg.ssm_state
+            if cfg.ssm_version == 1:
+                return {"ssm_in": (d, 2 * di),
+                        "ssm_x": (di, cfg.dt_rank + 2 * n),
+                        "ssm_dt": (cfg.dt_rank, di),
+                        "ssm_out": (di, d)}
+            proj = 2 * di + 2 * cfg.ssm_ngroups * n + cfg.ssm_nheads
+            t = {"ssm_in": (d, proj), "ssm_out": (di, d)}
+            if cfg.d_ff:
+                t.update(mlp_targets())
+            return t
+
+        if cfg.family == "audio":
+            t = {**attn_targets(), **mlp_targets()}
+            return {"enc": ((cfg.encoder_layers,), t),
+                    "dec": ((cfg.num_layers,), t)}
+        if cfg.family == "ssm":
+            return {"layers": ((cfg.num_layers,), ssm_targets())}
+        if cfg.family == "hybrid":
+            at = {**attn_targets(), **mlp_targets()}
+            return {"inner": ((n_groups, g - 1), ssm_targets()),
+                    "tail": ((tail,), ssm_targets()),
+                    "special": ((n_groups,), at)}
+        if cfg.family == "moe":
+            kd = cfg.first_k_dense
+            # MoE layers: adapters on attention (+ shared expert if present)
+            mt = dict(attn_targets())
+            if cfg.num_shared_experts:
+                mt.update(mlp_targets(cfg.moe_d_ff * cfg.num_shared_experts))
+            out = {"layers": ((cfg.num_layers - kd,), mt)}
+            if kd:
+                out["dense_layers"] = ((kd,),
+                                       {**attn_targets(), **mlp_targets()})
+            return out
+        t = {**attn_targets(), **mlp_targets()}
+        if kind == "grouped":
+            return {"inner": ((n_groups, g - 1), t), "tail": ((tail,), t),
+                    "special": ((n_groups,), t)}
+        return {"layers": ((cfg.num_layers,), t)}
+
+    def init(self, key) -> Dict[str, Any]:
+        return L.materialize(self.param_specs(), key, self.dtype)
+
+    def abstract_params(self):
+        return L.abstract_params(self.param_specs(), self.dtype)
+
+    def param_axes(self):
+        return L.axes_tree(self.param_specs())
+
+    # -------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = self.dtype
+        kind, n_groups, g, tail = self._layout()
+
+        def attn_kv(n_layers):
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            return {"k": jnp.zeros((n_layers, batch, max_seq, kv, hd), dt),
+                    "v": jnp.zeros((n_layers, batch, max_seq, kv, hd), dt)}
+
+        def ssm_state(n: Tuple[int, ...]):
+            if cfg.ssm_version == 1:
+                h = jnp.zeros(n + (batch, cfg.d_inner, cfg.ssm_state),
+                              jnp.float32)
+                cw = cfg.d_inner
+            else:
+                h = jnp.zeros(n + (batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                                   cfg.ssm_state), jnp.float32)
+                cw = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+            conv = jnp.zeros(n + (batch, cfg.ssm_conv - 1, cw), dt)
+            return {"conv": conv, "h": h}
+
+        if cfg.family == "audio":
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            nl, fs = cfg.num_layers, cfg.encoder_seq
+            c = attn_kv(nl)
+            c["xk"] = jnp.zeros((nl, batch, fs, kv, hd), dt)
+            c["xv"] = jnp.zeros((nl, batch, fs, kv, hd), dt)
+            c["pos"] = jnp.zeros((), jnp.int32)
+            return c
+        if cfg.family == "ssm":
+            c = ssm_state((cfg.num_layers,))
+            c["pos"] = jnp.zeros((), jnp.int32)
+            return c
+        if cfg.family == "hybrid":
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            attn_seq = min(max_seq, cfg.sliding_window) \
+                if (self.ring_cache and cfg.attn_type == "sliding") \
+                else max_seq
+            attn_c = {"k": jnp.zeros((n_groups, batch, attn_seq, kv, hd),
+                                     dt),
+                      "v": jnp.zeros((n_groups, batch, attn_seq, kv, hd),
+                                     dt)}
+            return {"inner": ssm_state((n_groups, g - 1)),
+                    "tail": ssm_state((tail,)),
+                    "attn": attn_c,
+                    "pos": jnp.zeros((), jnp.int32)}
+        if cfg.family == "moe":
+            kd = cfg.first_k_dense
+            def mla_c(n):
+                return {"c": jnp.zeros((n, batch, max_seq, cfg.kv_lora_rank),
+                                       dt),
+                        "kr": jnp.zeros((n, batch, max_seq, cfg.qk_rope_dim),
+                                        dt)}
+            sub = mla_c if cfg.use_mla else attn_kv
+            return {"dense": sub(kd), "moe": sub(cfg.num_layers - kd),
+                    "pos": jnp.zeros((), jnp.int32)}
+        if kind == "grouped":                       # gemma3
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            local_seq = min(max_seq, cfg.sliding_window) \
+                if self.ring_cache else max_seq
+            def kv_c(n, seq=max_seq):
+                return {"k": jnp.zeros(n + (batch, seq, kv, hd), dt),
+                        "v": jnp.zeros(n + (batch, seq, kv, hd), dt)}
+            return {"inner": kv_c((n_groups, g - 1), local_seq),
+                    "tail": kv_c((tail,), local_seq),
+                    "global": kv_c((n_groups,)),
+                    "pos": jnp.zeros((), jnp.int32)}
+        c = attn_kv(cfg.num_layers)
+        if cfg.family == "moe":
+            pass
+        c["pos"] = jnp.zeros((), jnp.int32)
+        return c
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    # ------------------------------------------------------------- embed
+    def _embed_inputs(self, params, batch_d, mode):
+        cfg = self.cfg
+        tokens = batch_d["tokens"]
+        x = L.embed(cfg, params["embed"], tokens)
+        if cfg.family == "vlm" and mode != "decode":
+            patches = batch_d["patches"].astype(x.dtype)
+            patches = L.linear(params["proj"], patches)
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    # --------------------------------------------------------- stack run
+    def _run_stack(self, params, x, *, positions, mode, cache, lora, gates,
+                   enc=None, absorb=False):
+        """Dispatch to the family stack.  Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        kind, n_groups, g, tail = self._layout()
+        remat = self.remat and mode == "train"
+
+        def wrap(fn):
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            ) if remat else fn
+
+        def scan_layers(body, x, stack_p, stack_c, stack_l, length):
+            """Scan `body` over stacked params (+cache xs, +lora xs)."""
+            def f(carry, xs):
+                xx, aux = carry
+                p_i, c_i, l_i = xs
+                xx, nc, a = body(xx, p_i, c_i, l_i)
+                return (xx, aux + a), nc
+            xs = (stack_p, stack_c, stack_l)
+            (x, aux), new_c = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)),
+                                           xs, length=length,
+                                           unroll=length if
+                                           (self.unroll_layers and length)
+                                           else 1)
+            return x, new_c, aux
+
+        def no_cache(n):
+            return None
+
+        # ------- bodies ---------------------------------------------------
+        def dense_body(is_global=True):
+            def body(xx, p_i, c_i, l_i):
+                return wrap(lambda a, b, c, d: dense_layer(
+                    cfg, b, a, positions=positions, mode=mode, cache=c,
+                    lora=d, gates=gates, is_global=is_global, absorb=absorb)
+                )(xx, p_i, c_i, l_i)
+            return body
+
+        def ssm_body(xx, p_i, c_i, l_i):
+            return wrap(lambda a, b, c, d: ssm_layer(
+                cfg, b, a, mode=mode, cache=c, lora=d, gates=gates,
+                unroll=self.ssm_unroll)
+            )(xx, p_i, c_i, l_i)
+
+        lget = lora or {}
+
+        if cfg.family == "audio":
+            # encoder (train/prefill only)
+            if mode != "decode":
+                e = enc
+                def ebody(carry, xs):
+                    p_i, l_i = xs
+                    return encoder_layer(cfg, p_i, carry, l_i, gates), None
+                e, _ = jax.lax.scan(ebody, e,
+                                    (params["enc"], lget.get("enc")),
+                                    unroll=cfg.encoder_layers
+                                    if self.unroll_layers else 1)
+                e = L.norm(cfg, params["enc_ln"], e)
+            else:
+                e = None
+            def dbody(carry, xs):
+                xx, aux = carry
+                p_i, c_i, l_i = xs
+                xx, nc, a = decoder_layer(cfg, p_i, xx, positions=positions,
+                                          enc=e, mode=mode, cache=c_i,
+                                          lora=l_i, gates=gates)
+                return (xx, aux + a), nc
+            c_xs = None if mode == "train" else \
+                {k: cache[k] for k in ("k", "v", "xk", "xv")} if mode == "decode" \
+                else None
+            (x, aux), new_c = jax.lax.scan(
+                f=dbody, init=(x, jnp.zeros((), jnp.float32)),
+                xs=(params["dec"], c_xs, lget.get("dec")),
+                length=cfg.num_layers,
+                unroll=cfg.num_layers if self.unroll_layers else 1)
+            new_cache = None
+            if mode != "train" and new_c is not None:
+                new_cache = dict(new_c)
+            return x, new_cache, aux
+
+        if cfg.family == "ssm":
+            c_xs = {k: cache[k] for k in ("conv", "h")} if mode == "decode" \
+                else None
+            x, new_c, aux = scan_layers(ssm_body, x, params["layers"], c_xs,
+                                        lget.get("layers"), cfg.num_layers)
+            new_cache = None
+            if mode in ("prefill", "decode") and new_c is not None:
+                new_cache = dict(new_c)
+            return x, new_cache, aux
+
+        if cfg.family == "hybrid" or kind == "grouped":
+            is_hybrid = cfg.family == "hybrid"
+            inner_body = ssm_body if is_hybrid else dense_body(is_global=False)
+            special_body = dense_body(is_global=True)
+            special_params = params["shared_attn"] if is_hybrid \
+                else None  # per-group global layers for gemma3
+
+            inner_c = special_c = tail_c = None
+            if mode == "decode":
+                inner_c = cache["inner"]
+                tail_c = cache["tail"]
+                special_c = cache["attn"] if is_hybrid else cache["global"]
+
+            aux_total = jnp.zeros((), jnp.float32)
+
+            def group_step(carry, xs):
+                xx, aux = carry
+                in_p, sp_p, in_c, sp_c, in_l, sp_l = xs
+                xx, nic, a1 = scan_layers(inner_body, xx, in_p, in_c, in_l,
+                                          g - 1)
+                sp = special_params if is_hybrid else sp_p
+                xx, nsc, a2 = special_body(xx, sp, sp_c, sp_l)
+                return (xx, aux + a1 + a2), (nic, nsc)
+
+            sp_p_stack = None if is_hybrid else params["global_layers"]
+            in_l = (lget.get("inner"))
+            sp_l = (lget.get("special"))
+            (x, aux_total), (new_in_c, new_sp_c) = jax.lax.scan(
+                group_step, (x, aux_total),
+                (params["inner"], sp_p_stack, inner_c, special_c, in_l, sp_l),
+                length=n_groups,
+                unroll=n_groups if self.unroll_layers else 1)
+            # tail (length may be 0 — lax.scan handles the empty stack)
+            tl = lget.get("tail")
+            x, new_tail_c, a3 = scan_layers(inner_body, x, params["tail"],
+                                            tail_c, tl, tail)
+            aux_total = aux_total + a3
+
+            new_cache = None
+            if mode in ("prefill", "decode"):
+                key_sp = "attn" if is_hybrid else "global"
+                new_cache = {"inner": new_in_c, key_sp: new_sp_c,
+                             "tail": new_tail_c}
+            return x, new_cache, aux_total
+
+        if cfg.family == "moe":
+            kd = cfg.first_k_dense
+            aux_total = jnp.zeros((), jnp.float32)
+            dense_c = moe_c = None
+            if mode == "decode":
+                dense_c = {k: cache["dense"][k] for k in cache["dense"]}
+                moe_c = {k: cache["moe"][k] for k in cache["moe"]}
+            new_dense_c = None
+            if kd:
+                x, new_dense_c, a = scan_layers(dense_body(), x,
+                                                params["dense_layers"],
+                                                dense_c,
+                                                lget.get("dense_layers"), kd)
+                aux_total = aux_total + a
+            x, new_moe_c, a = scan_layers(dense_body(), x, params["layers"],
+                                          moe_c, lget.get("layers"),
+                                          cfg.num_layers - kd)
+            aux_total = aux_total + a
+            new_cache = None
+            if mode in ("prefill", "decode"):
+                new_cache = {"dense": new_dense_c, "moe": new_moe_c}
+            return x, new_cache, aux_total
+
+        # plain dense
+        c_xs = {"k": cache["k"], "v": cache["v"]} if mode == "decode" else None
+        x, new_c, aux = scan_layers(dense_body(), x, params["layers"], c_xs,
+                                    lget.get("layers"), cfg.num_layers)
+        new_cache = dict(new_c) if (mode in ("prefill", "decode")
+                                    and new_c is not None) else None
+        return x, new_cache, aux
+
+    # ------------------------------------------------------- entry points
+    def train_logits(self, params, batch_d, lora=None, gates=None):
+        """Full-sequence causal logits.  Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch_d, "train")
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        enc = None
+        if cfg.family == "audio":
+            f = batch_d["frames"].astype(x.dtype)
+            enc = f + sinusoidal_positions(f.shape[1], cfg.d_model, x.dtype)
+            x = x + sinusoidal_positions(s, cfg.d_model, x.dtype)
+        x, _, aux = self._run_stack(params, x, positions=positions,
+                                    mode="train", cache=None, lora=lora,
+                                    gates=gates, enc=enc)
+        x = L.norm(cfg, params["ln_f"], x)
+        return L.unembed(cfg, params["embed"], x), aux
+
+    def prefill(self, params, batch_d, max_seq: int, lora=None, gates=None):
+        """Process the prompt, build the cache.  Returns (last_logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch_d, "prefill")
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.arange(s)
+        enc = None
+        if cfg.family == "audio":
+            f = batch_d["frames"].astype(x.dtype)
+            enc = f + sinusoidal_positions(f.shape[1], cfg.d_model, x.dtype)
+            x = x + sinusoidal_positions(s, cfg.d_model, x.dtype)
+        x, pc, _ = self._run_stack(params, x, positions=positions,
+                                   mode="prefill", cache=None, lora=lora,
+                                   gates=gates, enc=enc)
+        x = L.norm(cfg, params["ln_f"], x[:, -1:])
+        logits = L.unembed(cfg, params["embed"], x)
+        cache = self._pad_cache(pc, b, s, max_seq)
+        return logits, cache
+
+    def _pad_cache(self, pc, b, s, max_seq):
+        """Embed prefill cache (len s) into a max_seq cache."""
+        cfg = self.cfg
+        full = self.init_cache(b, max_seq)
+
+        def place(dst, src):
+            if src is None or not hasattr(dst, "shape"):
+                return dst
+            if dst.ndim >= 3 and src.ndim == dst.ndim and \
+                    dst.shape != src.shape:
+                # sequence axis is the one that differs
+                ax = [i for i in range(dst.ndim)
+                      if dst.shape[i] != src.shape[i]]
+                if len(ax) == 1:
+                    a = ax[0]
+                    if dst.shape[a] >= src.shape[a]:
+                        pad = [(0, 0)] * dst.ndim
+                        pad[a] = (0, dst.shape[a] - src.shape[a])
+                        return jnp.pad(src.astype(dst.dtype), pad)
+                    # ring placement: keep the last `w` positions, rolled
+                    # so position p lands in slot p % w
+                    w, s_len = dst.shape[a], src.shape[a]
+                    last = jax.lax.slice_in_dim(src, s_len - w, s_len,
+                                                axis=a)
+                    return jnp.roll(last.astype(dst.dtype),
+                                    (s_len - w) % w, axis=a)
+            return src.astype(dst.dtype)
+
+        out = {}
+        for k, v in full.items():
+            if k == "pos":
+                out[k] = jnp.asarray(s, jnp.int32)
+            elif isinstance(v, dict) and pc.get(k) is not None:
+                out[k] = jax.tree.map(place, v, pc[k])
+            elif pc.get(k) is not None:
+                out[k] = place(v, pc[k])
+            else:
+                out[k] = v
+        return out
+
+    def decode_step(self, params, cache, tokens, lora=None, gates=None,
+                    absorb=False):
+        """One-token decode.  tokens: (B,1).  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = L.embed(cfg, params["embed"], tokens)
+        if cfg.family == "audio":
+            x = x + sinusoidal_at(pos, cfg.d_model, x.dtype)[None, None, :]
+        x, nc, _ = self._run_stack(params, x, positions=pos, mode="decode",
+                                   cache=cache, lora=lora, gates=gates,
+                                   absorb=absorb)
+        x = L.norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x)
+        new_cache = dict(nc) if nc is not None else {}
+        for k in cache:
+            if k not in new_cache or new_cache.get(k) is None:
+                new_cache[k] = cache[k]
+        new_cache["pos"] = pos + 1
+        return logits, new_cache

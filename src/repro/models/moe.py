@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+GShard-style one-hot dispatch einsums are O(T² · cf · k · d) — quadratic
+in tokens and unusable at 32k context.  We instead use the sort/scatter
+formulation: flatten (token, expert) assignments, sort by expert, compute
+in-expert positions, scatter into an (E·C, d) buffer, run the batched
+per-expert GEMMs, and combine with a weighted scatter-add.  FLOPs are the
+active-parameter count (k/E of dense), matching MODEL_FLOPS accounting.
+
+Expert weights carry the "experts" logical axis -> sharded over the
+``model`` mesh axis (expert parallelism); the scatter/gather to the
+expert-sharded buffer is where GSPMD inserts the all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def moe_spec(cfg) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    s = {
+        "router": {"w": L.P((d, e), ("d_model", None), "normal")},
+        "w_in": {"w": L.P((e, d, 2 * f), ("experts", "d_model", "d_ff_gated"),
+                          "fan_in")},
+        "w_out": {"w": L.P((e, f, d), ("experts", "d_ff", "d_model"),
+                           "fan_in")},
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = L.mlp_spec(cfg, cfg.moe_d_ff * cfg.num_shared_experts)
+    return s
+
+
+def _router(cfg, p, x_flat):
+    """Top-k routing.  Returns (expert_ids (T,k), probs (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    k = cfg.experts_per_token
+    gate = jax.nn.softmax(logits, axis=-1)
+    probs, ids = jax.lax.top_k(gate, k)
+    probs = probs / jnp.clip(probs.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * Σ_e f_e · p_e
+    e = cfg.num_experts
+    me = jnp.mean(gate, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(ids, e).sum(1)).astype(jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return ids, probs.astype(x_flat.dtype), aux
+
+
+def moe_ffn(cfg, p, x, lora=None, gates=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    f = cfg.moe_d_ff
+    import math as _math
+    cap = max(1, _math.ceil(cfg.capacity_factor * t * k / e))
+    x_flat = x.reshape(t, d)
+
+    ids, probs, aux = _router(cfg, p, x_flat)          # (T,k)
+
+    flat_e = ids.reshape(-1)                           # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_p = probs.reshape(-1)
+
+    # sort assignments by expert; position within expert via sorted scan
+    order = jnp.argsort(flat_e)
+    se, st, sp = flat_e[order], flat_tok[order], flat_p[order]
+    # position of each sorted entry inside its expert bucket
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[se]
+    keep = pos_in_e < cap                              # capacity drop
+
+    slot = se * cap + jnp.clip(pos_in_e, 0, cap - 1)
+    # dropped entries are redirected out-of-bounds and discarded (mode="drop")
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * cap)].set(
+        x_flat[st], mode="drop", unique_indices=False)
+    buf = buf.reshape(e, cap, d)
+
+    # batched per-expert SwiGLU (expert dim sharded over `model`)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"]["w"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"]["w"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # combine: weighted scatter-add back to tokens
+    y_slots = y_e.reshape(e * cap, d)[slot]            # (T*k, d)
+    y_flat = jnp.zeros((t, d), jnp.float32).at[st].add(
+        jnp.where(keep[:, None], y_slots * sp[:, None], 0).astype(jnp.float32))
+    y = y_flat.astype(x.dtype).reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        y = y + L.mlp(cfg, p["shared"], x,
+                      (lora or {}).get("mlp_in"), (lora or {}).get("mlp_out"),
+                      gates)
+    return y, aux

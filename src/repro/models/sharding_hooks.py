@@ -1,0 +1,35 @@
+"""Activation-sharding constraint hooks.
+
+Model code calls ``constrain(x, kind)`` at sharding-critical points
+(decode-cache updates, residual-stream layer boundaries, logits).  By
+default this is a no-op (CPU tests, single device).  The dry-run /
+production launcher installs a policy that pins the intended
+PartitionSpec, preventing GSPMD's propagation from drifting into
+involuntary full rematerialisation across deep unrolled stacks (observed
+with the 32k decode caches), and giving §Perf an explicit lever for
+activation-sharding experiments.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+_POLICY: Optional[Callable] = None
+
+
+def set_policy(policy: Optional[Callable]) -> None:
+    global _POLICY
+    _POLICY = policy
+
+
+def get_policy():
+    return _POLICY
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """kinds: cache_kv (B,S,KV,hd) | cache_mla (B,S,dc) | resid (B,S,d)
+    | logits (B,S,V)."""
+    if _POLICY is None:
+        return x
+    return _POLICY(x, kind)

@@ -1,0 +1,247 @@
+"""Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2) state-space blocks.
+
+TPU adaptation (DESIGN.md §2): the recurrence is *chunked* — sequences are
+split into chunks; within a chunk we use ``associative_scan`` (mamba-1) or
+the SSD matmul form (mamba-2, MXU-friendly), and a short ``lax.scan``
+carries the state across chunks.  Peak memory is O(chunk·d·N) instead of
+O(S·d·N), and mamba-2's intra-chunk work is pure matmul.
+
+Decode is the O(1) single-step recurrence against (conv_state, ssm_state).
+``repro/kernels/ssm_scan`` is the Pallas TPU kernel for the mamba-1 chunk
+scan; this module is the jnp path (CPU tests + dry-run lowering).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv.  x: (B,S,C); w: (k,C); b: (C,).
+
+    If ``conv_state`` (B,k-1,C) is given (decode, S==1), uses it as left
+    context and returns (y, new_state); else pads with zeros (train/prefill)
+    and returns (y, last k-1 inputs) for cache seeding.
+    """
+    k = w.shape[0]
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state, x], axis=1)       # (B,k-1+S,C)
+    else:
+        ctx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    dn = jax.lax.conv_dimension_numbers(ctx.shape, (k, 1, x.shape[-1]),
+                                        ("NHC", "HIO", "NHC"))
+    y = jax.lax.conv_general_dilated(
+        ctx.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID", dimension_numbers=dn,
+        feature_group_count=x.shape[-1]).astype(x.dtype)
+    y = y + b.astype(y.dtype)
+    new_state = ctx[:, -(k - 1):, :] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[-1]), x.dtype)
+    return y, new_state
+
+
+def _assoc_scan(a, b, axis):
+    """h_t = a_t h_{t-1} + b_t  via associative scan; returns all h_t."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    return jax.lax.associative_scan(combine, (a, b), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+
+def mamba1_spec(cfg) -> Dict[str, Any]:
+    d, di, n, dtr, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.dt_rank, cfg.ssm_conv)
+    return {
+        "in_proj": L.linear_spec(d, 2 * di, "d_model", "d_inner_gated"),
+        "conv_w": L.P((k, di), (None, "d_inner"), "fan_in"),
+        "conv_b": L.P((di,), ("d_inner",), "zeros"),
+        "x_proj": L.linear_spec(di, dtr + 2 * n, "d_inner", None),
+        "dt_proj": L.linear_spec(dtr, di, None, "d_inner", bias=True),
+        "A_log": L.P((di, n), ("d_inner", "d_state"), "ones"),
+        "D": L.P((di,), ("d_inner",), "ones"),
+        "out_proj": L.linear_spec(di, d, "d_inner", "d_model"),
+    }
+
+
+def _mamba1_inner(cfg, p, xin, dt, Bm, Cm, h0, chunk, unroll: int = 1):
+    """Chunked selective scan.  xin,dt: (B,S,di); Bm,Cm: (B,S,N);
+    h0: (B,di,N).  Returns (y (B,S,di), h_last)."""
+    b, s, di = xin.shape
+    n = Bm.shape[-1]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di,N)
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+
+    def seg(x):  # (B,S,...) -> (nc,B,c,...)
+        return x.reshape(b, nc, c, *x.shape[2:]).swapaxes(0, 1)
+
+    xs = (seg(dt.astype(jnp.float32)), seg(xin.astype(jnp.float32)),
+          seg(Bm.astype(jnp.float32)), seg(Cm.astype(jnp.float32)))
+
+    def step(h, inp):
+        dt_c, x_c, b_c, c_c = inp                           # (B,c,...)
+        da = jnp.exp(dt_c[..., None] * A)                   # (B,c,di,N)
+        dbx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]  # (B,c,di,N)
+        acum, hcum = _assoc_scan(da, dbx, axis=1)
+        h_all = acum * h[:, None] + hcum                    # (B,c,di,N)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs,
+                              unroll=min(unroll, nc))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    return y.astype(xin.dtype), h_last
+
+
+def mamba1_block(cfg, p, x, *, lora=None, gates=None,
+                 cache: Optional[Dict[str, jax.Array]] = None,
+                 mode: str = "train", chunk: int = 128, unroll: int = 1
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, d = x.shape
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    get = (lora or {}).get
+
+    xz = L.linear(p["in_proj"], x, get("ssm_in"), gates)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if mode == "decode" else None
+    xin, new_conv = causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+
+    xdbc = L.linear(p["x_proj"], xin, get("ssm_x"), gates)
+    dt_r, Bm, Cm = jnp.split(xdbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        L.linear(p["dt_proj"], dt_r, get("ssm_dt"), gates).astype(jnp.float32))
+
+    if mode == "decode":
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        da = jnp.exp(dt[:, 0, :, None] * A)                 # (B,di,N)
+        dbx = (dt[:, 0] * xin[:, 0].astype(jnp.float32))[..., None] \
+            * Bm[:, 0, None, :].astype(jnp.float32)
+        h = cache["h"].astype(jnp.float32) * da + dbx
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+        y, h = _mamba1_inner(cfg, p, xin, dt, Bm, Cm, h0, chunk, unroll)
+        new_cache = {"conv": new_conv, "h": h} if mode == "prefill" else None
+
+    y = y.astype(x.dtype) + xin * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return L.linear(p["out_proj"], y, get("ssm_out"), gates), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2-7b)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_spec(cfg) -> Dict[str, Any]:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    g, h = cfg.ssm_ngroups, cfg.ssm_nheads
+    proj = 2 * di + 2 * g * n + h
+    return {
+        "in_proj": L.linear_spec(d, proj, "d_model", "d_inner_gated"),
+        "conv_w": L.P((k, di + 2 * g * n), (None, "d_inner"), "fan_in"),
+        "conv_b": L.P((di + 2 * g * n,), ("d_inner",), "zeros"),
+        "A_log": L.P((h,), ("ssm_heads",), "ones"),
+        "D": L.P((h,), ("ssm_heads",), "ones"),
+        "dt_bias": L.P((h,), ("ssm_heads",), "zeros"),
+        "norm": L.rmsnorm_spec(di),
+        "out_proj": L.linear_spec(di, d, "d_inner", "d_model"),
+    }
+
+
+def _ssd_chunk(xh, bh, ch, logdec, dt, h0):
+    """One SSD chunk.  xh: (B,c,H,P); bh/ch: (B,c,H,N); logdec/dt: (B,c,H);
+    h0: (B,H,P,N).  Returns (y (B,c,H,P), h_out)."""
+    lcum = jnp.cumsum(logdec, axis=1)                       # (B,c,H)
+    # inter-chunk: contribution of the incoming state
+    y_inter = jnp.einsum("bhpn,bchn,bch->bchp", h0, ch, jnp.exp(lcum))
+    # intra-chunk: causal decay matmul form
+    dmat = lcum[:, :, None, :] - lcum[:, None, :, :]        # (B,c,c,H) t-s
+    cmask = jnp.tril(jnp.ones(dmat.shape[1:3], bool))
+    dmat = jnp.where(cmask[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.einsum("bchn,bshn->bcsh", ch, bh) * jnp.exp(dmat) \
+        * dt[:, None, :, :]                                 # (B,c,c,H)
+    y_intra = jnp.einsum("bcsh,bshp->bchp", m, xh)
+    # state update
+    l_last = lcum[:, -1:, :]                                # (B,1,H)
+    w = jnp.exp(l_last - lcum) * dt                         # (B,c,H)
+    h_out = h0 * jnp.exp(l_last)[:, 0, :, None, None] + \
+        jnp.einsum("bch,bchp,bchn->bhpn", w, xh, bh)
+    return y_inter + y_intra, h_out
+
+
+def mamba2_block(cfg, p, x, *, lora=None, gates=None,
+                 cache: Optional[Dict[str, jax.Array]] = None,
+                 mode: str = "train", chunk: int = 256, unroll: int = 1
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    g, nh, hp = cfg.ssm_ngroups, cfg.ssm_nheads, cfg.ssm_head_dim
+    get = (lora or {}).get
+
+    zxbcdt = L.linear(p["in_proj"], x, get("ssm_in"), gates)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+
+    conv_state = cache["conv"] if mode == "decode" else None
+    xbc, new_conv = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(
+        (dt_raw + p["dt_bias"].astype(dt_raw.dtype)).astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    logdec = dt * a                                         # (B,S,H)
+
+    xh = xin.reshape(b, s, nh, hp).astype(jnp.float32)
+    # groups broadcast to heads (g == 1 for zamba2)
+    bh = jnp.repeat(Bm.reshape(b, s, g, n), nh // g, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(Cm.reshape(b, s, g, n), nh // g, axis=2).astype(jnp.float32)
+
+    if mode == "decode":
+        dec = jnp.exp(logdec[:, 0])                         # (B,H)
+        h = cache["h"].astype(jnp.float32) * dec[:, :, None, None] + \
+            jnp.einsum("bh,bhp,bhn->bhpn", dt[:, 0], xh[:, 0], bh[:, 0])
+        y = jnp.einsum("bhpn,bhn->bhp", h, ch[:, 0])[:, None]  # (B,1,H,P)
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        c = min(chunk, s)
+        assert s % c == 0, (s, c)
+        nc = s // c
+
+        def seg(t):
+            return t.reshape(b, nc, c, *t.shape[2:]).swapaxes(0, 1)
+
+        def step(h0, inp):
+            y_c, h1 = _ssd_chunk(*inp, h0)
+            return h1, y_c
+
+        h0 = jnp.zeros((b, nh, hp, n), jnp.float32)
+        h, ys = jax.lax.scan(step, h0, (seg(xh), seg(bh), seg(ch),
+                                        seg(logdec), seg(dt)),
+                             unroll=min(unroll, nc))
+        y = ys.swapaxes(0, 1).reshape(b, s, nh, hp)
+        new_cache = {"conv": new_conv, "h": h} if mode == "prefill" else None
+
+    y = y + xh.reshape(y.shape) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, -1, di).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return L.linear(p["out_proj"], y, get("ssm_out"), gates), new_cache

@@ -1,0 +1,1 @@
+"""Serving runtime (paper Sec. IV): hybrid LLM-SLM engine, scheduler, RTT."""

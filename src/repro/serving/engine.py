@@ -1,0 +1,159 @@
+"""Hybrid LLM-SLM serving engine — the paper's inference phase end-to-end.
+
+Pipeline per request (Fig. 8):
+  1. Privacy detector (Alg. 2): sensitive -> SLM-only, never leaves device.
+  2. Parameter-free MoE router (Eq. 8-11): gate weights ω over the LoRA
+     expert bank for the SLM.
+  3. Token loop: SLM (with merged LoRA experts) and cloud LLM decode in
+     parallel; logits fused per Eq. 12-15; if the cloud misses the τ
+     budget the fusion weight is forced to w=1 (Sec. IV-D fallback).
+
+Both models run as JAX decode steps; "cloud" latency comes from
+serving/latency.py.  The dry-run lowers the same fused step onto the
+production mesh (launch/dryrun.py ``floe-fusion`` target).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fusion as FUS
+from repro.core import lora as LORA
+from repro.core.privacy import PrivacyDetector
+from repro.core.router import Router
+from repro.data import tokenizer as TOK
+from repro.serving.latency import LatencyModel
+
+
+@dataclass
+class GenStats:
+    tokens: int = 0
+    cloud_tokens: int = 0
+    fallback_tokens: int = 0
+    private: bool = False
+    latency_ms: List[float] = field(default_factory=list)
+    fusion_w: List[float] = field(default_factory=list)
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return float(np.mean(self.latency_ms)) if self.latency_ms else 0.0
+
+
+class HybridEngine:
+    """Floe inference engine pairing an edge SLM with a cloud LLM."""
+
+    def __init__(self, slm, slm_params, llm, llm_params, alignment_mlp,
+                 expert_bank=None, router: Optional[Router] = None,
+                 detector: Optional[PrivacyDetector] = None,
+                 latency: Optional[LatencyModel] = None,
+                 timeout_ms: float = 200.0, max_seq: int = 96):
+        self.slm, self.slm_params = slm, slm_params
+        self.llm, self.llm_params = llm, llm_params
+        self.mlp = alignment_mlp
+        self.bank = expert_bank
+        self.router = router
+        self.detector = detector or PrivacyDetector()
+        self.latency = latency or LatencyModel()
+        self.timeout_ms = timeout_ms
+        self.max_seq = max_seq
+        self._jit_cache: Dict[str, Any] = {}
+
+        self._slm_decode = jax.jit(
+            lambda p, c, t, lora, g: slm.decode_step(p, c, t, lora, g))
+        self._llm_decode = jax.jit(
+            lambda p, c, t: llm.decode_step(p, c, t))
+        self._fuse = jax.jit(
+            lambda sl, ll, arrived: FUS.fused_distribution(
+                self.mlp, sl, ll, arrived))
+
+    # ------------------------------------------------------------- public
+    def generate(self, prompt: str, max_new_tokens: int = 16,
+                 greedy: bool = True) -> Tuple[str, GenStats]:
+        stats = GenStats()
+        stats.private = self.detector.detect(prompt)
+        gates = None
+        lora = None
+        if self.router is not None and self.bank is not None:
+            gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
+            lora = LORA.bank_for_model(self.bank)
+
+        ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
+        toks = jnp.asarray([ids], jnp.int32)
+        s_logits, s_cache = self.slm.prefill(
+            self.slm_params, {"tokens": toks}, self.max_seq,
+            lora=lora, gates=gates)
+        use_cloud = not stats.private
+        if use_cloud:
+            l_logits, l_cache = self.llm.prefill(
+                self.llm_params, {"tokens": toks}, self.max_seq)
+
+        out_ids: List[int] = []
+        sl, ll = s_logits[:, 0], (l_logits[:, 0] if use_cloud else None)
+        for _ in range(max_new_tokens):
+            if use_cloud:
+                lat_ms, arrived = self.latency.token_latency_ms(
+                    self.timeout_ms)
+                p_out, w = self._fuse(sl, ll, jnp.asarray(arrived))
+                stats.cloud_tokens += int(arrived)
+                stats.fallback_tokens += int(not arrived)
+            else:
+                lat_ms, arrived = self.latency.edge_compute_ms, False
+                p_out = jax.nn.softmax(sl.astype(jnp.float32), -1)
+                w = jnp.ones((1,))
+            stats.latency_ms.append(float(lat_ms))
+            stats.fusion_w.append(float(w[0]))
+
+            nxt = int(jnp.argmax(p_out[0])) if greedy else int(
+                jax.random.categorical(jax.random.key(len(out_ids)),
+                                       jnp.log(jnp.clip(p_out[0], 1e-9))))
+            out_ids.append(nxt)
+            stats.tokens += 1
+            if nxt == TOK.EOS:
+                break
+            t = jnp.asarray([[nxt]], jnp.int32)
+            s_logits, s_cache = self._slm_decode(self.slm_params, s_cache, t,
+                                                 lora, gates)
+            sl = s_logits[:, 0]
+            if use_cloud:
+                l_logits, l_cache = self._llm_decode(self.llm_params,
+                                                     l_cache, t)
+                ll = l_logits[:, 0]
+        return TOK.decode(out_ids), stats
+
+
+class SoloEngine:
+    """Single-model greedy decoding (SLM-only / LLM-only baselines)."""
+
+    def __init__(self, lm, params, expert_bank=None,
+                 router: Optional[Router] = None, max_seq: int = 96):
+        self.lm, self.params = lm, params
+        self.bank, self.router = expert_bank, router
+        self.max_seq = max_seq
+        self._decode = jax.jit(
+            lambda p, c, t, lora, g: lm.decode_step(p, c, t, lora, g))
+
+    def generate(self, prompt: str, max_new_tokens: int = 16) -> str:
+        gates = lora = None
+        if self.router is not None and self.bank is not None:
+            gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
+            lora = LORA.bank_for_model(self.bank)
+        ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
+        toks = jnp.asarray([ids], jnp.int32)
+        logits, cache = self.lm.prefill(self.params, {"tokens": toks},
+                                        self.max_seq, lora=lora, gates=gates)
+        out: List[int] = []
+        cur = logits[:, 0]
+        for _ in range(max_new_tokens):
+            nxt = int(jnp.argmax(cur[0]))
+            out.append(nxt)
+            if nxt == TOK.EOS:
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray([[nxt]], jnp.int32),
+                                         lora, gates)
+            cur = logits[:, 0]
+        return TOK.decode(out)

@@ -1,0 +1,38 @@
+"""Network / device latency processes for the serving simulation.
+
+The paper's Sec. IV-D / Fig. 16 experiment varies RTT 0-500 ms against a
+~65 ms/token edge decode and a 200 ms fallback budget.  We model per-token
+cloud-logit arrival as RTT/2 each way + cloud compute, with seedable
+jitter, and expose the same "masked vs bounded" regimes.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+
+@dataclass
+class LatencyModel:
+    rtt_ms: float = 50.0
+    jitter_ms: float = 5.0
+    cloud_compute_ms: float = 20.0
+    edge_compute_ms: float = 65.0        # Jetson Orin NX (paper Fig. 16)
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def cloud_logits_arrival_ms(self) -> float:
+        """Time until the cloud LLM's logits are available at the edge."""
+        jitter = self._rng.gauss(0.0, self.jitter_ms)
+        return max(0.0, self.rtt_ms + self.cloud_compute_ms + jitter)
+
+    def token_latency_ms(self, timeout_ms: float) -> tuple[float, bool]:
+        """Per-token end-to-end latency under parallel edge/cloud decode
+        with the Sec. IV-D fallback.  Returns (latency_ms, cloud_used)."""
+        arrival = self.cloud_logits_arrival_ms()
+        if arrival <= self.edge_compute_ms:
+            return self.edge_compute_ms, True            # fully masked
+        if arrival <= timeout_ms:
+            return arrival, True                         # bounded wait
+        return max(self.edge_compute_ms, timeout_ms), False  # fallback

@@ -1,0 +1,77 @@
+"""Request scheduler: batching + per-request accounting on top of the
+hybrid engine (real-time framing of the paper: the detector doubles as a
+traffic offloader — private requests never wait on the network path).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import GenStats, HybridEngine
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: str
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+
+
+@dataclass
+class Response:
+    rid: int
+    text: str
+    stats: GenStats
+    wall_seconds: float
+
+
+class Scheduler:
+    """FIFO scheduler; private traffic is split from cloud-eligible
+    traffic so a network stall never blocks on-device requests."""
+
+    def __init__(self, engine: HybridEngine):
+        self.engine = engine
+        self.queue: List[Request] = []
+        self._next = 0
+
+    def submit(self, prompt: str, max_new_tokens: int = 16) -> int:
+        rid = self._next
+        self._next += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens, time.time()))
+        return rid
+
+    def run(self) -> List[Response]:
+        private, public = [], []
+        for r in self.queue:
+            (private if self.engine.detector.detect(r.prompt)
+             else public).append(r)
+        self.queue = []
+        out = []
+        # private first: strictly on-device, immune to network state
+        for r in private + public:
+            t0 = time.time()
+            text, stats = self.engine.generate(r.prompt, r.max_new_tokens)
+            out.append(Response(r.rid, text, stats, time.time() - t0))
+        return sorted(out, key=lambda x: x.rid)
+
+
+def summarize(responses: List[Response]) -> Dict[str, float]:
+    lat = [r.stats.mean_latency_ms for r in responses if r.stats.latency_ms]
+    return {
+        "requests": len(responses),
+        "private_frac": float(np.mean([r.stats.private for r in responses])),
+        "cloud_token_frac": float(np.mean(
+            [r.stats.cloud_tokens / max(1, r.stats.tokens)
+             for r in responses])),
+        "fallback_token_frac": float(np.mean(
+            [r.stats.fallback_tokens / max(1, r.stats.tokens)
+             for r in responses])),
+        "mean_token_latency_ms": float(np.mean(lat)) if lat else 0.0,
+        "p95_token_latency_ms": float(np.percentile(
+            [x for r in responses for x in r.stats.latency_ms], 95))
+        if lat else 0.0,
+    }

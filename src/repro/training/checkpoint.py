@@ -1,0 +1,65 @@
+"""Checkpointing: pytree <-> .npz with path-keyed arrays (no orbax here).
+
+Handles params, optimizer state, LoRA banks — any pytree of arrays plus
+scalar leaves.  Keys encode the tree path; restore rebuilds against a
+reference structure (so dtypes/shapes are validated).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+Tree = Any
+_SEP = "||"
+
+
+def _paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(prefix + [str(k)], node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(prefix + [f"#{i}"], v)
+        elif node is None:
+            flat[_SEP.join(prefix + ["@none"])] = np.zeros(0)
+        else:
+            flat[_SEP.join(prefix)] = np.asarray(node)
+    walk([], tree)
+    return flat
+
+
+def save(path: str, tree: Tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_paths(tree))
+
+
+def restore(path: str, like: Tree) -> Tree:
+    """Load arrays and rebuild with the structure of ``like``."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    stored = {k: data[k] for k in data.files}
+
+    def build(prefix, node):
+        if isinstance(node, dict):
+            return {k: build(prefix + [str(k)], node[k])
+                    for k in sorted(node)}
+        if isinstance(node, (list, tuple)):
+            vals = [build(prefix + [f"#{i}"], v) for i, v in enumerate(node)]
+            return type(node)(vals)
+        if node is None:
+            return None
+        key = _SEP.join(prefix)
+        arr = stored[key]
+        ref = np.asarray(node)
+        assert arr.shape == ref.shape, (key, arr.shape, ref.shape)
+        return jax.numpy.asarray(arr).astype(ref.dtype)
+
+    return build([], like)

@@ -1,0 +1,136 @@
+"""Optimizers (optax is not installed on this box — tiny self-contained
+implementations with pytree state).
+
+  adamw     — default for LoRA / small-model training
+  adafactor — factored second moments; the memory-sane choice for the
+              405B-class dry-runs (see EXPERIMENTS.md memory notes)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Tree], Tree]
+    update: Callable[[Tree, Tree, Tree], Tuple[Tree, Tree]]
+
+
+def adamw(schedule: Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0,
+          state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip_norm is not None:
+            g_norm = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(g_norm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = schedule(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(state_dtype)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(state_dtype)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        g_leaves, tdef = jax.tree.flatten(grads)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(
+            g_leaves, jax.tree.leaves(state["m"]),
+            jax.tree.leaves(state["v"]), jax.tree.leaves(params))]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(schedule: Schedule, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern).  Memory:
+    O(rows+cols) per matrix instead of O(rows·cols)."""
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def upd(g, s, p):
+            g32 = jnp.square(g.astype(jnp.float32)) + eps
+            if p.ndim >= 2:
+                vr = beta2 * s["vr"] + (1 - beta2) * g32.mean(-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g32.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                       eps))
+                u = g.astype(jnp.float32) * jax.lax.rsqrt(denom)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g32
+                u = g.astype(jnp.float32) * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        is_state = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        g_leaves, tdef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        s_leaves, sdef = jax.tree.flatten(state["s"], is_leaf=is_state)
+        outs = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_s = jax.tree.unflatten(sdef, [o[1] for o in outs])
+        return new_p, {"s": new_s, "step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,78 @@
+"""Training steps: masked next-token loss, LoRA-only (Floe local client
+step — frozen base) and full-parameter variants, with optional DP hooks.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp as DP
+from repro.core import lora as LORA
+
+Tree = Any
+
+
+def masked_cross_entropy(logits, targets, mask) -> jax.Array:
+    """logits (B,S,V) f32; targets (B,S) int; mask (B,S) float."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom
+
+
+def lora_loss_fn(lm, params, bank, batch, gates=None,
+                 aux_weight: float = 0.01) -> jax.Array:
+    """Loss of the frozen base + trainable LoRA bank (Floe client step)."""
+    logits, aux = lm.train_logits(
+        params, {k: v for k, v in batch.items()
+                 if k not in ("targets", "mask")},
+        lora=LORA.bank_for_model(bank), gates=gates)
+    # vlm/audio: logits cover frames/patches too — align to token tail
+    t = batch["targets"]
+    logits = logits[:, -t.shape[1]:]
+    return masked_cross_entropy(logits, t, batch["mask"]) + aux_weight * aux
+
+
+def make_lora_train_step(lm, opt, aux_weight: float = 0.01,
+                         dp_clip: Optional[float] = None,
+                         dp_noise: float = 0.0,
+                         donate: bool = False) -> Callable:
+    """jit'd (params, bank, opt_state, batch[, gates, dp_key]) ->
+    (bank, opt_state, loss)."""
+
+    def step(params, bank, opt_state, batch, gates=None, dp_key=None):
+        meta = {k: v for k, v in bank.items() if k.startswith("_")}
+        body = {k: v for k, v in bank.items() if not k.startswith("_")}
+        loss, grads = jax.value_and_grad(
+            lambda b: lora_loss_fn(lm, params, b, batch, gates, aux_weight)
+        )(body)
+        if dp_clip is not None:
+            grads, _ = DP.privatize(grads, dp_key, dp_clip, dp_noise)
+        body, opt_state = opt.update(grads, opt_state, body)
+        return {**body, **meta}, opt_state, loss
+
+    return jax.jit(step, static_argnames=()) if not donate else \
+        jax.jit(step, donate_argnums=(1, 2))
+
+
+def full_loss_fn(lm, params, batch, aux_weight: float = 0.01) -> jax.Array:
+    logits, aux = lm.train_logits(
+        params, {k: v for k, v in batch.items()
+                 if k not in ("targets", "mask")})
+    t = batch["targets"]
+    logits = logits[:, -t.shape[1]:]
+    return masked_cross_entropy(logits, t, batch["mask"]) + aux_weight * aux
+
+
+def make_full_train_step(lm, opt, aux_weight: float = 0.01) -> Callable:
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: full_loss_fn(lm, p, batch, aux_weight))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+    return jax.jit(step)

@@ -1,0 +1,251 @@
+"""Unit tests for the Floe core modules (Sec. III-IV mechanisms)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import aggregator as AGG
+from repro.core import dp as DP
+from repro.core import embedding as EMB
+from repro.core import fusion as FUS
+from repro.core import lora as LORA
+from repro.core import rank_select as RS
+from repro.core.privacy import PrivacyDetector, evaluate
+from repro.core.router import ExpertMeta, Router, expert_embedding
+from repro.data.tasks import TASK_DOMAINS, make_privacy_dataset
+from repro.models.model import LM
+
+
+# ------------------------------------------------------------------ LoRA
+
+
+def test_lora_bank_roundtrip(slm):
+    lm, _ = slm
+    ads = [LORA.init_adapter(lm, jax.random.key(i), rank=2 + i)
+           for i in range(3)]
+    bank = LORA.stack_adapters(ads)
+    back = LORA.adapter_of(bank, 1)
+    leaves_a = jax.tree.leaves({k: v for k, v in ads[1].items()
+                                if k != "_rank"})
+    leaves_b = jax.tree.leaves({k: v for k, v in back.items()
+                                if k != "_rank"})
+    for a, b in zip(leaves_a, leaves_b):
+        assert jnp.allclose(a, b)
+    assert int(back["_rank"]) == 3
+
+
+def test_lora_zero_B_means_zero_delta(slm):
+    lm, params = slm
+    bank = LORA.single_expert_bank(
+        LORA.init_adapter(lm, jax.random.key(0), rank=4))
+    toks = jnp.ones((2, 8), jnp.int32)
+    l1, _ = lm.train_logits(params, {"tokens": toks})
+    l2, _ = lm.train_logits(params, {"tokens": toks},
+                            lora=LORA.bank_for_model(bank),
+                            gates=jnp.ones((1,)))
+    assert float(jnp.abs(l1 - l2).max()) == 0.0
+
+
+def test_rank_mask_is_compression_operator():
+    m = LORA.rank_mask([2, 4], 8)
+    assert m.shape == (2, 8)
+    assert m[0].sum() == 2 and m[1].sum() == 4
+
+
+def test_average_adapters_weights(slm):
+    lm, _ = slm
+    a0 = LORA.init_adapter(lm, jax.random.key(0), rank=4)
+    a1 = LORA.init_adapter(lm, jax.random.key(1), rank=4)
+    avg = LORA.average_adapters([a0, a1], [1.0, 0.0])
+    x = jax.tree.leaves({k: v for k, v in avg.items() if k != "_rank"})[0]
+    y = jax.tree.leaves({k: v for k, v in a0.items() if k != "_rank"})[0]
+    assert jnp.allclose(x, y)
+
+
+# ----------------------------------------------------------- rank select
+
+
+def _toy_lut():
+    lut = RS.LUT()
+    for r in (4, 8, 16):
+        lut.mem[("dev", r)] = r * 10.0
+        lut.lat[("dev", r)] = r * 1.0
+    return lut
+
+
+def test_alg1_picks_largest_feasible():
+    lut = _toy_lut()
+    assert RS.select_rank((4, 8, 16), 1000.0, 100.0, lut, "dev") == 16
+    # memory binds at 8
+    assert RS.select_rank((4, 8, 16), 90.0, 100.0, lut, "dev") == 8
+    # latency binds at 4
+    assert RS.select_rank((4, 8, 16), 1000.0, 5.0, lut, "dev") == 4
+    # infeasible
+    assert RS.select_rank((4, 8, 16), 10.0, 0.5, lut, "dev") is None
+
+
+def test_lut_build_monotone():
+    cfg = get_config("floe-slm-2b")
+    lut = RS.build_lut(cfg, ranks=(4, 8, 16))
+    for dev in RS.DEVICE_CLASSES:
+        mems = [lut.predict_memory(dev.name, r) for r in (4, 8, 16)]
+        lats = [lut.predict_latency(dev.name, r) for r in (4, 8, 16)]
+        assert mems == sorted(mems) and lats == sorted(lats)
+
+
+# ---------------------------------------------------------------- router
+
+
+def _mk_router():
+    metas = [ExpertMeta(name, expert_embedding(samples), i)
+             for i, (name, samples) in enumerate(
+                 list(TASK_DOMAINS.items())[:4])]
+    return Router(metas)
+
+
+def test_router_gates_sum_to_one():
+    r = _mk_router()
+    g = r.gate_weights("math: compute 5 plus 5 =")
+    assert abs(g.sum() - 1.0) < 1e-5
+    assert (g >= 0).all()
+
+
+def test_router_routes_to_matching_domain():
+    r = _mk_router()
+    assert r.top1("math: compute 17 plus 3 =").name == "arithmetic"
+    assert r.top1("sort ascending: 9 2 7 ->").name == "sorting"
+
+
+def test_router_plug_and_play():
+    r = _mk_router()
+    n0 = len(r.experts)
+    r.add_expert(ExpertMeta("medical",
+                            expert_embedding(["patient diagnosis chart"]),
+                            n0))
+    assert r.top1("the patient diagnosis chart shows").name == "medical"
+    r.remove_expert("medical")
+    assert len(r.experts) == n0
+
+
+# ------------------------------------------------------------ aggregator
+
+
+def test_kmeans_silhouette_separates_clusters():
+    rng = np.random.RandomState(0)
+    a = rng.normal(0, 0.05, (10, 8)) + np.r_[[1] + [0] * 7]
+    b = rng.normal(0, 0.05, (10, 8)) + np.r_[[0] * 7 + [1]]
+    x = np.vstack([a, b])
+    labels, m, score = AGG.cluster_modules(x)
+    assert m == 2 and score > 0.5
+    assert len(set(labels[:10])) == 1 and len(set(labels[10:])) == 1
+
+
+def test_staleness_weighting_decays(slm):
+    lm, _ = slm
+    fresh = LORA.init_adapter(lm, jax.random.key(0), rank=4)
+    stale = LORA.init_adapter(lm, jax.random.key(1), rank=4)
+    embs = np.stack([AGG.encode_module(fresh, ["math compute"]),
+                     AGG.encode_module(stale, ["math compute plus"])])
+    res = AGG.aggregate_clustered([fresh, stale], embs,
+                                  staleness=[0.0, 10.0], beta=1.0)
+    # with huge staleness the aggregate ≈ fresh adapter
+    out = jax.tree.leaves({k: v for k, v in res.experts[0].items()
+                           if k != "_rank"})[0]
+    ref = jax.tree.leaves({k: v for k, v in fresh.items()
+                           if k != "_rank"})[0]
+    assert float(jnp.abs(out - ref).max()) < 1e-3
+
+
+# ---------------------------------------------------------------- fusion
+
+
+def test_fusion_is_convex_combination():
+    key = jax.random.key(0)
+    mlp = FUS.init_alignment(key, 64)
+    sl = jax.random.normal(jax.random.key(1), (4, 64))
+    ll = jax.random.normal(jax.random.key(2), (4, 64))
+    p, w = FUS.fused_distribution(mlp, sl, ll)
+    assert jnp.allclose(p.sum(-1), 1.0, atol=1e-5)
+    assert (p >= 0).all()
+    assert ((w >= 0) & (w <= 1)).all()
+
+
+def test_fallback_forces_local():
+    mlp = FUS.init_alignment(jax.random.key(0), 32)
+    sl = jax.random.normal(jax.random.key(1), (2, 32))
+    ll = jax.random.normal(jax.random.key(2), (2, 32))
+    p, w = FUS.fused_distribution(mlp, sl, ll, llm_arrived=False)
+    assert jnp.allclose(w, 1.0)
+    assert jnp.allclose(p, jax.nn.softmax(sl, -1), atol=1e-5)
+
+
+def test_alignment_training_reduces_nll():
+    key = jax.random.key(0)
+    v = 32
+    mlp = FUS.init_alignment(key, v)
+    # SLM is confidently right; LLM is noise -> learning w->1 helps
+    targets = jax.random.randint(jax.random.key(1), (16,), 0, v)
+    sl = 5.0 * jax.nn.one_hot(targets, v) \
+        + 0.1 * jax.random.normal(jax.random.key(2), (16, v))
+    ll = jax.random.normal(jax.random.key(3), (16, v))
+    batches = [(sl, ll, targets)]
+    mlp2, losses = FUS.train_alignment(mlp, batches, lr=5e-2, steps=50)
+    assert losses[-1] < losses[0]
+
+
+# --------------------------------------------------------------- privacy
+
+
+def test_privacy_stage1_rules():
+    det = PrivacyDetector()
+    assert det.regex_match("call me at 415-555-1234 today")
+    assert det.regex_match("card 4242 4242 4242 4242 thanks")
+    assert det.ner_match("my doctor changed my medication")
+    assert not det.regex_match("what is the capital of france")
+
+
+def test_privacy_f1_on_cogenesis_standin():
+    det = PrivacyDetector()
+    data = make_privacy_dataset(600, seed=1)
+    m = evaluate(det, data)
+    assert m["f1"] > 0.9, m
+    assert m["recall"] > 0.85, m
+
+
+# -------------------------------------------------------------------- dp
+
+
+def test_dp_clip_bounds_norm():
+    tree = {"a": jnp.ones((8, 8)) * 5.0, "b": jnp.ones((3,))}
+    clipped, n = DP.clip_by_global_norm(tree, 1.0)
+    assert float(DP.global_norm(clipped)) <= 1.0 + 1e-5
+
+
+def test_dp_noise_statistics():
+    tree = {"a": jnp.zeros((2000,))}
+    noised, _ = DP.privatize(tree, jax.random.key(0), clip=1.0,
+                             noise_multiplier=0.5)
+    std = float(jnp.std(noised["a"]))
+    assert 0.4 < std < 0.6
+
+
+def test_epsilon_monotone():
+    e1 = DP.epsilon_estimate(0.5, 100)
+    e2 = DP.epsilon_estimate(1.0, 100)
+    e3 = DP.epsilon_estimate(1.0, 400)
+    assert e2 < e1 and e3 > e2
+
+
+# ------------------------------------------------------------- embedding
+
+
+def test_embedding_deterministic_and_similar():
+    a = EMB.embed_text("solve the quadratic equation")
+    b = EMB.embed_text("solve the quadratic equation")
+    assert np.allclose(a, b)
+    sim_same = EMB.cosine(EMB.embed_text("math: compute 3 plus 4"),
+                          EMB.embed_text("math: compute 9 plus 1"))
+    sim_diff = EMB.cosine(EMB.embed_text("math: compute 3 plus 4"),
+                          EMB.embed_text("the patient diagnosis chart"))
+    assert sim_same > sim_diff

@@ -1,0 +1,119 @@
+"""Hypothesis property-based tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp as DP
+from repro.core import embedding as EMB
+from repro.core import fusion as FUS
+from repro.core import lora as LORA
+from repro.core import rank_select as RS
+from repro.core.router import ExpertMeta, Router
+from repro.data import tokenizer as TOK
+
+SET = dict(max_examples=25, deadline=None)
+
+text_st = st.text(
+    alphabet=st.characters(min_codepoint=32, max_codepoint=0x2FF),
+    min_size=1, max_size=120)
+
+
+@given(text_st)
+@settings(**SET)
+def test_tokenizer_roundtrip(s):
+    assert TOK.decode(TOK.encode(s, bos=True, eos=True)) == s
+
+
+@given(text_st)
+@settings(**SET)
+def test_embedding_unit_norm(s):
+    v = EMB.embed_text(s)
+    n = np.linalg.norm(v)
+    assert n == 0.0 or abs(n - 1.0) < 1e-5
+
+
+@given(st.lists(text_st, min_size=2, max_size=5), text_st)
+@settings(**SET)
+def test_router_gates_are_distribution(domains, prompt):
+    metas = [ExpertMeta(f"e{i}", EMB.embed_text(d), i)
+             for i, d in enumerate(domains)]
+    g = Router(metas).gate_weights(prompt)
+    assert abs(g.sum() - 1.0) < 1e-4
+    assert (g >= 0).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 10.0))
+@settings(**SET)
+def test_dp_clip_never_exceeds(seed, clip):
+    x = jax.random.normal(jax.random.key(seed), (64,)) * 10
+    clipped, _ = DP.clip_by_global_norm({"x": x}, clip)
+    assert float(DP.global_norm(clipped)) <= clip * (1 + 1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_fusion_convexity_property(seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    v = 32
+    sl = jax.random.normal(ks[0], (3, v)) * 3
+    ll = jax.random.normal(ks[1], (3, v)) * 3
+    w = jax.random.uniform(ks[2], (3,))
+    p = FUS.fuse(jax.nn.softmax(sl, -1), jax.nn.softmax(ll, -1), w)
+    assert np.allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)
+    # fused prob bounded by the two inputs' min/max per coordinate
+    lo = jnp.minimum(jax.nn.softmax(sl, -1), jax.nn.softmax(ll, -1))
+    hi = jnp.maximum(jax.nn.softmax(sl, -1), jax.nn.softmax(ll, -1))
+    assert bool((p >= lo - 1e-6).all() and (p <= hi + 1e-6).all())
+
+
+@given(st.lists(st.sampled_from([4, 8, 16, 32, 64]), min_size=1,
+                max_size=5, unique=True),
+       st.floats(1.0, 1e4), st.floats(0.01, 1e4))
+@settings(**SET)
+def test_alg1_result_satisfies_constraints(ranks, budget, deadline):
+    lut = RS.LUT()
+    for r in ranks:
+        lut.mem[("d", r)] = r * 7.0
+        lut.lat[("d", r)] = r * 0.3
+    sel = RS.select_rank(ranks, budget, deadline, lut, "d")
+    if sel is None:
+        # no feasible rank may exist
+        assert all(lut.mem[("d", r)] > budget or lut.lat[("d", r)] > deadline
+                   for r in ranks)
+    else:
+        assert lut.mem[("d", sel)] <= budget
+        assert lut.lat[("d", sel)] <= deadline
+        # maximality: nothing larger is feasible
+        for r in ranks:
+            if r > sel:
+                assert (lut.mem[("d", r)] > budget
+                        or lut.lat[("d", r)] > deadline)
+
+
+@given(st.integers(2, 5), st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_average_adapters_convex_hull(n, seed):
+    """Aggregated params lie in the per-coordinate convex hull (Eq. 4)."""
+    rng = np.random.RandomState(seed)
+    ads = []
+    for i in range(n):
+        ads.append({"s": {"t": {"A": jnp.asarray(rng.randn(2, 4, 8),
+                                                 jnp.float32),
+                                "B": jnp.asarray(rng.randn(2, 8, 4),
+                                                 jnp.float32)}},
+                    "_rank": jnp.asarray(4)})
+    avg = LORA.average_adapters(ads)
+    stack = np.stack([np.asarray(a["s"]["t"]["A"]) for a in ads])
+    out = np.asarray(avg["s"]["t"]["A"])
+    assert (out >= stack.min(0) - 1e-5).all()
+    assert (out <= stack.max(0) + 1e-5).all()
+
+
+@given(st.integers(1, 64), st.integers(1, 64))
+@settings(**SET)
+def test_rank_mask_counts(r, r_max):
+    if r > r_max:
+        r, r_max = r_max, r
+    m = LORA.rank_mask([r], r_max)
+    assert int(m.sum()) == r

@@ -1,0 +1,88 @@
+"""Serving-phase tests: hybrid engine, fallback behaviour, scheduler
+(paper Sec. IV-D + Fig. 16 regimes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import fusion as FUS
+from repro.models.model import LM
+from repro.serving.engine import HybridEngine, SoloEngine
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import Scheduler, summarize
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    scfg = get_config("floe-slm-2b").reduced()
+    lcfg = get_config("floe-llm-7b").reduced()
+    slm, llm = LM(scfg, remat=False), LM(lcfg, remat=False)
+    sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
+    mlp = FUS.init_alignment(jax.random.key(2), scfg.vocab_size)
+    return slm, sp, llm, lp, mlp
+
+
+def test_latency_masked_regime():
+    lat = LatencyModel(rtt_ms=20, jitter_ms=0, cloud_compute_ms=10,
+                       edge_compute_ms=65)
+    ms, cloud = lat.token_latency_ms(200.0)
+    assert ms == 65.0 and cloud          # fully masked by edge compute
+
+
+def test_latency_bounded_regime():
+    lat = LatencyModel(rtt_ms=500, jitter_ms=0, cloud_compute_ms=20,
+                       edge_compute_ms=65)
+    ms, cloud = lat.token_latency_ms(200.0)
+    assert not cloud and ms <= 200.0     # fallback caps the wait
+
+
+def test_private_prompt_never_uses_cloud(engine_parts):
+    slm, sp, llm, lp, mlp = engine_parts
+    eng = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48)
+    _, stats = eng.generate("my ssn is 123-45-6789 please file it",
+                            max_new_tokens=3)
+    assert stats.private and stats.cloud_tokens == 0
+
+
+def test_fallback_under_catastrophic_rtt(engine_parts):
+    slm, sp, llm, lp, mlp = engine_parts
+    eng = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                       latency=LatencyModel(rtt_ms=1000, jitter_ms=0),
+                       timeout_ms=200.0)
+    _, stats = eng.generate("what is the capital of france",
+                            max_new_tokens=4)
+    assert stats.fallback_tokens == stats.tokens      # all fell back
+    assert all(w == 1.0 for w in stats.fusion_w)      # w -> 1 (Sec. IV-D)
+    assert max(stats.latency_ms) <= 200.0             # bounded
+
+
+def test_good_network_uses_cloud(engine_parts):
+    slm, sp, llm, lp, mlp = engine_parts
+    eng = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                       latency=LatencyModel(rtt_ms=10, jitter_ms=0),
+                       timeout_ms=200.0)
+    _, stats = eng.generate("translate to french: water ->",
+                            max_new_tokens=4)
+    assert stats.cloud_tokens == stats.tokens
+    assert max(stats.latency_ms) <= 66.0              # masked by edge
+
+
+def test_scheduler_summary(engine_parts):
+    slm, sp, llm, lp, mlp = engine_parts
+    eng = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48)
+    sched = Scheduler(eng)
+    sched.submit("my password is hunter2 reset it", 3)
+    sched.submit("explain how rainbows form", 3)
+    res = sched.run()
+    s = summarize(res)
+    assert s["requests"] == 2
+    assert 0.0 < s["private_frac"] < 1.0
+    assert [r.rid for r in res] == [0, 1]
+
+
+def test_solo_engine_runs(engine_parts):
+    slm, sp, *_ = engine_parts
+    eng = SoloEngine(slm, sp, max_seq=48)
+    out = eng.generate("math: compute 1 plus 1 =", max_new_tokens=3)
+    assert isinstance(out, str)
