@@ -168,12 +168,17 @@ def _train_alignment(slm, sp, res, llm, lp, llm_bank, mlp, seed):
 def fused_accuracy(sys: System, dataset, gates_fn=None,
                    fixed_w: Optional[float] = None,
                    llm_only: bool = False, slm_which: str = "floe",
-                   slm_only: bool = False) -> float:
-    """Teacher-forced answer accuracy of the fused (or solo) system."""
+                   slm_only: bool = False, batch: int = 8,
+                   use_kernel: bool = False) -> float:
+    """Teacher-forced answer accuracy of the fused (or solo) system.
+
+    use_kernel routes the Eq. 15 combination through the Pallas
+    ``logit_fusion`` kernel (ragged-batch ops path) instead of the
+    unfused jnp chain — the batched serving hot path."""
     hits = total = 0
     router = sys.sim_result.server.router()
-    for i in range(0, len(dataset), 8):
-        chunk = dataset[i:i + 8]
+    for i in range(0, len(dataset), batch):
+        chunk = dataset[i:i + batch]
         b = PIPE.make_batch(chunk, sys.seq_len)
         toks = jnp.asarray(b["tokens"])
         if slm_only or not llm_only:
@@ -191,8 +196,13 @@ def fused_accuracy(sys: System, dataset, gates_fn=None,
             probs = jax.nn.softmax(sl.astype(jnp.float32), -1)
         else:
             B, S, V = sl.shape
-            p, w = FUS.fused_distribution(
-                sys.mlp, sl.reshape(B * S, V), ll.reshape(B * S, V))
+            if use_kernel:
+                p, w = FUS.fused_distribution_kernel(
+                    sys.mlp, sl.reshape(B * S, V), ll.reshape(B * S, V),
+                    jnp.ones((B * S,), bool))
+            else:
+                p, w = FUS.fused_distribution(
+                    sys.mlp, sl.reshape(B * S, V), ll.reshape(B * S, V))
             if fixed_w is not None:
                 p = FUS.fuse(jax.nn.softmax(sl.reshape(B * S, V), -1),
                              jax.nn.softmax(ll.reshape(B * S, V), -1),

@@ -14,6 +14,7 @@ import traceback
 MODULES = [
     "benchmarks.privacy_f1",
     "benchmarks.fig16_rtt",
+    "benchmarks.throughput",
     "benchmarks.fig11_membudget",
     "benchmarks.fig10_efficiency",
     "benchmarks.table3_methods",

@@ -10,24 +10,34 @@ from repro.data.tasks import make_dataset
 DOMAINS = ["arithmetic", "translation", "sentiment"]   # Table IV's 3 columns
 
 
-def run():
+def run(batch: int = 0):
+    """batch>0: evaluate the hybrid column in ``batch``-wide chunks with
+    Eq. 15 routed through the Pallas logit_fusion kernel (the batched
+    serving hot path) instead of the unfused jnp chain."""
     sys = C.get_system()
     router = sys.sim_result.server.router()
 
     def routed(prompt):
         return router.gate_weights(prompt)
 
+    use_kernel = batch > 0
+    chunk = batch if batch > 0 else 8
     out = {}
     t0 = time.perf_counter()
     for dom in DOMAINS:
         test = make_dataset(dom, 48, seed=77)
-        out[(dom, "LLM-only")] = C.fused_accuracy(sys, test, llm_only=True)
+        out[(dom, "LLM-only")] = C.fused_accuracy(sys, test, llm_only=True,
+                                                  batch=chunk)
         out[(dom, "SLM-only")] = C.fused_accuracy(sys, test, slm_only=True,
-                                                  gates_fn=routed)
-        out[(dom, "LLM+SLM")] = C.fused_accuracy(sys, test, gates_fn=routed)
+                                                  gates_fn=routed,
+                                                  batch=chunk)
+        out[(dom, "LLM+SLM")] = C.fused_accuracy(sys, test, gates_fn=routed,
+                                                 batch=chunk,
+                                                 use_kernel=use_kernel)
     us = (time.perf_counter() - t0) * 1e6 / len(out)
+    tag = f"table4/batch={batch}/" if batch > 0 else "table4/"
     for (dom, method), acc in out.items():
-        C.row(f"table4/{dom}/{method}", us, f"acc={acc:.3f}")
+        C.row(f"{tag}{dom}/{method}", us, f"acc={acc:.3f}")
     # hybrid should match-or-beat the better standalone on average
     import numpy as np
     hyb = np.mean([out[(d, "LLM+SLM")] for d in DOMAINS])
@@ -36,3 +46,10 @@ def run():
     C.row("table4/hybrid_vs_best_standalone", 0,
           f"{hyb:.3f} vs {best:.3f}")
     return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=0)
+    run(batch=ap.parse_args().batch)

@@ -3,7 +3,11 @@ detector -> router -> parallel SLM/LLM decode -> logit fusion with the
 200 ms timeout fallback, over a batch of requests with varying network
 conditions.
 
-    PYTHONPATH=src python examples/hybrid_serve.py [--rtt-ms 50]
+    PYTHONPATH=src python examples/hybrid_serve.py [--rtt-ms 50] [--batch 4]
+
+``--batch N`` (N>1) switches to the continuous-batching engine: all
+cloud-eligible prompts decode in one lockstep batch through the Pallas
+``logit_fusion`` kernel while private prompts share an SLM-only batch.
 """
 import argparse
 
@@ -12,9 +16,10 @@ import jax
 from repro.configs import get_config
 from repro.core import fusion as FUS
 from repro.models.model import LM
-from repro.serving.engine import HybridEngine
+from repro.serving.engine import BatchedHybridEngine, HybridEngine
 from repro.serving.latency import LatencyModel
-from repro.serving.scheduler import Scheduler, summarize
+from repro.serving.scheduler import (ContinuousBatchScheduler, Scheduler,
+                                     summarize)
 
 PROMPTS = [
     "math: compute 12 plus 7 =",
@@ -31,6 +36,8 @@ def main():
     ap.add_argument("--rtt-ms", type=float, default=50.0)
     ap.add_argument("--timeout-ms", type=float, default=200.0)
     ap.add_argument("--tokens", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="decode-batch width; >1 = continuous batching")
     args = ap.parse_args()
 
     slm_cfg = get_config("floe-slm-2b").reduced()
@@ -41,10 +48,18 @@ def main():
 
     for rtt in (args.rtt_ms, 400.0):
         print(f"\n=== network RTT {rtt:.0f} ms ===")
-        eng = HybridEngine(slm, sp, llm, lp, mlp,
-                           latency=LatencyModel(rtt_ms=rtt, seed=3),
-                           timeout_ms=args.timeout_ms, max_seq=64)
-        sched = Scheduler(eng)
+        if args.batch > 1:
+            eng = BatchedHybridEngine(
+                slm, sp, llm, lp, mlp,
+                latency=LatencyModel(rtt_ms=rtt, seed=3),
+                timeout_ms=args.timeout_ms, max_seq=64,
+                batch_size=args.batch)
+            sched = ContinuousBatchScheduler(eng)
+        else:
+            eng = HybridEngine(slm, sp, llm, lp, mlp,
+                               latency=LatencyModel(rtt_ms=rtt, seed=3),
+                               timeout_ms=args.timeout_ms, max_seq=64)
+            sched = Scheduler(eng)
         for p in PROMPTS:
             sched.submit(p, max_new_tokens=args.tokens)
         responses = sched.run()

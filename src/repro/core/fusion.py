@@ -61,6 +61,30 @@ def fused_distribution(mlp, slm_logits: jax.Array, llm_logits: jax.Array,
     return fuse(p_slm, p_llm, w), w
 
 
+def fused_distribution_kernel(mlp, slm_logits: jax.Array,
+                              llm_logits: jax.Array, arrived: jax.Array,
+                              block_b: int = 4
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Batched Sec. IV-C/IV-D step routed through the Pallas kernel.
+
+    The fusion weight w (Eq. 14) needs the two probability vectors as
+    MLP input, so those softmaxes are computed here either way; the
+    Eq. 15 output distribution is then produced by the ``logit_fusion``
+    kernel, which re-derives both softmaxes from the raw logits in VMEM
+    rather than re-reading the (B, V) probability tensors from HBM —
+    a win at full 256k vocab on TPU, a wash at CPU-test scale.
+    arrived: (B,) bool; rows whose cloud logits missed τ get w=1
+    (per-row fallback).  Returns (P_out (B,V), w (B,))."""
+    from repro.kernels.logit_fusion.ops import fused_probs_masked
+    p_slm = jax.nn.softmax(slm_logits.astype(jnp.float32), axis=-1)
+    p_llm = jax.nn.softmax(llm_logits.astype(jnp.float32), axis=-1)
+    w = fusion_weight(mlp, p_slm, p_llm)
+    arrived = jnp.asarray(arrived, bool)
+    p = fused_probs_masked(slm_logits, llm_logits, w, arrived,
+                           block_b=block_b)
+    return p, jnp.where(arrived, w, 1.0)
+
+
 # ---------------------------------------------------------------------------
 # Alignment-MLP training (distillation-style: maximise log-prob of the
 # reference next token under the fused distribution)

@@ -6,32 +6,42 @@ computes the two stable softmaxes and the convex combination without
 materialising intermediate probability tensors in HBM.  At 128k-262k
 vocab entries the fused op is memory-bound: 2 reads + 1 write instead of
 the 6 HBM round-trips of the unfused softmax/softmax/lerp chain.
+
+The optional per-row ``arrived`` mask implements the Sec. IV-D timeout
+fallback in-kernel: rows whose cloud logits missed the τ budget get
+w forced to 1 (pure-SLM output) without a separate masking pass.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _fusion_kernel(sl_ref, ll_ref, w_ref, o_ref):
+def _fusion_kernel(sl_ref, ll_ref, w_ref, a_ref, o_ref):
     sl = sl_ref[...].astype(jnp.float32)          # (bb, V)
     ll = ll_ref[...].astype(jnp.float32)
     w = w_ref[...].astype(jnp.float32)            # (bb, 1)
+    a = a_ref[...]                                # (bb, 1) int32 0/1
+    w = jnp.where(a != 0, w, 1.0)                 # Sec. IV-D: miss -> w=1
     p_s = jax.nn.softmax(sl, axis=-1)
     p_l = jax.nn.softmax(ll, axis=-1)
     o_ref[...] = (w * p_s + (1.0 - w) * p_l).astype(o_ref.dtype)
 
 
-def fuse_logits(slm_logits, llm_logits, w, *, block_b: int = 4,
+def fuse_logits(slm_logits, llm_logits, w, *, arrived=None, block_b: int = 4,
                 interpret: bool = False):
-    """slm/llm logits: (B, V); w: (B,) -> fused probabilities (B, V)."""
+    """slm/llm logits: (B, V); w: (B,); arrived: optional (B,) bool —
+    rows with arrived=False are forced to w=1.  -> fused probs (B, V)."""
     b, v = slm_logits.shape
     bb = min(block_b, b)
     assert b % bb == 0, (b, bb)
     w2 = w.reshape(b, 1).astype(slm_logits.dtype)
+    if arrived is None:
+        a2 = jnp.ones((b, 1), jnp.int32)
+    else:
+        a2 = arrived.reshape(b, 1).astype(jnp.int32)
     return pl.pallas_call(
         _fusion_kernel,
         grid=(b // bb,),
@@ -39,8 +49,9 @@ def fuse_logits(slm_logits, llm_logits, w, *, block_b: int = 4,
             pl.BlockSpec((bb, v), lambda i: (i, 0)),
             pl.BlockSpec((bb, v), lambda i: (i, 0)),
             pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bb, v), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, v), jnp.float32),
         interpret=interpret,
-    )(slm_logits, llm_logits, w2)
+    )(slm_logits, llm_logits, w2, a2)

@@ -1,9 +1,16 @@
-"""Jit'd wrapper for the fused logit-fusion kernel."""
+"""Jit'd wrappers for the fused logit-fusion kernel.
+
+``fused_probs`` is the raw fixed-shape dispatch; ``fused_probs_masked``
+is the serving entry point: it pads a ragged decode batch up to a
+``block_b`` multiple (padded rows are masked out and sliced away) and
+threads the per-row Sec. IV-D ``arrived`` fallback mask into the kernel.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.logit_fusion.kernel import fuse_logits
 
@@ -16,3 +23,27 @@ def _on_cpu() -> bool:
 def fused_probs(slm_logits, llm_logits, w, block_b: int = 4):
     return fuse_logits(slm_logits, llm_logits, w, block_b=block_b,
                        interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def fused_probs_masked(slm_logits, llm_logits, w, arrived,
+                       block_b: int = 4):
+    """Ragged-batch serving dispatch.
+
+    slm/llm logits: (B, V) for any B >= 1; w: (B,); arrived: (B,) bool.
+    B is padded up to a multiple of ``block_b`` (padded rows carry
+    arrived=False and are dropped after the kernel), so the continuous-
+    decode engine can hand over whatever batch occupancy it has."""
+    b, _ = slm_logits.shape
+    bp = -(-b // block_b) * block_b
+    pad = bp - b
+    if pad:
+        zrow = ((0, pad), (0, 0))
+        slm_logits = jnp.pad(slm_logits, zrow)
+        llm_logits = jnp.pad(llm_logits, zrow)
+        w = jnp.pad(w.astype(jnp.float32), (0, pad), constant_values=1.0)
+        arrived = jnp.pad(jnp.asarray(arrived, bool), (0, pad),
+                          constant_values=False)
+    out = fuse_logits(slm_logits, llm_logits, w, arrived=arrived,
+                      block_b=block_b, interpret=_on_cpu())
+    return out[:b]

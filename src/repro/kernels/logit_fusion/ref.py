@@ -1,11 +1,13 @@
-"""Pure-jnp oracle for logit fusion (Eq. 14-15)."""
+"""Pure-jnp oracle for logit fusion (Eq. 14-15 + Sec. IV-D mask)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def fuse_logits_ref(slm_logits, llm_logits, w):
+def fuse_logits_ref(slm_logits, llm_logits, w, arrived=None):
     p_s = jax.nn.softmax(slm_logits.astype(jnp.float32), axis=-1)
     p_l = jax.nn.softmax(llm_logits.astype(jnp.float32), axis=-1)
+    if arrived is not None:
+        w = jnp.where(jnp.asarray(arrived, bool), w, 1.0)
     return w[:, None] * p_s + (1.0 - w[:, None]) * p_l

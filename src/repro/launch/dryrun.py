@@ -161,6 +161,8 @@ def compile_combo(cfg, shape, mesh, *, optimizer: str = "adamw",
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):       # jax<=0.4: one dict per device
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = AN.parse_collective_bytes(hlo)
@@ -179,7 +181,7 @@ def compile_combo(cfg, shape, mesh, *, optimizer: str = "adamw",
 
 def _lower_compile(lm, cfg, shape, mesh, optimizer, absorb, params_abs,
                    params_sh, batch_abs, batch_sh, rep):
-    with jax.set_mesh(mesh):
+    with mesh:
         if shape.kind == "train":
             opt = (OPT.adafactor(OPT.constant_schedule(1e-4))
                    if optimizer == "adafactor" else
@@ -506,7 +508,7 @@ def run_fusion(shape_name: str = "decode_32k", *, multi_pod: bool = False,
             slm_cfg, mesh, b, shard_seq=(b == 1),
             kv_seq_model=(kv_shard == "seq")))
         rules = SH.RULESETS[param_rules]
-        with jax.set_mesh(mesh):
+        with mesh:
             jitted = jax.jit(step, in_shardings=(
                 SH.param_shardings(None, slm.param_specs(), mesh, rules),
                 SH.param_shardings(None, llm.param_specs(), mesh, rules),

@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rtt-ms", type=float, default=50.0)
     ap.add_argument("--timeout-ms", type=float, default=200.0)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="decode-batch width; >1 uses the continuous-"
+                         "batching engine (Pallas-fused logit path)")
     args = ap.parse_args()
 
     if args.local:
@@ -30,19 +33,27 @@ def main():
         from repro.configs import get_config
         from repro.core import fusion as FUS
         from repro.models.model import LM
-        from repro.serving.engine import HybridEngine
+        from repro.serving.engine import BatchedHybridEngine, HybridEngine
         from repro.serving.latency import LatencyModel
-        from repro.serving.scheduler import Scheduler, summarize
+        from repro.serving.scheduler import (ContinuousBatchScheduler,
+                                             Scheduler, summarize)
         slm_cfg = get_config("floe-slm-2b").reduced()
         llm_cfg = get_config("floe-llm-7b").reduced()
         slm, llm = LM(slm_cfg, remat=False), LM(llm_cfg, remat=False)
         sp = slm.init(jax.random.key(0))
         lp = llm.init(jax.random.key(1))
         mlp = FUS.init_alignment(jax.random.key(2), slm_cfg.vocab_size)
-        eng = HybridEngine(slm, sp, llm, lp, mlp,
-                           latency=LatencyModel(rtt_ms=args.rtt_ms),
-                           timeout_ms=args.timeout_ms)
-        sched = Scheduler(eng)
+        if args.batch > 1:
+            eng = BatchedHybridEngine(
+                slm, sp, llm, lp, mlp,
+                latency=LatencyModel(rtt_ms=args.rtt_ms),
+                timeout_ms=args.timeout_ms, batch_size=args.batch)
+            sched = ContinuousBatchScheduler(eng)
+        else:
+            eng = HybridEngine(slm, sp, llm, lp, mlp,
+                               latency=LatencyModel(rtt_ms=args.rtt_ms),
+                               timeout_ms=args.timeout_ms)
+            sched = Scheduler(eng)
         for prompt in [
             "math: compute 12 plus 7 =",
             "my ssn is 123-45-6789, fill the benefits form",

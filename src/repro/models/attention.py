@@ -132,6 +132,24 @@ def decode_attention(q, cache_k, cache_v, pos, window: int = 0):
     return _sdpa(qg, k, v, mask, scale).reshape(b, 1, h, hd)
 
 
+def rowwise_decode_attention(q, cache_k, cache_v, pos_b, window: int = 0):
+    """One-token decode with PER-ROW positions (continuous batching: each
+    slot is at its own depth).  q (B,1,H,hd), cache (B,S,KV,hd),
+    pos_b (B,) int32.  Window layers keep the full cache and mask the
+    neighbourhood instead of slicing (per-row starts preclude one static
+    slice)."""
+    b, _, h, hd = q.shape
+    s_max = cache_k.shape[1]
+    kvh = cache_k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    kv_pos = jnp.arange(s_max)
+    mask = kv_pos[None, None, :] <= pos_b[:, None, None]      # (B,1,S)
+    if window and window < s_max:
+        mask &= kv_pos[None, None, :] > (pos_b[:, None, None] - window)
+    qg = _group(q, kvh)
+    return _sdpa(qg, cache_k, cache_v, mask, scale).reshape(b, 1, h, hd)
+
+
 def ring_decode_attention(q, cache_k, cache_v, pos, window: int):
     """Decode against a ring-buffered window cache (B, window, KV, hd).
 
@@ -183,11 +201,19 @@ def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
         q = _qk_norm(p["q_norm"], q, cfg.norm_eps)
         k = _qk_norm(p["k_norm"], k, cfg.norm_eps)
 
+    # continuous batching: decode may carry PER-ROW positions (B,) — each
+    # slot of the batch sits at its own sequence depth
+    row_pos = None
+    if mode == "decode" and getattr(positions, "ndim", 0) == 1 \
+            and positions.shape[0] == b and b > 1:
+        row_pos = positions
+
     if rope_enabled:
         theta = cfg.rope_theta_global if (
             is_global and cfg.rope_theta_global) else cfg.rope_theta
-        q = L.rope(q, positions, theta)
-        k = L.rope(k, positions, theta)
+        rope_pos = row_pos[:, None] if row_pos is not None else positions
+        q = L.rope(q, rope_pos, theta)
+        k = L.rope(k, rope_pos, theta)
 
     window = 0
     if cfg.attn_type == "sliding" or (cfg.attn_type == "mixed" and not is_global):
@@ -201,6 +227,18 @@ def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
         pos1d = positions if positions.ndim == 1 else positions[0]
         out = chunked_causal_attention(q, k, v, pos1d, pos1d, window)
         new_cache = {"k": k, "v": v}
+    elif mode == "decode" and row_pos is not None:
+        if window and cache["k"].shape[1] == window:
+            raise NotImplementedError(
+                "per-row decode positions + ring cache unsupported")
+        # each row scatters its new KV at its own position; rows parked
+        # past max_seq (drained slots) drop the update harmlessly
+        ck = constrain(cache["k"].at[jnp.arange(b), row_pos].set(
+            k[:, 0], mode="drop"), "cache_kv")
+        cv = constrain(cache["v"].at[jnp.arange(b), row_pos].set(
+            v[:, 0], mode="drop"), "cache_kv")
+        out = rowwise_decode_attention(q, ck, cv, row_pos, window)
+        new_cache = {"k": ck, "v": cv}
     elif mode == "decode":
         pos = positions if positions.ndim == 0 else positions.reshape(())
         ring = window and cache["k"].shape[1] == window

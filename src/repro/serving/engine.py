@@ -50,7 +50,8 @@ class HybridEngine:
                  expert_bank=None, router: Optional[Router] = None,
                  detector: Optional[PrivacyDetector] = None,
                  latency: Optional[LatencyModel] = None,
-                 timeout_ms: float = 200.0, max_seq: int = 96):
+                 timeout_ms: float = 200.0, max_seq: int = 96,
+                 sample_seed: int = 0):
         self.slm, self.slm_params = slm, slm_params
         self.llm, self.llm_params = llm, llm_params
         self.mlp = alignment_mlp
@@ -60,19 +61,37 @@ class HybridEngine:
         self.latency = latency or LatencyModel()
         self.timeout_ms = timeout_ms
         self.max_seq = max_seq
+        self.sample_seed = sample_seed
         self._jit_cache: Dict[str, Any] = {}
 
         self._slm_decode = jax.jit(
             lambda p, c, t, lora, g: slm.decode_step(p, c, t, lora, g))
         self._llm_decode = jax.jit(
             lambda p, c, t: llm.decode_step(p, c, t))
+        # jitted prefill (one retrace per distinct prompt length) — the
+        # eager op-by-op prefill dominated per-request wall time
+        self._slm_prefill = jax.jit(
+            lambda p, toks, lora, g: slm.prefill(
+                p, {"tokens": toks}, self.max_seq, lora=lora, gates=g))
+        self._llm_prefill = jax.jit(
+            lambda p, toks: llm.prefill(p, {"tokens": toks}, self.max_seq))
         self._fuse = jax.jit(
             lambda sl, ll, arrived: FUS.fused_distribution(
                 self.mlp, sl, ll, arrived))
 
+    def _sample_key(self, rid: Optional[int]):
+        """Per-request PRNG root; fold_in(step) yields per-token keys, so
+        no two requests (or tokens) ever share a sampling key."""
+        return jax.random.fold_in(jax.random.key(self.sample_seed),
+                                  0 if rid is None else rid)
+
     # ------------------------------------------------------------- public
     def generate(self, prompt: str, max_new_tokens: int = 16,
-                 greedy: bool = True) -> Tuple[str, GenStats]:
+                 greedy: bool = True,
+                 rid: Optional[int] = None) -> Tuple[str, GenStats]:
+        """rid, when given, keys both the latency draws and the sampling
+        PRNG per (request, token) — order-independent, so batched and
+        sequential serving see identical network weather and samples."""
         stats = GenStats()
         stats.private = self.detector.detect(prompt)
         gates = None
@@ -80,23 +99,22 @@ class HybridEngine:
         if self.router is not None and self.bank is not None:
             gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
             lora = LORA.bank_for_model(self.bank)
+        sample_key = self._sample_key(rid)
 
         ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
         toks = jnp.asarray([ids], jnp.int32)
-        s_logits, s_cache = self.slm.prefill(
-            self.slm_params, {"tokens": toks}, self.max_seq,
-            lora=lora, gates=gates)
+        s_logits, s_cache = self._slm_prefill(self.slm_params, toks,
+                                              lora, gates)
         use_cloud = not stats.private
         if use_cloud:
-            l_logits, l_cache = self.llm.prefill(
-                self.llm_params, {"tokens": toks}, self.max_seq)
+            l_logits, l_cache = self._llm_prefill(self.llm_params, toks)
 
         out_ids: List[int] = []
         sl, ll = s_logits[:, 0], (l_logits[:, 0] if use_cloud else None)
         for _ in range(max_new_tokens):
             if use_cloud:
                 lat_ms, arrived = self.latency.token_latency_ms(
-                    self.timeout_ms)
+                    self.timeout_ms, rid=rid, step=len(out_ids))
                 p_out, w = self._fuse(sl, ll, jnp.asarray(arrived))
                 stats.cloud_tokens += int(arrived)
                 stats.fallback_tokens += int(not arrived)
@@ -108,8 +126,9 @@ class HybridEngine:
             stats.fusion_w.append(float(w[0]))
 
             nxt = int(jnp.argmax(p_out[0])) if greedy else int(
-                jax.random.categorical(jax.random.key(len(out_ids)),
-                                       jnp.log(jnp.clip(p_out[0], 1e-9))))
+                jax.random.categorical(
+                    jax.random.fold_in(sample_key, len(out_ids)),
+                    jnp.log(jnp.clip(p_out[0], 1e-9))))
             out_ids.append(nxt)
             stats.tokens += 1
             if nxt == TOK.EOS:
@@ -123,6 +142,239 @@ class HybridEngine:
                                                      l_cache, t)
                 ll = l_logits[:, 0]
         return TOK.decode(out_ids), stats
+
+
+# ===========================================================================
+# Batched continuous decode
+# ===========================================================================
+
+
+@dataclass
+class _Slot:
+    """Host-side bookkeeping for one occupied decode-batch row."""
+    rid: int
+    max_new: int
+    greedy: bool
+    stats: GenStats
+    out_ids: List[int] = field(default_factory=list)
+
+
+class _Lane:
+    """One decode batch: stacked SLM (+ optionally LLM) caches with a
+    free-slot list.  The cloud lane fuses SLM+LLM logits per row; the
+    edge lane is SLM-only (private traffic, Alg. 2 split)."""
+
+    def __init__(self, engine: "BatchedHybridEngine", batch: int,
+                 use_cloud: bool):
+        self.eng = engine
+        self.batch = batch
+        self.use_cloud = use_cloud
+        self.slots: List[Optional[_Slot]] = [None] * batch
+        self.s_cache = None          # allocated lazily on first admit
+        self.l_cache = None
+        self.sl = None               # (B, V) current SLM logits
+        self.ll = None               # (B, V) current LLM logits
+        self.gates = None            # (B, E) router weights or None
+
+    # ----------------------------------------------------------- helpers
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _alloc(self, vocab: int, n_experts: Optional[int]):
+        eng = self.eng
+        b = self.batch
+        self.s_cache = eng.slm.init_cache(b, eng.max_seq)
+        self.s_cache["pos"] = jnp.zeros((b,), jnp.int32)
+        if self.use_cloud:
+            self.l_cache = eng.llm.init_cache(b, eng.max_seq)
+            self.l_cache["pos"] = jnp.zeros((b,), jnp.int32)
+            self.ll = jnp.zeros((b, vocab), jnp.float32)
+        self.sl = jnp.zeros((b, vocab), jnp.float32)
+        if n_experts is not None:
+            self.gates = jnp.zeros((b, n_experts), jnp.float32)
+
+    # --------------------------------------------------------- admission
+    def admit(self, slot: int, prompt: str, max_new: int, greedy: bool,
+              rid: int, private: bool):
+        eng = self.eng
+        gates_row = None
+        lora = eng.lora
+        if eng.router is not None and eng.bank is not None:
+            gates_row = jnp.asarray(eng.router.gate_weights(prompt))[None, :]
+        ids = TOK.encode(prompt + " ")[: eng.max_seq - max_new - 1]
+        toks = jnp.asarray([ids], jnp.int32)
+        # per-request B=1 prefill — identical math to the sequential path
+        s_logits, s_cache = eng._slm_prefill(eng.slm_params, toks,
+                                             lora, gates_row)
+        if self.s_cache is None:
+            self._alloc(s_logits.shape[-1],
+                        None if gates_row is None else gates_row.shape[-1])
+        self.s_cache = eng._insert_cache(self.s_cache, s_cache, slot)
+        self.sl = eng._insert_row(self.sl, s_logits[:, 0], slot)
+        if self.use_cloud:
+            l_logits, l_cache = eng._llm_prefill(eng.llm_params, toks)
+            self.l_cache = eng._insert_cache(self.l_cache, l_cache, slot)
+            self.ll = eng._insert_row(self.ll, l_logits[:, 0], slot)
+        if gates_row is not None:
+            self.gates = eng._insert_row(self.gates, gates_row, slot)
+        stats = GenStats(private=private)
+        self.slots[slot] = _Slot(rid, max_new, greedy, stats)
+
+    # ------------------------------------------------------------- decode
+    def step(self) -> List[Tuple[int, str, GenStats]]:
+        """One fused decode step over every occupied row.  Returns the
+        requests that finished this step as (rid, text, stats)."""
+        eng = self.eng
+        if self.active == 0:
+            return []
+        b = self.batch
+        if self.use_cloud:
+            arrived = np.zeros((b,), bool)
+            lat = np.zeros((b,), np.float64)
+            for i, s in enumerate(self.slots):
+                if s is None:
+                    continue
+                lat[i], arrived[i] = eng.latency.token_latency_ms(
+                    eng.timeout_ms, rid=s.rid, step=len(s.out_ids))
+            probs, w = eng._fuse_batched(self.sl, self.ll,
+                                         jnp.asarray(arrived))
+        else:
+            probs = eng._softmax_batched(self.sl)
+            w = jnp.ones((b,))
+        nxt_greedy = np.asarray(eng._argmax_batched(probs))
+        w_host = np.asarray(w)
+
+        done: List[Tuple[int, str, GenStats]] = []
+        next_tok = np.zeros((b, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            st = s.stats
+            if self.use_cloud:
+                st.cloud_tokens += int(arrived[i])
+                st.fallback_tokens += int(not arrived[i])
+                st.latency_ms.append(float(lat[i]))
+            else:
+                st.latency_ms.append(float(eng.latency.edge_compute_ms))
+            st.fusion_w.append(float(w_host[i]))
+            if s.greedy:
+                nxt = int(nxt_greedy[i])
+            else:
+                key = jax.random.fold_in(eng._sample_key(s.rid),
+                                         len(s.out_ids))
+                nxt = int(jax.random.categorical(
+                    key, jnp.log(jnp.clip(probs[i], 1e-9))))
+            s.out_ids.append(nxt)
+            st.tokens += 1
+            if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
+                done.append((s.rid, TOK.decode(s.out_ids), st))
+                self.slots[i] = None        # freed: admit into this row
+            else:
+                next_tok[i, 0] = nxt
+
+        if any(s is not None for s in self.slots):
+            toks = jnp.asarray(next_tok)
+            s_logits, self.s_cache = eng._slm_decode(
+                eng.slm_params, self.s_cache, toks, eng.lora, self.gates)
+            self.sl = s_logits[:, 0]
+            if self.use_cloud:
+                l_logits, self.l_cache = eng._llm_decode(
+                    eng.llm_params, self.l_cache, toks)
+                self.ll = l_logits[:, 0]
+        return done
+
+
+class BatchedHybridEngine(HybridEngine):
+    """Continuous-batching Floe engine (the paper's real-time serving
+    claim at production shape).
+
+    Two fixed-width decode batches ("lanes"): cloud-eligible requests
+    share a hybrid SLM+LLM batch whose per-token fusion runs through the
+    Pallas ``logit_fusion`` kernel with a per-row Sec. IV-D arrived
+    mask; private requests share an SLM-only batch (Alg. 2 — they never
+    touch the network path).  New requests are prefilled at B=1
+    (bit-identical to the sequential path) and scattered into freed
+    rows as sequences hit EOS; every occupied row then advances one
+    token per jitted batched decode step."""
+
+    def __init__(self, slm, slm_params, llm, llm_params, alignment_mlp,
+                 expert_bank=None, router: Optional[Router] = None,
+                 detector: Optional[PrivacyDetector] = None,
+                 latency: Optional[LatencyModel] = None,
+                 timeout_ms: float = 200.0, max_seq: int = 96,
+                 sample_seed: int = 0, batch_size: int = 8,
+                 edge_batch_size: Optional[int] = None, block_b: int = 4):
+        super().__init__(slm, slm_params, llm, llm_params, alignment_mlp,
+                         expert_bank=expert_bank, router=router,
+                         detector=detector, latency=latency,
+                         timeout_ms=timeout_ms, max_seq=max_seq,
+                         sample_seed=sample_seed)
+        for lm in (slm, llm):
+            # plain-layout dense only: the lane cache scatter and per-row
+            # decode positions assume (L, B, ...) cache leaves; grouped
+            # layouts (gemma3 mixed attention) stack (n_groups, g-1, B, ...)
+            if lm.cfg.family != "dense" or lm._layout()[0] != "plain":
+                raise NotImplementedError(
+                    "batched continuous decode supports plain dense-"
+                    f"family models (got {lm.cfg.family}/"
+                    f"{lm._layout()[0]})")
+        self.block_b = block_b
+        self.lora = (LORA.bank_for_model(self.bank)
+                     if self.router is not None and self.bank is not None
+                     else None)
+        self.cloud_lane = _Lane(self, batch_size, use_cloud=True)
+        self.edge_lane = _Lane(self, edge_batch_size or batch_size,
+                               use_cloud=False)
+
+        self._fuse_batched = jax.jit(
+            lambda sl, ll, arrived: FUS.fused_distribution_kernel(
+                self.mlp, sl, ll, arrived, block_b=self.block_b))
+        self._softmax_batched = jax.jit(
+            lambda sl: jax.nn.softmax(sl.astype(jnp.float32), -1))
+        self._argmax_batched = jax.jit(lambda p: jnp.argmax(p, -1))
+        self._insert_row = jax.jit(
+            lambda full, row, i: full.at[i].set(row[0]))
+        self._insert_cache = jax.jit(self._insert_cache_impl)
+
+    @staticmethod
+    def _insert_cache_impl(full, row, i):
+        """Scatter a B=1 prefill cache into row i of a stacked lane cache
+        (leaf layout (L, B, ...); per-row "pos" is the 1-D leaf)."""
+        def ins(f, r):
+            if f.ndim == 1:                       # pos: (B,) <- scalar
+                return f.at[i].set(r.astype(f.dtype))
+            return f.at[:, i].set(r[:, 0].astype(f.dtype))
+        return jax.tree.map(ins, full, row)
+
+    # ------------------------------------------------------------- public
+    def has_capacity(self, private: bool) -> bool:
+        lane = self.edge_lane if private else self.cloud_lane
+        return lane.free_slot() is not None
+
+    def add_request(self, prompt: str, max_new_tokens: int = 16,
+                    greedy: bool = True, rid: int = 0) -> bool:
+        """Admit a request into its lane; False if the lane is full."""
+        private = self.detector.detect(prompt)
+        lane = self.edge_lane if private else self.cloud_lane
+        slot = lane.free_slot()
+        if slot is None:
+            return False
+        lane.admit(slot, prompt, max_new_tokens, greedy, rid, private)
+        return True
+
+    def active_count(self) -> int:
+        return self.cloud_lane.active + self.edge_lane.active
+
+    def step(self) -> List[Tuple[int, str, GenStats]]:
+        """Advance both lanes one token.  Returns finished requests."""
+        return self.edge_lane.step() + self.cloud_lane.step()
 
 
 class SoloEngine:

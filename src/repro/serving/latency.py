@@ -27,10 +27,26 @@ class LatencyModel:
         jitter = self._rng.gauss(0.0, self.jitter_ms)
         return max(0.0, self.rtt_ms + self.cloud_compute_ms + jitter)
 
-    def token_latency_ms(self, timeout_ms: float) -> tuple[float, bool]:
+    def arrival_ms_at(self, rid: int, step: int) -> float:
+        """Counter-based arrival draw keyed by (request, token): the same
+        (rid, step) sees the same network weather no matter in which order
+        requests are decoded, so the sequential and batched engines face
+        identical per-row fallback patterns."""
+        rng = random.Random((self.seed, rid, step))
+        jitter = rng.gauss(0.0, self.jitter_ms)
+        return max(0.0, self.rtt_ms + self.cloud_compute_ms + jitter)
+
+    def token_latency_ms(self, timeout_ms: float, rid: int | None = None,
+                         step: int = 0) -> tuple[float, bool]:
         """Per-token end-to-end latency under parallel edge/cloud decode
-        with the Sec. IV-D fallback.  Returns (latency_ms, cloud_used)."""
-        arrival = self.cloud_logits_arrival_ms()
+        with the Sec. IV-D fallback.  Returns (latency_ms, cloud_used).
+
+        With ``rid`` given the draw is counter-based (order-independent);
+        otherwise it comes from the stateful stream."""
+        if rid is None:
+            arrival = self.cloud_logits_arrival_ms()
+        else:
+            arrival = self.arrival_ms_at(rid, step)
         if arrival <= self.edge_compute_ms:
             return self.edge_compute_ms, True            # fully masked
         if arrival <= timeout_ms:

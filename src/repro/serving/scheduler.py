@@ -1,6 +1,12 @@
-"""Request scheduler: batching + per-request accounting on top of the
-hybrid engine (real-time framing of the paper: the detector doubles as a
+"""Request schedulers: per-request accounting on top of the hybrid
+engine (real-time framing of the paper: the detector doubles as a
 traffic offloader — private requests never wait on the network path).
+
+Two schedulers share the queue/Response protocol:
+  * ``Scheduler`` — sequential reference path, one request at a time.
+  * ``ContinuousBatchScheduler`` — packs requests into the
+    ``BatchedHybridEngine`` decode lanes and refills freed rows as
+    sequences hit EOS (continuous batching).
 """
 from __future__ import annotations
 
@@ -10,7 +16,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serving.engine import GenStats, HybridEngine
+from repro.serving.engine import (BatchedHybridEngine, GenStats,
+                                  HybridEngine)
 
 
 @dataclass
@@ -54,8 +61,49 @@ class Scheduler:
         # private first: strictly on-device, immune to network state
         for r in private + public:
             t0 = time.time()
-            text, stats = self.engine.generate(r.prompt, r.max_new_tokens)
+            text, stats = self.engine.generate(r.prompt, r.max_new_tokens,
+                                               rid=r.rid)
             out.append(Response(r.rid, text, stats, time.time() - t0))
+        return sorted(out, key=lambda x: x.rid)
+
+
+class ContinuousBatchScheduler:
+    """Continuous batching: cloud-eligible requests share a hybrid decode
+    batch, private requests an SLM-only batch; freed batch rows are
+    refilled from the queue as sequences finish, so the engine runs one
+    jitted SLM+LLM step per token for the WHOLE batch instead of a
+    Python loop per request."""
+
+    def __init__(self, engine: BatchedHybridEngine):
+        self.engine = engine
+        self.queue: List[Request] = []
+        self._next = 0
+
+    def submit(self, prompt: str, max_new_tokens: int = 16) -> int:
+        rid = self._next
+        self._next += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens, time.time()))
+        return rid
+
+    def run(self) -> List[Response]:
+        pending = list(self.queue)
+        self.queue = []
+        admitted_at: Dict[int, float] = {}
+        out: List[Response] = []
+        while pending or self.engine.active_count():
+            # fill freed slots (FIFO per lane; a full lane skips, a later
+            # request bound for the other lane may still be admitted)
+            still: List[Request] = []
+            for r in pending:
+                if self.engine.add_request(r.prompt, r.max_new_tokens,
+                                           rid=r.rid):
+                    admitted_at[r.rid] = time.time()
+                else:
+                    still.append(r)
+            pending = still
+            for rid, text, stats in self.engine.step():
+                out.append(Response(rid, text, stats,
+                                    time.time() - admitted_at[rid]))
         return sorted(out, key=lambda x: x.rid)
 
 

@@ -150,3 +150,38 @@ def test_logit_fusion_sweep(b, v, dtype):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=5e-3 if dtype == jnp.bfloat16 else 1e-6)
     np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("b", [1, 3, 5, 8])
+def test_logit_fusion_ragged_batch(b):
+    """Ragged serving batches: ops wrapper pads B up to a block_b
+    multiple, masks the padded rows, and slices them away."""
+    from repro.kernels.logit_fusion.ops import fused_probs_masked
+    ks = jax.random.split(jax.random.key(7), 3)
+    v = 257
+    sl = jax.random.normal(ks[0], (b, v))
+    ll = jax.random.normal(ks[1], (b, v))
+    w = jax.nn.sigmoid(jax.random.normal(ks[2], (b,)))
+    arrived = jnp.asarray([i % 2 == 0 for i in range(b)])
+    out = fused_probs_masked(sl, ll, w, arrived, block_b=4)
+    assert out.shape == (b, v)
+    ref = fuse_logits_ref(sl, ll, w, arrived)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    # arrived=False rows are pure SLM (w forced to 1)
+    p_slm = jax.nn.softmax(sl, -1)
+    for i in range(b):
+        if not bool(arrived[i]):
+            np.testing.assert_allclose(np.asarray(out[i]),
+                                       np.asarray(p_slm[i]), atol=1e-6)
+
+
+def test_logit_fusion_arrived_in_kernel():
+    """Per-row arrived mask applied inside the Pallas kernel body."""
+    ks = jax.random.split(jax.random.key(8), 3)
+    sl = jax.random.normal(ks[0], (4, 64))
+    ll = jax.random.normal(ks[1], (4, 64))
+    w = jax.nn.sigmoid(jax.random.normal(ks[2], (4,)))
+    arrived = jnp.asarray([True, False, True, False])
+    out = fuse_logits(sl, ll, w, arrived=arrived, block_b=2, interpret=True)
+    ref = fuse_logits_ref(sl, ll, w, arrived)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)

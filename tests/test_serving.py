@@ -8,9 +8,11 @@ import pytest
 from repro.configs import get_config
 from repro.core import fusion as FUS
 from repro.models.model import LM
-from repro.serving.engine import HybridEngine, SoloEngine
+from repro.serving.engine import (BatchedHybridEngine, HybridEngine,
+                                  SoloEngine)
 from repro.serving.latency import LatencyModel
-from repro.serving.scheduler import Scheduler, summarize
+from repro.serving.scheduler import (ContinuousBatchScheduler, Scheduler,
+                                     summarize)
 
 
 @pytest.fixture(scope="module")
@@ -86,3 +88,110 @@ def test_solo_engine_runs(engine_parts):
     eng = SoloEngine(slm, sp, max_seq=48)
     out = eng.generate("math: compute 1 plus 1 =", max_new_tokens=3)
     assert isinstance(out, str)
+
+
+# ----------------------------------------------------- continuous batching
+
+PARITY_PROMPTS = [
+    "math: compute 12 plus 7 =",
+    "my ssn is 123-45-6789, fill the benefits form",       # private
+    "translate to french: water ->",
+    "my doctor said my blood pressure is 140 over 90",     # private
+    "sort ascending: 40 12 77 31 ->",
+    "explain how rainbows form",
+]
+
+
+def _run_both(engine_parts, latency_kw, n_tokens=5, batch_size=4):
+    slm, sp, llm, lp, mlp = engine_parts
+    seq = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                       latency=LatencyModel(**latency_kw),
+                       timeout_ms=200.0)
+    s1 = Scheduler(seq)
+    bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                              latency=LatencyModel(**latency_kw),
+                              timeout_ms=200.0, batch_size=batch_size,
+                              edge_batch_size=2)
+    s2 = ContinuousBatchScheduler(bat)
+    for p in PARITY_PROMPTS:
+        s1.submit(p, n_tokens)
+        s2.submit(p, n_tokens)
+    return s1.run(), s2.run()
+
+
+def test_batched_matches_sequential_greedy(engine_parts):
+    """Batched continuous decode must reproduce the sequential path
+    request-for-request: same greedy tokens, same private/cloud lane
+    split, same per-token latency/cloud/fallback accounting — under a
+    jittery network where different rows fall back at different steps."""
+    r_seq, r_bat = _run_both(
+        engine_parts,
+        dict(rtt_ms=160, jitter_ms=40.0, cloud_compute_ms=20, seed=7))
+    assert [r.rid for r in r_bat] == [r.rid for r in r_seq]
+    mixed = False
+    for a, b in zip(r_seq, r_bat):
+        assert a.text == b.text
+        assert a.stats.private == b.stats.private
+        assert a.stats.tokens == b.stats.tokens
+        assert a.stats.cloud_tokens == b.stats.cloud_tokens
+        assert a.stats.fallback_tokens == b.stats.fallback_tokens
+        assert a.stats.latency_ms == b.stats.latency_ms
+        np.testing.assert_allclose(a.stats.fusion_w, b.stats.fusion_w,
+                                   atol=1e-5)
+        mixed |= 0 < a.stats.fallback_tokens < a.stats.tokens
+    # the jittery regime must actually exercise PER-ROW fallback
+    assert mixed
+
+
+def test_batched_fallback_regime(engine_parts):
+    """Catastrophic RTT: every cloud row falls back (w=1) each step,
+    and the batched path mirrors the sequential accounting exactly."""
+    r_seq, r_bat = _run_both(
+        engine_parts, dict(rtt_ms=1000, jitter_ms=0), n_tokens=4)
+    for a, b in zip(r_seq, r_bat):
+        assert a.text == b.text
+        if not a.stats.private:
+            assert b.stats.fallback_tokens == b.stats.tokens
+            assert all(w == 1.0 for w in b.stats.fusion_w)
+
+
+def test_batched_private_rows_never_use_cloud(engine_parts):
+    _, r_bat = _run_both(engine_parts, dict(rtt_ms=10, jitter_ms=0))
+    privates = [r for r in r_bat if r.stats.private]
+    assert privates and all(r.stats.cloud_tokens == 0 for r in privates)
+
+
+def test_batched_refills_freed_slots(engine_parts):
+    """More requests than slots: the lane must drain the queue by
+    admitting into freed rows (continuous batching, not static)."""
+    slm, sp, llm, lp, mlp = engine_parts
+    bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                              latency=LatencyModel(rtt_ms=10, jitter_ms=0),
+                              timeout_ms=200.0, batch_size=2,
+                              edge_batch_size=1)
+    sched = ContinuousBatchScheduler(bat)
+    for i in range(5):
+        sched.submit(f"count to {i} please", 3)
+    res = sched.run()
+    assert len(res) == 5 and [r.rid for r in res] == list(range(5))
+    assert all(r.stats.tokens == 3 for r in res)
+
+
+def test_sampling_keys_differ_across_requests(engine_parts):
+    """Non-greedy decode must not reuse one PRNG key for every request
+    (the seed bug made all requests sample identical tokens).  The
+    random-init pair is too peaked to distinguish keys, so stub the
+    fusion step with a flat distribution and check the key plumbing."""
+    slm, sp, llm, lp, mlp = engine_parts
+    eng = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                       latency=LatencyModel(rtt_ms=10, jitter_ms=0))
+    v = slm.cfg.vocab_size
+    eng._fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
+                                         jnp.ones((1,)))
+    outs = {eng.generate("tell me a fun fact", 8, greedy=False, rid=rid)[0]
+            for rid in range(4)}
+    assert len(outs) > 1
+    # and the same rid replays the same sample stream
+    a = eng.generate("tell me a fun fact", 8, greedy=False, rid=0)[0]
+    b = eng.generate("tell me a fun fact", 8, greedy=False, rid=0)[0]
+    assert a == b
