@@ -7,13 +7,17 @@ conditions.
 
 ``--batch N`` (N>1) switches to the continuous-batching engine: all
 cloud-eligible prompts decode in one lockstep batch through the Pallas
-``logit_fusion`` kernel while private prompts share an SLM-only batch.
+``logit_fusion`` kernel while private prompts share an SLM-only batch;
+admissions arriving together share one packed B>1 prefill.
+``--pair gemma3`` serves the mixed-attention edge SLM with ring-cached
+sliding-window layers.
 """
 import argparse
 
 import jax
 
-from repro.configs import get_config
+from repro.configs.floe_pair import (FLOE_PAIRS, needs_ring_cache,
+                                     pair_configs)
 from repro.core import fusion as FUS
 from repro.models.model import LM
 from repro.serving.engine import BatchedHybridEngine, HybridEngine
@@ -38,11 +42,14 @@ def main():
     ap.add_argument("--tokens", type=int, default=6)
     ap.add_argument("--batch", type=int, default=0,
                     help="decode-batch width; >1 = continuous batching")
+    ap.add_argument("--pair", default="2b", choices=sorted(FLOE_PAIRS),
+                    help="SLM/LLM pairing; gemma3 = ring-cached "
+                         "mixed-attention edge SLM")
     args = ap.parse_args()
 
-    slm_cfg = get_config("floe-slm-2b").reduced()
-    llm_cfg = get_config("floe-llm-7b").reduced()
-    slm, llm = LM(slm_cfg, remat=False), LM(llm_cfg, remat=False)
+    slm_cfg, llm_cfg = pair_configs(args.pair)
+    slm = LM(slm_cfg, remat=False, ring_cache=needs_ring_cache(slm_cfg))
+    llm = LM(llm_cfg, remat=False)
     sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
     mlp = FUS.init_alignment(jax.random.key(2), slm_cfg.vocab_size)
 

@@ -2,8 +2,38 @@
 in the Gemma-7B / Gemma-2B proportion, used by the Floe fusion serving
 dry-run and the end-to-end examples.  ``floe-llm-7b``/``floe-slm-2b`` are
 the full-size stand-ins; examples use their ``reduced()`` variants.
+
+``FLOE_PAIRS`` names the servable (SLM, LLM) pairings — both members of
+a pair share a vocab so the Eq. 14 alignment MLP concatenates their
+distributions.  The ``gemma3`` pair exercises the mixed-attention /
+ring-cache serving path (Sec. 4 heterogeneity-aware edge models).
 """
+from typing import Tuple
+
 from repro.configs.base import ModelConfig, register
+
+# pair name -> (edge SLM arch, cloud LLM arch); every pair is
+# continuous-batching servable (dense family, shared vocab)
+FLOE_PAIRS = {
+    "2b": ("floe-slm-2b", "floe-llm-7b"),
+    "gemma3": ("floe-slm-gemma3", "floe-llm-7b"),
+}
+
+
+def needs_ring_cache(cfg: ModelConfig) -> bool:
+    """Whether an edge SLM should be built with LM(ring_cache=True):
+    windowed layers then keep window-sized ring caches at serve time."""
+    return cfg.attn_type in ("sliding", "mixed")
+
+
+def pair_configs(pair: str, reduced: bool = True
+                 ) -> Tuple[ModelConfig, ModelConfig]:
+    """Resolve a FLOE_PAIRS name to (slm_cfg, llm_cfg); build the SLM
+    with LM(cfg, ring_cache=needs_ring_cache(cfg))."""
+    from repro.configs.base import get_config
+    sname, lname = FLOE_PAIRS[pair]
+    scfg, lcfg = get_config(sname), get_config(lname)
+    return (scfg.reduced(), lcfg.reduced()) if reduced else (scfg, lcfg)
 
 
 @register("floe-llm-7b")

@@ -47,3 +47,23 @@ def fused_probs_masked(slm_logits, llm_logits, w, arrived,
     out = fuse_logits(slm_logits, llm_logits, w, arrived=arrived,
                       block_b=block_b, interpret=_on_cpu())
     return out[:b]
+
+
+@partial(jax.jit, static_argnames=("seed",))
+def sample_fused(probs, rids, steps, seed: int = 0):
+    """On-device batched sampling from the fused distribution.
+
+    Replaces the serving engine's per-row host loop with one vmapped
+    categorical: row i draws with key fold_in(fold_in(key(seed),
+    rids[i]), steps[i]) — bit-identical to the sequential engine's
+    per-(request, token) stream, so batched and sequential serving see
+    the same samples, and distinct rows never share a key.
+
+    probs: (B, V) fused distribution; rids/steps: (B,) int32.
+    Returns (B,) sampled token ids."""
+    def one(p, r, s):
+        key = jax.random.fold_in(jax.random.fold_in(
+            jax.random.key(seed), r), s)
+        return jax.random.categorical(key, jnp.log(jnp.clip(p, 1e-9)))
+    return jax.vmap(one)(probs, jnp.asarray(rids, jnp.int32),
+                         jnp.asarray(steps, jnp.int32))

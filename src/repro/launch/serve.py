@@ -26,20 +26,25 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="decode-batch width; >1 uses the continuous-"
                          "batching engine (Pallas-fused logit path)")
+    from repro.configs.floe_pair import FLOE_PAIRS
+    ap.add_argument("--pair", default="2b", choices=sorted(FLOE_PAIRS),
+                    help="SLM/LLM pairing; 'gemma3' serves the mixed-"
+                         "attention SLM with ring-cached window layers")
     args = ap.parse_args()
 
     if args.local:
         import jax
-        from repro.configs import get_config
+        from repro.configs.floe_pair import needs_ring_cache, pair_configs
         from repro.core import fusion as FUS
         from repro.models.model import LM
         from repro.serving.engine import BatchedHybridEngine, HybridEngine
         from repro.serving.latency import LatencyModel
         from repro.serving.scheduler import (ContinuousBatchScheduler,
                                              Scheduler, summarize)
-        slm_cfg = get_config("floe-slm-2b").reduced()
-        llm_cfg = get_config("floe-llm-7b").reduced()
-        slm, llm = LM(slm_cfg, remat=False), LM(llm_cfg, remat=False)
+        slm_cfg, llm_cfg = pair_configs(args.pair)
+        slm = LM(slm_cfg, remat=False,
+                 ring_cache=needs_ring_cache(slm_cfg))
+        llm = LM(llm_cfg, remat=False)
         sp = slm.init(jax.random.key(0))
         lp = llm.init(jax.random.key(1))
         mlp = FUS.init_alignment(jax.random.key(2), slm_cfg.vocab_size)

@@ -150,17 +150,46 @@ def rowwise_decode_attention(q, cache_k, cache_v, pos_b, window: int = 0):
     return _sdpa(qg, cache_k, cache_v, mask, scale).reshape(b, 1, h, hd)
 
 
+def ring_kv_positions(pos, window: int) -> jax.Array:
+    """Absolute position held by each slot of a ring cache at depth
+    ``pos``: slot i holds p = pos - ((pos - i) mod window), i.e. the
+    most recent position <= pos that maps to slot i (= p % window).
+    p < 0 marks a slot not yet written.  pos scalar -> (window,);
+    pos (B,) -> (B, window).  The single source of the ring addressing
+    invariant — decode writes, decode masks, and prefill cache
+    placement (LM._pad_cache) must all agree with it."""
+    pos = jnp.asarray(pos)[..., None]
+    slots = jnp.arange(window)
+    return pos - jnp.mod(pos - slots, window)
+
+
 def ring_decode_attention(q, cache_k, cache_v, pos, window: int):
     """Decode against a ring-buffered window cache (B, window, KV, hd).
 
-    Slot i holds absolute position p = pos - ((pos - i) mod window); the
-    mask keeps p in [max(0, pos-window+1), pos]."""
+    The mask keeps slot positions in [max(0, pos-window+1), pos]."""
     b, _, h, hd = q.shape
     kvh = cache_k.shape[2]
     scale = 1.0 / math.sqrt(hd)
-    slots = jnp.arange(window)
-    kv_pos = pos - jnp.mod(pos - slots, window)
+    kv_pos = ring_kv_positions(pos, window)
     mask = ((kv_pos >= 0) & (kv_pos <= pos))[None, None, :]
+    qg = _group(q, kvh)
+    return _sdpa(qg, cache_k, cache_v, mask, scale).reshape(b, 1, h, hd)
+
+
+def rowwise_ring_decode_attention(q, cache_k, cache_v, pos_b, window: int):
+    """Ring-buffer decode with PER-ROW positions (continuous batching over
+    sliding-window layers: each batch row sits at its own depth AND its
+    own ring write index).  q (B,1,H,hd), cache (B,window,KV,hd),
+    pos_b (B,) int32.
+
+    Per row, the mask keeps slot positions in
+    [max(0, pos_b[b]-window+1), pos_b[b]], so rows that have not wrapped
+    yet (pos < window) simply mask their empty slots."""
+    b, _, h, hd = q.shape
+    kvh = cache_k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    kv_pos = ring_kv_positions(pos_b, window)                   # (B, W)
+    mask = ((kv_pos >= 0) & (kv_pos <= pos_b[:, None]))[:, None, :]
     qg = _group(q, kvh)
     return _sdpa(qg, cache_k, cache_v, mask, scale).reshape(b, 1, h, hd)
 
@@ -229,15 +258,25 @@ def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
         new_cache = {"k": k, "v": v}
     elif mode == "decode" and row_pos is not None:
         if window and cache["k"].shape[1] == window:
-            raise NotImplementedError(
-                "per-row decode positions + ring cache unsupported")
-        # each row scatters its new KV at its own position; rows parked
-        # past max_seq (drained slots) drop the update harmlessly
-        ck = constrain(cache["k"].at[jnp.arange(b), row_pos].set(
-            k[:, 0], mode="drop"), "cache_kv")
-        cv = constrain(cache["v"].at[jnp.arange(b), row_pos].set(
-            v[:, 0], mode="drop"), "cache_kv")
-        out = rowwise_decode_attention(q, ck, cv, row_pos, window)
+            # ring cache + per-row positions: row b writes its new KV
+            # into slot pos_b[b] % window (each row at its own ring
+            # index); drained rows overwrite their own ring garbage,
+            # which admit() replaces wholesale anyway
+            slot = jnp.mod(row_pos, window)
+            ck = constrain(cache["k"].at[jnp.arange(b), slot].set(
+                k[:, 0]), "cache_kv")
+            cv = constrain(cache["v"].at[jnp.arange(b), slot].set(
+                v[:, 0]), "cache_kv")
+            out = rowwise_ring_decode_attention(q, ck, cv, row_pos, window)
+        else:
+            # each row scatters its new KV at its own position; rows
+            # parked past max_seq (drained slots) drop the update
+            # harmlessly
+            ck = constrain(cache["k"].at[jnp.arange(b), row_pos].set(
+                k[:, 0], mode="drop"), "cache_kv")
+            cv = constrain(cache["v"].at[jnp.arange(b), row_pos].set(
+                v[:, 0], mode="drop"), "cache_kv")
+            out = rowwise_decode_attention(q, ck, cv, row_pos, window)
         new_cache = {"k": ck, "v": cv}
     elif mode == "decode":
         pos = positions if positions.ndim == 0 else positions.reshape(())

@@ -655,10 +655,63 @@ class LM:
         cache = self._pad_cache(pc, b, s, max_seq)
         return logits, cache
 
-    def _pad_cache(self, pc, b, s, max_seq):
-        """Embed prefill cache (len s) into a max_seq cache."""
+    def prefill_packed(self, params, batch_d, lengths, max_seq: int,
+                       lora=None, gates=None):
+        """Packed ragged-batch prefill: B>1 prompts right-padded to one
+        shared length, processed in a single call.
+
+        batch_d["tokens"]: (B, Lpad); lengths: (B,) valid token counts.
+        Causal masking keeps every valid position independent of the
+        rows' padding, so row b's cache[0:lengths[b]] and its last-token
+        logits match a B=1 prefill of the unpadded prompt; pad positions
+        hold garbage that decode never attends (its mask is
+        kv_pos <= pos_b, and pos_b starts at lengths[b]).
+
+        Returns (last_logits (B,1,V), cache) with PER-ROW cache["pos"]
+        = lengths, ready for continuous-batching decode."""
+        cfg = self.cfg
+        if cfg.family in ("audio", "vlm"):
+            raise NotImplementedError(
+                "packed prefill: token-only families (got "
+                f"{cfg.family})")
+        x = self._embed_inputs(params, batch_d, "prefill")
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.arange(s)
+        x, pc, _ = self._run_stack(params, x, positions=positions,
+                                   mode="prefill", cache=None, lora=lora,
+                                   gates=gates)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        # per-row last VALID position (shared x[:, -1:] would read padding)
+        idx = jnp.clip(lengths - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)           # (B, 1, d)
+        last = L.norm(cfg, params["ln_f"], last)
+        logits = L.unembed(cfg, params["embed"], last)
+        cache = self._pad_cache(pc, b, s, max_seq, lengths=lengths)
+        return logits, cache
+
+    def _pad_cache(self, pc, b, s, max_seq, lengths=None):
+        """Embed prefill cache (len s) into a max_seq cache.
+
+        ``lengths`` (B,) switches to packed ragged-batch semantics: "pos"
+        becomes per-row, and ring (window < s) placement gathers each
+        row's own last-`w` positions into slot p % w instead of the
+        shared roll (rows at different depths wrap differently)."""
         cfg = self.cfg
         full = self.init_cache(b, max_seq)
+
+        def ring_rowwise(dst, src, a):
+            # slot j of row b holds the ring_kv_positions invariant at
+            # depth len_b-1; every KV cache layout stacks the batch axis
+            # immediately before the sequence axis, so a-1 is the row axis
+            w, s_len = dst.shape[a], src.shape[a]
+            p = ATT.ring_kv_positions(
+                jnp.asarray(lengths, jnp.int32) - 1, w)        # (B, w)
+            idx = jnp.clip(p, 0, s_len - 1)
+            shape = [1] * src.ndim
+            shape[a - 1] = idx.shape[0]
+            shape[a] = w
+            return jnp.take_along_axis(src, idx.reshape(shape),
+                                       axis=a).astype(dst.dtype)
 
         def place(dst, src):
             if src is None or not hasattr(dst, "shape"):
@@ -674,6 +727,8 @@ class LM:
                         pad = [(0, 0)] * dst.ndim
                         pad[a] = (0, dst.shape[a] - src.shape[a])
                         return jnp.pad(src.astype(dst.dtype), pad)
+                    if lengths is not None:
+                        return ring_rowwise(dst, src, a)
                     # ring placement: keep the last `w` positions, rolled
                     # so position p lands in slot p % w
                     w, s_len = dst.shape[a], src.shape[a]
@@ -686,7 +741,8 @@ class LM:
         out = {}
         for k, v in full.items():
             if k == "pos":
-                out[k] = jnp.asarray(s, jnp.int32)
+                out[k] = jnp.asarray(s, jnp.int32) if lengths is None \
+                    else jnp.asarray(lengths, jnp.int32)
             elif isinstance(v, dict) and pc.get(k) is not None:
                 out[k] = jax.tree.map(place, v, pc[k])
             elif pc.get(k) is not None:

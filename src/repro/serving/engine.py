@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import fusion as FUS
 from repro.core import lora as LORA
+from repro.kernels.logit_fusion import ops as OPS
 from repro.core.privacy import PrivacyDetector
 from repro.core.router import Router
 from repro.data import tokenizer as TOK
@@ -183,6 +184,9 @@ class _Lane:
                 return i
         return None
 
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
     @property
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
@@ -201,31 +205,92 @@ class _Lane:
             self.gates = jnp.zeros((b, n_experts), jnp.float32)
 
     # --------------------------------------------------------- admission
-    def admit(self, slot: int, prompt: str, max_new: int, greedy: bool,
-              rid: int, private: bool):
+    def admit_many(self, jobs: List[Tuple[int, str, int, bool, int, bool]]):
+        """Admit a burst of requests in ONE packed B>1 prefill.
+
+        jobs: [(slot, prompt, max_new, greedy, rid, private)].  Prompts
+        are right-padded to a shared chunk-rounded length and prefilled
+        as a single jitted call with per-row valid lengths masked
+        (``LM.prefill_packed``); the batch axis is padded to a power of
+        two so retraces stay bounded.  Each resulting cache row is then
+        scattered into its free lane slot."""
+        eng = self.eng
+        if not jobs:
+            return
+        if not eng.packed_prefill:
+            for j in jobs:
+                self._admit_one(*j)
+            return
+        n = len(jobs)
+        gates_rows = None
+        if eng.router is not None and eng.bank is not None:
+            gates_rows = np.stack([np.asarray(eng.router.gate_weights(p))
+                                   for _, p, *_ in jobs])
+        ids = [TOK.encode(p + " ")[: eng.max_seq - mn - 1]
+               for _, p, mn, *_ in jobs]
+        lens = np.asarray([len(seq) for seq in ids], np.int32)
+        chunk = eng.prefill_chunk
+        lpad = min(-(-int(lens.max()) // chunk) * chunk, eng.max_seq)
+        bp = 1 << (n - 1).bit_length()
+        toks = np.zeros((bp, lpad), np.int32)
+        for j, seq in enumerate(ids):
+            toks[j, :len(seq)] = seq
+        lens_p = np.ones((bp,), np.int32)      # pad rows: length-1 dummies
+        lens_p[:n] = lens
+        g = None
+        if gates_rows is not None:
+            g = np.zeros((bp, gates_rows.shape[1]), gates_rows.dtype)
+            g[:n] = gates_rows
+            g = jnp.asarray(g)
+        toks_j, lens_j = jnp.asarray(toks), jnp.asarray(lens_p)
+        s_logits, s_cache = eng._slm_prefill_packed(
+            eng.slm_params, toks_j, lens_j, eng.lora, g)
+        if self.s_cache is None:
+            self._alloc(s_logits.shape[-1],
+                        None if g is None else g.shape[-1])
+        l_logits = l_cache = None
+        if self.use_cloud:
+            l_logits, l_cache = eng._llm_prefill_packed(
+                eng.llm_params, toks_j, lens_j)
+        src = jnp.arange(n)
+        dst = jnp.asarray([j[0] for j in jobs], jnp.int32)
+        self.s_cache = eng._insert_slm(self.s_cache, s_cache, src, dst)
+        self.sl = eng._insert_row(self.sl, s_logits[:, 0], src, dst)
+        if self.use_cloud:
+            self.l_cache = eng._insert_llm(self.l_cache, l_cache, src, dst)
+            self.ll = eng._insert_row(self.ll, l_logits[:, 0], src, dst)
+        if g is not None:
+            self.gates = eng._insert_row(self.gates, g, src, dst)
+        for slot, prompt, max_new, greedy, rid, private in jobs:
+            self.slots[slot] = _Slot(rid, max_new, greedy,
+                                     GenStats(private=private))
+
+    def _admit_one(self, slot: int, prompt: str, max_new: int,
+                   greedy: bool, rid: int, private: bool):
+        """Legacy per-request B=1 prefill (kept as the burst-admission
+        benchmark baseline and a bit-exact reference path)."""
         eng = self.eng
         gates_row = None
-        lora = eng.lora
         if eng.router is not None and eng.bank is not None:
             gates_row = jnp.asarray(eng.router.gate_weights(prompt))[None, :]
         ids = TOK.encode(prompt + " ")[: eng.max_seq - max_new - 1]
         toks = jnp.asarray([ids], jnp.int32)
-        # per-request B=1 prefill — identical math to the sequential path
         s_logits, s_cache = eng._slm_prefill(eng.slm_params, toks,
-                                             lora, gates_row)
+                                             eng.lora, gates_row)
         if self.s_cache is None:
             self._alloc(s_logits.shape[-1],
                         None if gates_row is None else gates_row.shape[-1])
-        self.s_cache = eng._insert_cache(self.s_cache, s_cache, slot)
-        self.sl = eng._insert_row(self.sl, s_logits[:, 0], slot)
+        src, dst = jnp.zeros((1,), jnp.int32), jnp.asarray([slot], jnp.int32)
+        self.s_cache = eng._insert_slm(self.s_cache, s_cache, src, dst)
+        self.sl = eng._insert_row(self.sl, s_logits[:, 0], src, dst)
         if self.use_cloud:
             l_logits, l_cache = eng._llm_prefill(eng.llm_params, toks)
-            self.l_cache = eng._insert_cache(self.l_cache, l_cache, slot)
-            self.ll = eng._insert_row(self.ll, l_logits[:, 0], slot)
+            self.l_cache = eng._insert_llm(self.l_cache, l_cache, src, dst)
+            self.ll = eng._insert_row(self.ll, l_logits[:, 0], src, dst)
         if gates_row is not None:
-            self.gates = eng._insert_row(self.gates, gates_row, slot)
-        stats = GenStats(private=private)
-        self.slots[slot] = _Slot(rid, max_new, greedy, stats)
+            self.gates = eng._insert_row(self.gates, gates_row, src, dst)
+        self.slots[slot] = _Slot(rid, max_new, greedy,
+                                 GenStats(private=private))
 
     # ------------------------------------------------------------- decode
     def step(self) -> List[Tuple[int, str, GenStats]]:
@@ -250,6 +315,18 @@ class _Lane:
             w = jnp.ones((b,))
         nxt_greedy = np.asarray(eng._argmax_batched(probs))
         w_host = np.asarray(w)
+        nxt_sampled = None
+        if any(s is not None and not s.greedy for s in self.slots):
+            # on-device vmapped categorical over the fused distribution —
+            # one dispatch for the whole batch instead of a per-row host
+            # loop; keys fold_in(rid, step) match the sequential engine
+            rids = np.zeros((b,), np.int32)
+            steps = np.zeros((b,), np.int32)
+            for i, s in enumerate(self.slots):
+                if s is not None:
+                    rids[i], steps[i] = s.rid, len(s.out_ids)
+            nxt_sampled = np.asarray(eng._sample_batched(
+                probs, jnp.asarray(rids), jnp.asarray(steps)))
 
         done: List[Tuple[int, str, GenStats]] = []
         next_tok = np.zeros((b, 1), np.int32)
@@ -264,13 +341,7 @@ class _Lane:
             else:
                 st.latency_ms.append(float(eng.latency.edge_compute_ms))
             st.fusion_w.append(float(w_host[i]))
-            if s.greedy:
-                nxt = int(nxt_greedy[i])
-            else:
-                key = jax.random.fold_in(eng._sample_key(s.rid),
-                                         len(s.out_ids))
-                nxt = int(jax.random.categorical(
-                    key, jnp.log(jnp.clip(probs[i], 1e-9))))
+            nxt = int(nxt_greedy[i]) if s.greedy else int(nxt_sampled[i])
             s.out_ids.append(nxt)
             st.tokens += 1
             if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
@@ -299,10 +370,13 @@ class BatchedHybridEngine(HybridEngine):
     share a hybrid SLM+LLM batch whose per-token fusion runs through the
     Pallas ``logit_fusion`` kernel with a per-row Sec. IV-D arrived
     mask; private requests share an SLM-only batch (Alg. 2 — they never
-    touch the network path).  New requests are prefilled at B=1
-    (bit-identical to the sequential path) and scattered into freed
-    rows as sequences hit EOS; every occupied row then advances one
-    token per jitted batched decode step."""
+    touch the network path).  Admissions that arrive in the same step
+    share one packed B>1 prefill (prompts padded to a chunk-rounded
+    length, per-row lengths masked) and are scattered into freed rows as
+    sequences hit EOS; every occupied row then advances one token per
+    jitted batched decode step.  All dense-family cache layouts are
+    supported — plain, grouped mixed-attention (gemma3 5:1), and
+    window-sized ring caches with per-row ring indices."""
 
     def __init__(self, slm, slm_params, llm, llm_params, alignment_mlp,
                  expert_bank=None, router: Optional[Router] = None,
@@ -310,22 +384,23 @@ class BatchedHybridEngine(HybridEngine):
                  latency: Optional[LatencyModel] = None,
                  timeout_ms: float = 200.0, max_seq: int = 96,
                  sample_seed: int = 0, batch_size: int = 8,
-                 edge_batch_size: Optional[int] = None, block_b: int = 4):
+                 edge_batch_size: Optional[int] = None, block_b: int = 4,
+                 packed_prefill: bool = True, prefill_chunk: int = 16):
         super().__init__(slm, slm_params, llm, llm_params, alignment_mlp,
                          expert_bank=expert_bank, router=router,
                          detector=detector, latency=latency,
                          timeout_ms=timeout_ms, max_seq=max_seq,
                          sample_seed=sample_seed)
         for lm in (slm, llm):
-            # plain-layout dense only: the lane cache scatter and per-row
-            # decode positions assume (L, B, ...) cache leaves; grouped
-            # layouts (gemma3 mixed attention) stack (n_groups, g-1, B, ...)
-            if lm.cfg.family != "dense" or lm._layout()[0] != "plain":
+            # the per-leaf batch-axis scatter below covers every dense
+            # cache layout; other families keep a scalar decode pos
+            if lm.cfg.family != "dense":
                 raise NotImplementedError(
-                    "batched continuous decode supports plain dense-"
-                    f"family models (got {lm.cfg.family}/"
-                    f"{lm._layout()[0]})")
+                    "batched continuous decode supports dense-family "
+                    f"models (got {lm.cfg.family})")
         self.block_b = block_b
+        self.packed_prefill = packed_prefill
+        self.prefill_chunk = prefill_chunk
         self.lora = (LORA.bank_for_model(self.bank)
                      if self.router is not None and self.bank is not None
                      else None)
@@ -339,19 +414,60 @@ class BatchedHybridEngine(HybridEngine):
         self._softmax_batched = jax.jit(
             lambda sl: jax.nn.softmax(sl.astype(jnp.float32), -1))
         self._argmax_batched = jax.jit(lambda p: jnp.argmax(p, -1))
+        self._sample_batched = lambda probs, rids, steps: OPS.sample_fused(
+            probs, rids, steps, seed=self.sample_seed)
         self._insert_row = jax.jit(
-            lambda full, row, i: full.at[i].set(row[0]))
-        self._insert_cache = jax.jit(self._insert_cache_impl)
+            lambda full, rows, src, dst: full.at[dst].set(rows[src]))
+        self._insert_slm = self._make_insert(slm)
+        self._insert_llm = self._make_insert(llm)
+        # packed burst prefill: one retrace per (padded B, padded L) pair
+        self._slm_prefill_packed = jax.jit(
+            lambda p, toks, lens, lora, g: slm.prefill_packed(
+                p, {"tokens": toks}, lens, self.max_seq, lora=lora,
+                gates=g))
+        self._llm_prefill_packed = jax.jit(
+            lambda p, toks, lens: llm.prefill_packed(
+                p, {"tokens": toks}, lens, self.max_seq))
 
-    @staticmethod
-    def _insert_cache_impl(full, row, i):
-        """Scatter a B=1 prefill cache into row i of a stacked lane cache
-        (leaf layout (L, B, ...); per-row "pos" is the 1-D leaf)."""
-        def ins(f, r):
-            if f.ndim == 1:                       # pos: (B,) <- scalar
-                return f.at[i].set(r.astype(f.dtype))
-            return f.at[:, i].set(r[:, 0].astype(f.dtype))
-        return jax.tree.map(ins, full, row)
+    # ------------------------------------------------- cache row scatter
+    def _cache_batch_axes(self, lm):
+        """Per-leaf batch axis of a lane cache, found structurally: the
+        axis whose extent tracks init_cache's batch argument (grouped
+        layouts stack it behind the group dims).  -1 marks batch-free
+        leaves (the scalar "pos", which _alloc overrides per-row)."""
+        c2 = jax.eval_shape(lambda: lm.init_cache(2, self.max_seq))
+        c3 = jax.eval_shape(lambda: lm.init_cache(3, self.max_seq))
+
+        def ax(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            return -1
+        return jax.tree.map(ax, c2, c3)
+
+    def _make_insert(self, lm):
+        """Jitted (full, row_cache, src_rows, dst_slots) scatter of
+        prefilled cache rows into a stacked lane cache — ALL rows of an
+        admission burst in one fused update (a per-row loop would copy
+        the whole lane cache once per row), generic over the model's
+        cache layout.  src/dst: (n,) int32 index arrays."""
+        axes = jax.tree.leaves(self._cache_batch_axes(lm))
+
+        def impl(full, row, src, dst):
+            ff, fdef = jax.tree.flatten(full)
+            rr, _ = jax.tree.flatten(row)
+            out = []
+            for f, r, ax in zip(ff, rr, axes):
+                if f.ndim == 1:       # per-row pos <- scalar or (B,) row
+                    out.append(f.at[dst].set(
+                        jnp.reshape(r, (-1,))[src].astype(f.dtype)))
+                else:
+                    taken = jnp.moveaxis(
+                        jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
+                    fm = jnp.moveaxis(f, ax, 0).at[dst].set(taken)
+                    out.append(jnp.moveaxis(fm, 0, ax))
+            return jax.tree.unflatten(fdef, out)
+        return jax.jit(impl)
 
     # ------------------------------------------------------------- public
     def has_capacity(self, private: bool) -> bool:
@@ -361,13 +477,30 @@ class BatchedHybridEngine(HybridEngine):
     def add_request(self, prompt: str, max_new_tokens: int = 16,
                     greedy: bool = True, rid: int = 0) -> bool:
         """Admit a request into its lane; False if the lane is full."""
-        private = self.detector.detect(prompt)
-        lane = self.edge_lane if private else self.cloud_lane
-        slot = lane.free_slot()
-        if slot is None:
-            return False
-        lane.admit(slot, prompt, max_new_tokens, greedy, rid, private)
-        return True
+        return self.add_requests([(prompt, max_new_tokens, greedy,
+                                   rid)])[0]
+
+    def add_requests(self, reqs: List[Tuple[str, int, bool, int]]
+                     ) -> List[bool]:
+        """Admit a burst of (prompt, max_new_tokens, greedy, rid)
+        requests.  Requests landing in the same lane share ONE packed
+        B>1 prefill (the per-request prefill loop dominated burst
+        admission wall time).  Returns per-request admitted flags;
+        rejected requests (lane full) should be resubmitted later."""
+        flags = [False] * len(reqs)
+        jobs = {True: [], False: []}
+        free = {True: self.edge_lane.free_slots(),
+                False: self.cloud_lane.free_slots()}
+        for i, (prompt, max_new, greedy, rid) in enumerate(reqs):
+            private = self.detector.detect(prompt)
+            if free[private]:
+                slot = free[private].pop(0)
+                jobs[private].append((slot, prompt, max_new, greedy,
+                                      rid, private))
+                flags[i] = True
+        self.edge_lane.admit_many(jobs[True])
+        self.cloud_lane.admit_many(jobs[False])
+        return flags
 
     def active_count(self) -> int:
         return self.cloud_lane.active + self.edge_lane.active

@@ -91,16 +91,22 @@ class ContinuousBatchScheduler:
         admitted_at: Dict[int, float] = {}
         out: List[Response] = []
         while pending or self.engine.active_count():
-            # fill freed slots (FIFO per lane; a full lane skips, a later
-            # request bound for the other lane may still be admitted)
-            still: List[Request] = []
-            for r in pending:
-                if self.engine.add_request(r.prompt, r.max_new_tokens,
-                                           rid=r.rid):
-                    admitted_at[r.rid] = time.time()
-                else:
-                    still.append(r)
-            pending = still
+            # fill freed slots as ONE admission burst (FIFO per lane; a
+            # full lane skips, a later request bound for the other lane
+            # may still be admitted) — all admissions that land in a
+            # lane this step share a single packed B>1 prefill
+            if pending:
+                flags = self.engine.add_requests(
+                    [(r.prompt, r.max_new_tokens, True, r.rid)
+                     for r in pending])
+                now = time.time()
+                still: List[Request] = []
+                for r, ok in zip(pending, flags):
+                    if ok:
+                        admitted_at[r.rid] = now
+                    else:
+                        still.append(r)
+                pending = still
             for rid, text, stats in self.engine.step():
                 out.append(Response(rid, text, stats,
                                     time.time() - admitted_at[rid]))

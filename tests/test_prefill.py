@@ -1,0 +1,139 @@
+"""Packed batch prefill parity: one B>1 chunk-padded prefill call must
+reproduce per-request B=1 prefill — caches and first-token logits — for
+ragged prompt lengths, on both plain and mixed-attention (ring-cache)
+layouts.  This is the admission-cost optimization behind
+``BatchedHybridEngine.add_requests``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as ATT
+from repro.models.model import LM
+
+ATOL = 1e-5
+
+
+@pytest.fixture(scope="module")
+def plain_lm():
+    cfg = get_config("floe-slm-2b").reduced()
+    lm = LM(cfg, remat=False)
+    return lm, lm.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def ring_lm():
+    cfg = get_config("floe-slm-gemma3").reduced()
+    lm = LM(cfg, remat=False, ring_cache=True)
+    return lm, lm.init(jax.random.key(1))
+
+
+def _ragged_tokens(vocab: int, lengths, lpad: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    rows = [rng.randint(1, vocab, (n,)) for n in lengths]
+    toks = np.zeros((len(rows), lpad), np.int32)
+    for i, r in enumerate(rows):
+        toks[i, :len(r)] = r
+    return rows, jnp.asarray(toks)
+
+
+def _ring_valid_slots(length: int, window: int) -> np.ndarray:
+    # only slots whose ring position is >= 0 carry real data for a row
+    # that has not filled its window yet
+    return np.asarray(ATT.ring_kv_positions(length - 1, window)) >= 0
+
+
+@pytest.mark.parametrize("lengths", [[3, 9, 5, 12], [1, 16, 7]])
+def test_packed_prefill_matches_b1_plain(plain_lm, lengths):
+    lm, params = plain_lm
+    max_seq, lpad = 32, 16
+    rows, toks = _ragged_tokens(lm.cfg.vocab_size, lengths, lpad)
+    lg, cache = lm.prefill_packed(params, {"tokens": toks},
+                                  jnp.asarray(lengths), max_seq)
+    assert cache["pos"].shape == (len(lengths),)
+    np.testing.assert_array_equal(np.asarray(cache["pos"]), lengths)
+    for i, r in enumerate(rows):
+        lg1, c1 = lm.prefill(params, {"tokens": jnp.asarray(r[None, :])},
+                             max_seq)
+        np.testing.assert_allclose(np.asarray(lg[i]), np.asarray(lg1[0]),
+                                   atol=ATOL)
+        n = lengths[i]
+        for leaf in ("k", "v"):
+            np.testing.assert_allclose(
+                np.asarray(cache[leaf][:, i, :n]),
+                np.asarray(c1[leaf][:, 0, :n]), atol=ATOL)
+
+
+@pytest.mark.parametrize("lengths", [[3, 20, 17], [2, 5, 30, 11]])
+def test_packed_prefill_matches_b1_ring(ring_lm, lengths):
+    """gemma3-style grouped layout: sliding layers keep window-sized
+    ring caches; packed prefill must place each row's last-w positions
+    at slot p % w regardless of the shared padding length."""
+    lm, params = ring_lm
+    w = lm.cfg.sliding_window
+    max_seq, lpad = 48, 32
+    rows, toks = _ragged_tokens(lm.cfg.vocab_size, lengths, lpad)
+    lg, cache = lm.prefill_packed(params, {"tokens": toks},
+                                  jnp.asarray(lengths), max_seq)
+    for i, r in enumerate(rows):
+        lg1, c1 = lm.prefill(params, {"tokens": jnp.asarray(r[None, :])},
+                             max_seq)
+        np.testing.assert_allclose(np.asarray(lg[i]), np.asarray(lg1[0]),
+                                   atol=ATOL)
+        n = lengths[i]
+        valid = _ring_valid_slots(n, w)
+        for leaf in ("k", "v"):
+            # ring (local) layers: compare live slots only
+            np.testing.assert_allclose(
+                np.asarray(cache["inner"][leaf][:, :, i][..., valid, :, :]),
+                np.asarray(c1["inner"][leaf][:, :, 0][..., valid, :, :]),
+                atol=ATOL)
+            # global layers: full-length cache, compare the valid prefix
+            np.testing.assert_allclose(
+                np.asarray(cache["global"][leaf][:, i, :n]),
+                np.asarray(c1["global"][leaf][:, 0, :n]), atol=ATOL)
+
+
+def test_packed_prefill_pad_rows_do_not_leak(plain_lm):
+    """Adding pad rows (the engine rounds B up to a power of two) must
+    not change the real rows' logits."""
+    lm, params = plain_lm
+    lengths = [4, 7]
+    rows, toks = _ragged_tokens(lm.cfg.vocab_size, lengths, 8)
+    lg2, _ = lm.prefill_packed(params, {"tokens": toks},
+                               jnp.asarray(lengths), 32)
+    toks4 = jnp.concatenate([toks, jnp.zeros((2, 8), jnp.int32)])
+    lg4, _ = lm.prefill_packed(params, {"tokens": toks4},
+                               jnp.asarray(lengths + [1, 1]), 32)
+    np.testing.assert_allclose(np.asarray(lg4[:2]), np.asarray(lg2),
+                               atol=ATOL)
+
+
+def test_packed_prefill_then_rowwise_decode_matches_sequential(ring_lm):
+    """End-to-end ragged continuation: packed-prefilled rows decoded with
+    per-row positions (ring caches included) must track each row's own
+    B=1 prefill+decode greedy stream across the window wrap."""
+    lm, params = ring_lm
+    lengths = [3, 20]
+    max_seq, steps = 48, 12   # rows cross window=16 at different steps
+    rows, toks = _ragged_tokens(lm.cfg.vocab_size, lengths, 24)
+    lg, cache = lm.prefill_packed(params, {"tokens": toks},
+                                  jnp.asarray(lengths), max_seq)
+    nxt = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)
+    got = [[] for _ in lengths]
+    for _ in range(steps):
+        for i in range(len(lengths)):
+            got[i].append(int(nxt[i]))
+        lg, cache = lm.decode_step(params, cache, nxt[:, None])
+        nxt = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)
+    for i, r in enumerate(rows):
+        lg1, c1 = lm.prefill(params, {"tokens": jnp.asarray(r[None, :])},
+                             max_seq)
+        t = jnp.argmax(lg1[:, 0], -1).astype(jnp.int32)
+        want = []
+        for _ in range(steps):
+            want.append(int(t[0]))
+            lg1, c1 = lm.decode_step(params, c1, t[:, None])
+            t = jnp.argmax(lg1[:, 0], -1).astype(jnp.int32)
+        assert got[i] == want
