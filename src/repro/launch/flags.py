@@ -1,0 +1,45 @@
+"""Pre-jax-init argv helpers.
+
+These run before the FIRST jax import (the host device count locks at
+first init), so this module must never import jax — directly or
+transitively.  Shared by every entry point that fakes a host mesh from
+a ``--mesh-devices N`` flag (launch/serve.py, benchmarks/throughput.py).
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional
+
+
+def argv_flag_value(argv: List[str], name: str) -> Optional[str]:
+    """Value of ``name`` in raw argv (both ``--flag N`` and ``--flag=N``
+    forms), None when absent — a pre-argparse scan for flags that must
+    be honoured before jax initializes."""
+    for i, a in enumerate(argv):
+        if a == name and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith(name + "="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def force_host_devices_from_argv(argv: List[str],
+                                 name: str = "--mesh-devices") -> None:
+    """Append ``--xla_force_host_platform_device_count=N`` to XLA_FLAGS
+    when argv carries ``name`` with N > 1.  N <= 1 — including an
+    explicit ``--mesh-devices 0`` off toggle — is a no-op (a forced
+    device count of 0 would crash jax's CPU backend init); a non-integer
+    value is left for argparse to report.
+
+    APPENDED because for duplicated XLA flags the LAST occurrence wins:
+    the user's explicit --mesh-devices must override any device count
+    already sitting in the environment."""
+    raw = argv_flag_value(argv, name)
+    try:
+        n = int(raw) if raw is not None else 0
+    except ValueError:
+        return
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()

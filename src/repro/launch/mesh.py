@@ -3,6 +3,7 @@ never touches jax device state; see MULTI-POD DRY-RUN spec)."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,6 +16,34 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU tests/benches (never 512 placeholders)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(n_devices: int = 0, devices=None):
+    """Mesh for mesh-sharded continuous-decode lanes: one lane spans a
+    pod slice, batch rows over ("pod", "data"), wide cache dims over
+    "model" (launch/sharding.py ``lane_leaf_spec`` rules).
+
+    Factors the device count as pod×data×model: "model" takes a factor
+    of 2 when 4+ devices are available (enough left for batch
+    parallelism), the remainder backs the ("pod", "data") batch axes —
+    8 devices -> (2, 2, 2), 4 -> (1, 2, 2), 2 -> (1, 2, 1).  Works for
+    real accelerators and for host meshes of fake CPU devices
+    (``--xla_force_host_platform_device_count``)."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if n_devices:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"make_serving_mesh: asked for {n_devices} devices but "
+                f"only {len(devs)} exist (set "
+                "--xla_force_host_platform_device_count before jax init)")
+        devs = devs[:n_devices]
+    n = len(devs)
+    model = 2 if (n % 2 == 0 and n >= 4) else 1
+    rest = n // model
+    pod = 2 if rest % 4 == 0 else 1
+    data = rest // pod
+    arr = np.asarray(devs).reshape(pod, data, model)
+    return jax.sharding.Mesh(arr, ("pod", "data", "model"))
 
 
 # TPU v5e hardware constants for the roofline (per chip)

@@ -1,15 +1,26 @@
 """Serving launcher.
 
   * --local: run the real hybrid LLM-SLM engine on CPU (reduced configs)
-    with batched requests through the scheduler.
+    with batched requests through the scheduler.  ``--mesh-devices N``
+    fakes an N-device host mesh (same XLA flag as the dry-run) and
+    shards the continuous-decode lanes over it.
   * default: lower the fused co-serving decode step (or a single-arch
     serve step) onto the production mesh.
 """
 import os
-if "--local" not in __import__("sys").argv:
+import sys
+
+from repro.launch.flags import force_host_devices_from_argv
+
+# the device count is locked at first jax init, so both the 512-chip
+# dry-run placeholder AND the --local fake host mesh must be set here,
+# before any jax import
+if "--local" not in sys.argv:
     os.environ["XLA_FLAGS"] = (
         "--xla_force_host_platform_device_count=512 "
         + os.environ.get("XLA_FLAGS", ""))
+else:
+    force_host_devices_from_argv(sys.argv)
 
 import argparse  # noqa: E402
 
@@ -26,11 +37,22 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="decode-batch width; >1 uses the continuous-"
                          "batching engine (Pallas-fused logit path)")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="with --local: fake N host devices and shard "
+                         "the decode lanes over a (pod, data, model) "
+                         "serving mesh (requires --batch > 1)")
+    ap.add_argument("--sample", action="store_true",
+                    help="non-greedy decoding (per-request PRNG keys)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="root seed of the per-request sampling keys")
     from repro.configs.floe_pair import FLOE_PAIRS
     ap.add_argument("--pair", default="2b", choices=sorted(FLOE_PAIRS),
                     help="SLM/LLM pairing; 'gemma3' serves the mixed-"
                          "attention SLM with ring-cached window layers")
     args = ap.parse_args()
+    if args.mesh_devices > 1 and not (args.local and args.batch > 1):
+        ap.error("--mesh-devices requires --local and --batch > 1 "
+                 "(only the continuous-batching lanes are mesh-sharded)")
 
     if args.local:
         import jax
@@ -48,16 +70,23 @@ def main():
         sp = slm.init(jax.random.key(0))
         lp = llm.init(jax.random.key(1))
         mlp = FUS.init_alignment(jax.random.key(2), slm_cfg.vocab_size)
+        mesh = None
+        if args.mesh_devices > 1:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(args.mesh_devices)
+            print(f"serving mesh: {dict(mesh.shape)}")
         if args.batch > 1:
             eng = BatchedHybridEngine(
                 slm, sp, llm, lp, mlp,
                 latency=LatencyModel(rtt_ms=args.rtt_ms),
-                timeout_ms=args.timeout_ms, batch_size=args.batch)
+                timeout_ms=args.timeout_ms, batch_size=args.batch,
+                sample_seed=args.sample_seed, mesh=mesh)
             sched = ContinuousBatchScheduler(eng)
         else:
             eng = HybridEngine(slm, sp, llm, lp, mlp,
                                latency=LatencyModel(rtt_ms=args.rtt_ms),
-                               timeout_ms=args.timeout_ms)
+                               timeout_ms=args.timeout_ms,
+                               sample_seed=args.sample_seed)
             sched = Scheduler(eng)
         for prompt in [
             "math: compute 12 plus 7 =",
@@ -65,12 +94,14 @@ def main():
             "translate to french: water ->",
             "my doctor said my blood pressure is 140 over 90",
         ]:
-            sched.submit(prompt, max_new_tokens=8)
+            sched.submit(prompt, max_new_tokens=8,
+                         greedy=not args.sample)
         res = sched.run()
         for r in res:
             print(f"[{r.rid}] private={r.stats.private} "
                   f"cloud={r.stats.cloud_tokens}/{r.stats.tokens} "
-                  f"lat={r.stats.mean_latency_ms:.0f}ms  {r.text!r}")
+                  f"lat={r.stats.mean_latency_ms:.0f}ms "
+                  f"wait={r.queue_wait_seconds * 1e3:.0f}ms  {r.text!r}")
         print(summarize(res))
         return
 

@@ -177,6 +177,53 @@ def make_activation_policy(cfg, mesh, global_batch: int,
 # ----------------------------------------------------------------- caches
 
 
+def lane_leaf_spec(shape: Tuple[int, ...], batch_ax: int, mesh: Mesh,
+                   rules: Optional[Dict[str, Optional[str]]] = None) -> P:
+    """PartitionSpec for one stacked decode-lane cache leaf.
+
+    ``batch_ax`` is the leaf's structurally-discovered batch axis
+    (``BatchedHybridEngine._cache_batch_axes``; -1 marks batch-free
+    leaves such as the per-row "pos" vector, which stays replicated).
+    The batch axis goes to the mesh batch axes ("pod", "data"); the wide
+    trailing dims behind the sequence axis (KV heads / head_dim — the
+    ``kv_hd`` logical axis of the rule set) go to the rule set's kv_hd
+    mesh axis.  Divisibility falls back to replication, matching the
+    param rules above."""
+    rules = rules or RULES_INFERENCE
+    sizes = dict(mesh.shape)
+    daxes = batch_axes(mesh)
+    total = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+    spec = [None] * len(shape)
+    if batch_ax is not None and batch_ax >= 0 and total > 1 \
+            and shape[batch_ax] % total == 0:
+        spec[batch_ax] = daxes if len(daxes) > 1 else daxes[0]
+    wide = rules.get("kv_hd", "model")
+    if wide and wide in sizes and sizes[wide] > 1 \
+            and batch_ax is not None and batch_ax >= 0:
+        # leaf layout stacks (batch, seq, KV, hd); shard the first wide
+        # dim divisible by the axis (KV for many-head caches, head_dim
+        # for single-KV-head SLMs)
+        for md in (batch_ax + 2, batch_ax + 3):
+            if md < len(shape) and spec[md] is None \
+                    and shape[md] % sizes[wide] == 0:
+                spec[md] = wide
+                break
+    return P(*spec)
+
+
+def lane_cache_shardings(cache_tree: Any, batch_axes_tree: Any, mesh: Mesh,
+                         rules: Optional[Dict[str, Optional[str]]] = None
+                         ) -> Any:
+    """Per-leaf NamedShardings for a stacked continuous-decode lane
+    cache (``cache_tree`` may be concrete or abstract — only shapes are
+    read).  ``batch_axes_tree`` mirrors the cache structure with each
+    leaf's batch-axis index."""
+    return jax.tree.map(
+        lambda leaf, ab: NamedSharding(
+            mesh, lane_leaf_spec(leaf.shape, ab, mesh, rules)),
+        cache_tree, batch_axes_tree)
+
+
 def cache_shardings(cfg, cache_abstract: Any, mesh: Mesh,
                     shard_seq: bool = False,
                     kv_seq_model: bool = False) -> Any:

@@ -23,6 +23,14 @@ from repro.models.sharding_hooks import constrain
 
 NEG_INF = -2.0 ** 30
 
+# Continuous batching: a freed (EOS-drained) batch row is "parked" at
+# this position until re-admission.  Both rowwise decode scatter paths
+# drop cache writes for parked rows (the plain path because FREED_POS is
+# far past max_seq, the ring path via an out-of-range slot index), so a
+# drained row's cache stays bit-identical while it idles in the batch.
+# Far below int32 max so pos+1 per idle step never overflows.
+FREED_POS = 1 << 30
+
 
 # ---------------------------------------------------------------------------
 # Specs
@@ -260,18 +268,20 @@ def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
         if window and cache["k"].shape[1] == window:
             # ring cache + per-row positions: row b writes its new KV
             # into slot pos_b[b] % window (each row at its own ring
-            # index); drained rows overwrite their own ring garbage,
-            # which admit() replaces wholesale anyway
-            slot = jnp.mod(row_pos, window)
+            # index); parked rows (pos >= FREED_POS, freed on EOS) get
+            # an out-of-range slot so the write drops instead of
+            # spraying garbage into their ring buffer
+            slot = jnp.where(row_pos < FREED_POS,
+                             jnp.mod(row_pos, window), window)
             ck = constrain(cache["k"].at[jnp.arange(b), slot].set(
-                k[:, 0]), "cache_kv")
+                k[:, 0], mode="drop"), "cache_kv")
             cv = constrain(cache["v"].at[jnp.arange(b), slot].set(
-                v[:, 0]), "cache_kv")
+                v[:, 0], mode="drop"), "cache_kv")
             out = rowwise_ring_decode_attention(q, ck, cv, row_pos, window)
         else:
-            # each row scatters its new KV at its own position; rows
-            # parked past max_seq (drained slots) drop the update
-            # harmlessly
+            # each row scatters its new KV at its own position; parked
+            # rows (pos = FREED_POS >> max_seq, drained slots) drop the
+            # update harmlessly via mode="drop"
             ck = constrain(cache["k"].at[jnp.arange(b), row_pos].set(
                 k[:, 0], mode="drop"), "cache_kv")
             cv = constrain(cache["v"].at[jnp.arange(b), row_pos].set(

@@ -768,5 +768,8 @@ class LM:
         for k in cache:
             if k not in new_cache or new_cache.get(k) is None:
                 new_cache[k] = cache[k]
-        new_cache["pos"] = pos + 1
+        # parked rows (continuous batching: freed on EOS, pos set to
+        # ATT.FREED_POS) hold position so "freed" stays an exact marker
+        # and never creeps toward int32 overflow on long-idle lanes
+        new_cache["pos"] = jnp.where(pos >= ATT.FREED_POS, pos, pos + 1)
         return logits, new_cache

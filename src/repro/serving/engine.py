@@ -11,6 +11,10 @@ Pipeline per request (Fig. 8):
 Both models run as JAX decode steps; "cloud" latency comes from
 serving/latency.py.  The dry-run lowers the same fused step onto the
 production mesh (launch/dryrun.py ``floe-fusion`` target).
+
+``BatchedHybridEngine(mesh=...)`` shards the continuous-decode lanes
+over a JAX mesh (launch/mesh.py ``make_serving_mesh``) so one lane
+spans a pod slice — see the class docstring for the layout contract.
 """
 from __future__ import annotations
 
@@ -20,6 +24,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fusion as FUS
 from repro.core import lora as LORA
@@ -27,6 +33,8 @@ from repro.kernels.logit_fusion import ops as OPS
 from repro.core.privacy import PrivacyDetector
 from repro.core.router import Router
 from repro.data import tokenizer as TOK
+from repro.launch import sharding as SH
+from repro.models import attention as ATT
 from repro.serving.latency import LatencyModel
 
 
@@ -88,11 +96,15 @@ class HybridEngine:
 
     # ------------------------------------------------------------- public
     def generate(self, prompt: str, max_new_tokens: int = 16,
-                 greedy: bool = True,
-                 rid: Optional[int] = None) -> Tuple[str, GenStats]:
+                 greedy: bool = True, rid: Optional[int] = None,
+                 sample_key_id: Optional[int] = None
+                 ) -> Tuple[str, GenStats]:
         """rid, when given, keys both the latency draws and the sampling
         PRNG per (request, token) — order-independent, so batched and
-        sequential serving see identical network weather and samples."""
+        sequential serving see identical network weather and samples.
+        ``sample_key_id`` (a caller-supplied per-request seed, plumbed
+        from ``Scheduler.submit``) overrides rid in the sampling key
+        derivation only — latency draws stay keyed by rid."""
         stats = GenStats()
         stats.private = self.detector.detect(prompt)
         gates = None
@@ -100,7 +112,8 @@ class HybridEngine:
         if self.router is not None and self.bank is not None:
             gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
             lora = LORA.bank_for_model(self.bank)
-        sample_key = self._sample_key(rid)
+        sample_key = self._sample_key(
+            rid if sample_key_id is None else sample_key_id)
 
         ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
         toks = jnp.asarray([ids], jnp.int32)
@@ -158,6 +171,7 @@ class _Slot:
     greedy: bool
     stats: GenStats
     out_ids: List[int] = field(default_factory=list)
+    key_id: Optional[int] = None     # per-request sampling seed override
 
 
 class _Lane:
@@ -194,22 +208,26 @@ class _Lane:
     def _alloc(self, vocab: int, n_experts: Optional[int]):
         eng = self.eng
         b = self.batch
-        self.s_cache = eng.slm.init_cache(b, eng.max_seq)
-        self.s_cache["pos"] = jnp.zeros((b,), jnp.int32)
+        self.s_cache = eng._commit_lane(
+            dict(eng.slm.init_cache(b, eng.max_seq),
+                 pos=jnp.zeros((b,), jnp.int32)), eng._slm_axes)
         if self.use_cloud:
-            self.l_cache = eng.llm.init_cache(b, eng.max_seq)
-            self.l_cache["pos"] = jnp.zeros((b,), jnp.int32)
-            self.ll = jnp.zeros((b, vocab), jnp.float32)
-        self.sl = jnp.zeros((b, vocab), jnp.float32)
+            self.l_cache = eng._commit_lane(
+                dict(eng.llm.init_cache(b, eng.max_seq),
+                     pos=jnp.zeros((b,), jnp.int32)), eng._llm_axes)
+            self.ll = eng._commit_replicated(
+                jnp.zeros((b, vocab), jnp.float32))
+        self.sl = eng._commit_replicated(jnp.zeros((b, vocab), jnp.float32))
         if n_experts is not None:
-            self.gates = jnp.zeros((b, n_experts), jnp.float32)
+            self.gates = eng._commit_replicated(
+                jnp.zeros((b, n_experts), jnp.float32))
 
     # --------------------------------------------------------- admission
-    def admit_many(self, jobs: List[Tuple[int, str, int, bool, int, bool]]):
+    def admit_many(self, jobs: List[Tuple]):
         """Admit a burst of requests in ONE packed B>1 prefill.
 
-        jobs: [(slot, prompt, max_new, greedy, rid, private)].  Prompts
-        are right-padded to a shared chunk-rounded length and prefilled
+        jobs: [(slot, prompt, max_new, greedy, rid, private, key_id)].
+        Prompts are right-padded to a shared chunk-rounded length and prefilled
         as a single jitted call with per-row valid lengths masked
         (``LM.prefill_packed``); the batch axis is padded to a power of
         two so retraces stay bounded.  Each resulting cache row is then
@@ -261,12 +279,14 @@ class _Lane:
             self.ll = eng._insert_row(self.ll, l_logits[:, 0], src, dst)
         if g is not None:
             self.gates = eng._insert_row(self.gates, g, src, dst)
-        for slot, prompt, max_new, greedy, rid, private in jobs:
+        for slot, prompt, max_new, greedy, rid, private, key_id in jobs:
             self.slots[slot] = _Slot(rid, max_new, greedy,
-                                     GenStats(private=private))
+                                     GenStats(private=private),
+                                     key_id=key_id)
 
     def _admit_one(self, slot: int, prompt: str, max_new: int,
-                   greedy: bool, rid: int, private: bool):
+                   greedy: bool, rid: int, private: bool,
+                   key_id: Optional[int] = None):
         """Legacy per-request B=1 prefill (kept as the burst-admission
         benchmark baseline and a bit-exact reference path)."""
         eng = self.eng
@@ -290,7 +310,7 @@ class _Lane:
         if gates_row is not None:
             self.gates = eng._insert_row(self.gates, gates_row, src, dst)
         self.slots[slot] = _Slot(rid, max_new, greedy,
-                                 GenStats(private=private))
+                                 GenStats(private=private), key_id=key_id)
 
     # ------------------------------------------------------------- decode
     def step(self) -> List[Tuple[int, str, GenStats]]:
@@ -319,16 +339,20 @@ class _Lane:
         if any(s is not None and not s.greedy for s in self.slots):
             # on-device vmapped categorical over the fused distribution —
             # one dispatch for the whole batch instead of a per-row host
-            # loop; keys fold_in(rid, step) match the sequential engine
+            # loop; keys fold_in(key_id, step) match the sequential
+            # engine (key_id defaults to rid; a per-request seed from
+            # Scheduler.submit overrides it)
             rids = np.zeros((b,), np.int32)
             steps = np.zeros((b,), np.int32)
             for i, s in enumerate(self.slots):
                 if s is not None:
-                    rids[i], steps[i] = s.rid, len(s.out_ids)
+                    rids[i] = s.rid if s.key_id is None else s.key_id
+                    steps[i] = len(s.out_ids)
             nxt_sampled = np.asarray(eng._sample_batched(
                 probs, jnp.asarray(rids), jnp.asarray(steps)))
 
         done: List[Tuple[int, str, GenStats]] = []
+        freed: List[int] = []
         next_tok = np.zeros((b, 1), np.int32)
         for i, s in enumerate(self.slots):
             if s is None:
@@ -347,9 +371,14 @@ class _Lane:
             if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
                 done.append((s.rid, TOK.decode(s.out_ids), st))
                 self.slots[i] = None        # freed: admit into this row
+                freed.append(i)
             else:
                 next_tok[i, 0] = nxt
 
+        if freed:
+            # park even when the lane fully drains: a later partial
+            # admission must not revive stale rows at live positions
+            self._park_rows(freed)
         if any(s is not None for s in self.slots):
             toks = jnp.asarray(next_tok)
             s_logits, self.s_cache = eng._slm_decode(
@@ -360,6 +389,23 @@ class _Lane:
                     eng.llm_params, self.l_cache, toks)
                 self.ll = l_logits[:, 0]
         return done
+
+    def _park_rows(self, freed: List[int]):
+        """Park freed rows at ATT.FREED_POS: the fixed-width batch still
+        spends their FLOPs (rows can't be skipped mid-batch), but the
+        decode scatter drops their cache writes — no garbage KV at
+        advancing positions, no garbage ring-slot writes — and their
+        position stops advancing (models/model.py freezes pos at the
+        sentinel).  Re-admission scatters a whole fresh row cache, so
+        parity with an unparked engine is unchanged."""
+        idx = jnp.asarray(freed, jnp.int32)
+        self.s_cache = dict(
+            self.s_cache,
+            pos=self.s_cache["pos"].at[idx].set(ATT.FREED_POS))
+        if self.use_cloud:
+            self.l_cache = dict(
+                self.l_cache,
+                pos=self.l_cache["pos"].at[idx].set(ATT.FREED_POS))
 
 
 class BatchedHybridEngine(HybridEngine):
@@ -376,7 +422,19 @@ class BatchedHybridEngine(HybridEngine):
     sequences hit EOS; every occupied row then advances one token per
     jitted batched decode step.  All dense-family cache layouts are
     supported — plain, grouped mixed-attention (gemma3 5:1), and
-    window-sized ring caches with per-row ring indices."""
+    window-sized ring caches with per-row ring indices.
+
+    With ``mesh=`` a lane spans the mesh instead of one device: every
+    stacked lane-cache leaf carries a per-leaf NamedSharding (batch rows
+    over the ("pod", "data") axes, wide KV/head dims over "model" — the
+    ``launch/sharding.py`` lane rules under ``rules=``, a RULESETS name
+    or an explicit dict), the jitted decode step and packed prefill pin
+    those layouts with sharding constraints, and admission scatters
+    freshly prefilled rows into the lane via a ``shard_map`` that routes
+    each row to the shard owning its slot — the whole lane cache is
+    never gathered to one device.  Fused logits are pulled back
+    replicated each step (the paper fuses at the edge), so the Pallas
+    fusion kernel and sampling are untouched."""
 
     def __init__(self, slm, slm_params, llm, llm_params, alignment_mlp,
                  expert_bank=None, router: Optional[Router] = None,
@@ -385,7 +443,8 @@ class BatchedHybridEngine(HybridEngine):
                  timeout_ms: float = 200.0, max_seq: int = 96,
                  sample_seed: int = 0, batch_size: int = 8,
                  edge_batch_size: Optional[int] = None, block_b: int = 4,
-                 packed_prefill: bool = True, prefill_chunk: int = 16):
+                 packed_prefill: bool = True, prefill_chunk: int = 16,
+                 mesh: Optional[Mesh] = None, rules="inference"):
         super().__init__(slm, slm_params, llm, llm_params, alignment_mlp,
                          expert_bank=expert_bank, router=router,
                          detector=detector, latency=latency,
@@ -401,6 +460,12 @@ class BatchedHybridEngine(HybridEngine):
         self.block_b = block_b
         self.packed_prefill = packed_prefill
         self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
+        if isinstance(rules, str):
+            rules = SH.RULESETS[rules]
+        self.rules = rules or SH.RULES_INFERENCE
+        self._slm_axes = self._cache_batch_axes(slm)
+        self._llm_axes = self._cache_batch_axes(llm)
         self.lora = (LORA.bank_for_model(self.bank)
                      if self.router is not None and self.bank is not None
                      else None)
@@ -418,16 +483,76 @@ class BatchedHybridEngine(HybridEngine):
             probs, rids, steps, seed=self.sample_seed)
         self._insert_row = jax.jit(
             lambda full, rows, src, dst: full.at[dst].set(rows[src]))
-        self._insert_slm = self._make_insert(slm)
-        self._insert_llm = self._make_insert(llm)
+        self._insert_slm = self._make_insert(slm, self._slm_axes)
+        self._insert_llm = self._make_insert(llm, self._llm_axes)
         # packed burst prefill: one retrace per (padded B, padded L) pair
         self._slm_prefill_packed = jax.jit(
-            lambda p, toks, lens, lora, g: slm.prefill_packed(
-                p, {"tokens": toks}, lens, self.max_seq, lora=lora,
-                gates=g))
+            lambda p, toks, lens, lora, g: self._lane_out(
+                slm.prefill_packed(p, {"tokens": toks}, lens, self.max_seq,
+                                   lora=lora, gates=g), self._slm_axes))
         self._llm_prefill_packed = jax.jit(
-            lambda p, toks, lens: llm.prefill_packed(
-                p, {"tokens": toks}, lens, self.max_seq))
+            lambda p, toks, lens: self._lane_out(
+                llm.prefill_packed(p, {"tokens": toks}, lens,
+                                   self.max_seq), self._llm_axes))
+        if mesh is not None:
+            # sharding-aware decode steps: pin every stacked cache leaf
+            # back to the lane layout each step (GSPMD propagation must
+            # not drift across the scan) and pull logits replicated for
+            # the edge-side fusion kernel
+            self._slm_decode = jax.jit(
+                lambda p, c, t, lora, g: self._lane_out(
+                    slm.decode_step(p, c, t, lora, g), self._slm_axes))
+            self._llm_decode = jax.jit(
+                lambda p, c, t: self._lane_out(
+                    llm.decode_step(p, c, t), self._llm_axes))
+
+    # ----------------------------------------------------- mesh plumbing
+    def _lane_out(self, logits_and_cache, axes_tree):
+        """Constrain a (logits, cache) pair to the lane layout: cache
+        leaves to their per-leaf lane specs, logits replicated (fusion
+        happens at the edge).  Identity without a mesh."""
+        logits, cache = logits_and_cache
+        if self.mesh is None:
+            return logits, cache
+        return self._replicated(logits), self._constrain_lane(cache,
+                                                              axes_tree)
+
+    def _constrain_lane(self, cache, axes_tree):
+        return jax.tree.map(
+            lambda x, ab: jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, SH.lane_leaf_spec(
+                    x.shape, ab, self.mesh, self.rules))),
+            cache, axes_tree)
+
+    def _replicated(self, x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P()))
+
+    def _commit_lane(self, cache, axes_tree):
+        """Lay a freshly allocated lane cache out over the mesh per the
+        launch/sharding.py lane rules (identity without a mesh)."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, SH.lane_cache_shardings(
+            cache, axes_tree, self.mesh, self.rules))
+
+    def _commit_replicated(self, x):
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
+
+    def lane_shardings(self, lm, batch: Optional[int] = None) -> Any:
+        """The NamedSharding tree a lane cache of ``lm`` is laid out
+        with (None without a mesh) — the contract tests assert against
+        ``leaf.sharding`` on the live lane caches."""
+        if self.mesh is None:
+            return None
+        axes = self._slm_axes if lm is self.slm else self._llm_axes
+        b = batch or self.cloud_lane.batch
+        cache = jax.eval_shape(
+            lambda: dict(lm.init_cache(b, self.max_seq),
+                         pos=jnp.zeros((b,), jnp.int32)))
+        return SH.lane_cache_shardings(cache, axes, self.mesh, self.rules)
 
     # ------------------------------------------------- cache row scatter
     def _cache_batch_axes(self, lm):
@@ -445,13 +570,61 @@ class BatchedHybridEngine(HybridEngine):
             return -1
         return jax.tree.map(ax, c2, c3)
 
-    def _make_insert(self, lm):
+    def _make_insert(self, lm, axes_tree):
         """Jitted (full, row_cache, src_rows, dst_slots) scatter of
         prefilled cache rows into a stacked lane cache — ALL rows of an
         admission burst in one fused update (a per-row loop would copy
         the whole lane cache once per row), generic over the model's
-        cache layout.  src/dst: (n,) int32 index arrays."""
-        axes = jax.tree.leaves(self._cache_batch_axes(lm))
+        cache layout.  src/dst: (n,) int32 index arrays.
+
+        With a mesh, batch-sharded leaves scatter through a
+        ``shard_map`` over the batch mesh axes: each device holds only
+        its own rows, translates dst slots to shard-local indices and
+        drops rows owned by other shards, so admitting a burst never
+        gathers the whole lane cache to one device (only the freshly
+        prefilled rows — n of them — are broadcast)."""
+        axes = jax.tree.leaves(axes_tree)
+        mesh, rules = self.mesh, self.rules
+        daxes = SH.batch_axes(mesh) if mesh is not None else ()
+        sizes = dict(mesh.shape) if mesh is not None else {}
+
+        def plain(f, r, ax, src, dst):
+            taken = jnp.moveaxis(
+                jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
+            fm = jnp.moveaxis(f, ax, 0).at[dst].set(taken)
+            return jnp.moveaxis(fm, 0, ax)
+
+        def sharded(f, r, ax, src, dst, spec):
+            # batch moved to front; a dim d of the original layout lands
+            # at d (d > ax), d + 1 (d < ax), or 0 (d == ax)
+            taken = jnp.moveaxis(
+                jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
+            fm = jnp.moveaxis(f, ax, 0)
+            mspec = [None] * fm.ndim
+            mspec[0] = spec[ax]
+            for d in range(len(spec)):
+                if d != ax and spec[d] is not None:
+                    mspec[d if d > ax else d + 1] = spec[d]
+            rspec = list(mspec)
+            rspec[0] = None              # admitted rows: replicated batch
+
+            def body(f_loc, t_loc, dst_loc):
+                idx = jnp.int32(0)
+                for a in daxes:
+                    idx = idx * sizes[a] + jax.lax.axis_index(a)
+                nb = f_loc.shape[0]
+                start = idx * nb
+                # slots outside this shard -> index nb, dropped by the
+                # scatter (never wrap: dst - start can be negative)
+                loc = jnp.where((dst_loc >= start) & (dst_loc < start + nb),
+                                dst_loc - start, nb)
+                return f_loc.at[loc].set(t_loc, mode="drop")
+
+            fm = shard_map(body, mesh=mesh,
+                           in_specs=(P(*mspec), P(*rspec), P()),
+                           out_specs=P(*mspec),
+                           check_rep=False)(fm, taken, dst)
+            return jnp.moveaxis(fm, 0, ax)
 
         def impl(full, row, src, dst):
             ff, fdef = jax.tree.flatten(full)
@@ -461,11 +634,17 @@ class BatchedHybridEngine(HybridEngine):
                 if f.ndim == 1:       # per-row pos <- scalar or (B,) row
                     out.append(f.at[dst].set(
                         jnp.reshape(r, (-1,))[src].astype(f.dtype)))
+                    continue
+                if mesh is None:
+                    out.append(plain(f, r, ax, src, dst))
+                    continue
+                spec = SH.lane_leaf_spec(f.shape, ax, mesh, rules)
+                if spec[ax] is None:  # batch replicated: plain scatter
+                    res = jax.lax.with_sharding_constraint(
+                        plain(f, r, ax, src, dst), NamedSharding(mesh, spec))
                 else:
-                    taken = jnp.moveaxis(
-                        jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
-                    fm = jnp.moveaxis(f, ax, 0).at[dst].set(taken)
-                    out.append(jnp.moveaxis(fm, 0, ax))
+                    res = sharded(f, r, ax, src, dst, spec)
+                out.append(res)
             return jax.tree.unflatten(fdef, out)
         return jax.jit(impl)
 
@@ -475,15 +654,16 @@ class BatchedHybridEngine(HybridEngine):
         return lane.free_slot() is not None
 
     def add_request(self, prompt: str, max_new_tokens: int = 16,
-                    greedy: bool = True, rid: int = 0) -> bool:
+                    greedy: bool = True, rid: int = 0,
+                    seed: Optional[int] = None) -> bool:
         """Admit a request into its lane; False if the lane is full."""
         return self.add_requests([(prompt, max_new_tokens, greedy,
-                                   rid)])[0]
+                                   rid, seed)])[0]
 
-    def add_requests(self, reqs: List[Tuple[str, int, bool, int]]
-                     ) -> List[bool]:
-        """Admit a burst of (prompt, max_new_tokens, greedy, rid)
-        requests.  Requests landing in the same lane share ONE packed
+    def add_requests(self, reqs: List[Tuple]) -> List[bool]:
+        """Admit a burst of (prompt, max_new_tokens, greedy, rid[, seed])
+        requests (seed, optional, overrides rid in the sampling-key
+        derivation).  Requests landing in the same lane share ONE packed
         B>1 prefill (the per-request prefill loop dominated burst
         admission wall time).  Returns per-request admitted flags;
         rejected requests (lane full) should be resubmitted later."""
@@ -491,12 +671,13 @@ class BatchedHybridEngine(HybridEngine):
         jobs = {True: [], False: []}
         free = {True: self.edge_lane.free_slots(),
                 False: self.cloud_lane.free_slots()}
-        for i, (prompt, max_new, greedy, rid) in enumerate(reqs):
+        for i, (prompt, max_new, greedy, rid, *rest) in enumerate(reqs):
             private = self.detector.detect(prompt)
             if free[private]:
                 slot = free[private].pop(0)
                 jobs[private].append((slot, prompt, max_new, greedy,
-                                      rid, private))
+                                      rid, private,
+                                      rest[0] if rest else None))
                 flags[i] = True
         self.edge_lane.admit_many(jobs[True])
         self.cloud_lane.admit_many(jobs[False])

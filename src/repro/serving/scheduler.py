@@ -7,12 +7,19 @@ Two schedulers share the queue/Response protocol:
   * ``ContinuousBatchScheduler`` — packs requests into the
     ``BatchedHybridEngine`` decode lanes and refills freed rows as
     sequences hit EOS (continuous batching).
+
+Latency semantics: ``Response.wall_seconds`` is measured from
+``Request.submitted_at`` — it INCLUDES the time the request sat in the
+queue waiting for a free lane slot (the latency the paper's real-time
+claim is about), which is also broken out as
+``Response.queue_wait_seconds``.  ``summarize`` reports queue-wait
+mean/p95 alongside the per-token latencies.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -26,6 +33,8 @@ class Request:
     prompt: str
     max_new_tokens: int = 16
     submitted_at: float = 0.0
+    greedy: bool = True
+    seed: Optional[int] = None       # sampling-key override (else rid)
 
 
 @dataclass
@@ -33,7 +42,8 @@ class Response:
     rid: int
     text: str
     stats: GenStats
-    wall_seconds: float
+    wall_seconds: float              # submit -> finish (incl. queue wait)
+    queue_wait_seconds: float = 0.0  # submit -> admission into a lane
 
 
 class Scheduler:
@@ -45,10 +55,12 @@ class Scheduler:
         self.queue: List[Request] = []
         self._next = 0
 
-    def submit(self, prompt: str, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: str, max_new_tokens: int = 16,
+               greedy: bool = True, seed: Optional[int] = None) -> int:
         rid = self._next
         self._next += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens, time.time()))
+        self.queue.append(Request(rid, prompt, max_new_tokens, time.time(),
+                                  greedy, seed))
         return rid
 
     def run(self) -> List[Response]:
@@ -62,8 +74,11 @@ class Scheduler:
         for r in private + public:
             t0 = time.time()
             text, stats = self.engine.generate(r.prompt, r.max_new_tokens,
-                                               rid=r.rid)
-            out.append(Response(r.rid, text, stats, time.time() - t0))
+                                               greedy=r.greedy, rid=r.rid,
+                                               sample_key_id=r.seed)
+            out.append(Response(r.rid, text, stats,
+                                wall_seconds=time.time() - r.submitted_at,
+                                queue_wait_seconds=t0 - r.submitted_at))
         return sorted(out, key=lambda x: x.rid)
 
 
@@ -79,15 +94,18 @@ class ContinuousBatchScheduler:
         self.queue: List[Request] = []
         self._next = 0
 
-    def submit(self, prompt: str, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: str, max_new_tokens: int = 16,
+               greedy: bool = True, seed: Optional[int] = None) -> int:
         rid = self._next
         self._next += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens, time.time()))
+        self.queue.append(Request(rid, prompt, max_new_tokens, time.time(),
+                                  greedy, seed))
         return rid
 
     def run(self) -> List[Response]:
         pending = list(self.queue)
         self.queue = []
+        submitted_at = {r.rid: r.submitted_at for r in pending}
         admitted_at: Dict[int, float] = {}
         out: List[Response] = []
         while pending or self.engine.active_count():
@@ -97,7 +115,7 @@ class ContinuousBatchScheduler:
             # lane this step share a single packed B>1 prefill
             if pending:
                 flags = self.engine.add_requests(
-                    [(r.prompt, r.max_new_tokens, True, r.rid)
+                    [(r.prompt, r.max_new_tokens, r.greedy, r.rid, r.seed)
                      for r in pending])
                 now = time.time()
                 still: List[Request] = []
@@ -108,13 +126,18 @@ class ContinuousBatchScheduler:
                         still.append(r)
                 pending = still
             for rid, text, stats in self.engine.step():
-                out.append(Response(rid, text, stats,
-                                    time.time() - admitted_at[rid]))
+                now = time.time()
+                out.append(Response(
+                    rid, text, stats,
+                    wall_seconds=now - submitted_at[rid],
+                    queue_wait_seconds=(admitted_at[rid]
+                                        - submitted_at[rid])))
         return sorted(out, key=lambda x: x.rid)
 
 
 def summarize(responses: List[Response]) -> Dict[str, float]:
     lat = [r.stats.mean_latency_ms for r in responses if r.stats.latency_ms]
+    waits = [r.queue_wait_seconds for r in responses]
     return {
         "requests": len(responses),
         "private_frac": float(np.mean([r.stats.private for r in responses])),
@@ -128,4 +151,7 @@ def summarize(responses: List[Response]) -> Dict[str, float]:
         "p95_token_latency_ms": float(np.percentile(
             [x for r in responses for x in r.stats.latency_ms], 95))
         if lat else 0.0,
+        "mean_queue_wait_s": float(np.mean(waits)) if waits else 0.0,
+        "p95_queue_wait_s": float(np.percentile(waits, 95))
+        if waits else 0.0,
     }

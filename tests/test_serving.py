@@ -263,6 +263,157 @@ def test_batched_sampling_matches_sequential_stream(engine_parts):
     assert [got[i] for i in range(len(prompts))] == want
 
 
+def test_wall_seconds_include_queue_wait(engine_parts):
+    """Queue longer than the lane: wall_seconds is measured from
+    submit(), so time spent waiting for a free lane slot shows up in
+    both wall_seconds and queue_wait_seconds (the bug measured from
+    admission, silently dropping the very latency the paper bounds)."""
+    slm, sp, llm, lp, mlp = engine_parts
+    bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                              latency=LatencyModel(rtt_ms=10, jitter_ms=0),
+                              timeout_ms=200.0, batch_size=1,
+                              edge_batch_size=1)
+    sched = ContinuousBatchScheduler(bat)
+    for i in range(4):                       # one cloud slot, 4 requests
+        sched.submit(f"sort ascending: {i} 12 77 ->", 4)
+    res = sched.run()
+    assert len(res) == 4
+    for r in res:
+        assert r.wall_seconds >= r.queue_wait_seconds >= 0.0
+        # decode itself took nonzero time on top of the queue wait
+        assert r.wall_seconds - r.queue_wait_seconds > 0.0
+    waits = [r.queue_wait_seconds for r in res]
+    # FIFO through a single slot: each request queues at least as long
+    # as its predecessor, and the tail strictly longer than the head
+    assert all(b >= a for a, b in zip(waits, waits[1:]))
+    assert waits[-1] > waits[0]
+    s = summarize(res)
+    assert s["p95_queue_wait_s"] >= s["mean_queue_wait_s"] > 0.0
+
+
+def test_sequential_scheduler_queue_wait(engine_parts):
+    """Scheduler (sequential) accounting: the second request's wall
+    clock starts at submit, not at generate start."""
+    slm, sp, llm, lp, mlp = engine_parts
+    eng = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                       latency=LatencyModel(rtt_ms=10, jitter_ms=0))
+    sched = Scheduler(eng)
+    sched.submit("explain how rainbows form", 4)
+    sched.submit("translate to french: water ->", 4)
+    res = sched.run()
+    assert res[1].queue_wait_seconds > 0.0   # waited out request 0
+    for r in res:
+        assert r.wall_seconds >= r.queue_wait_seconds >= 0.0
+
+
+def test_scheduler_nongreedy_bitexact(engine_parts):
+    """Non-greedy traffic submitted THROUGH the public scheduler API
+    (the old ContinuousBatchScheduler hardcoded greedy=True, making
+    sample_fused unreachable from serving): batched == sequential bit
+    for bit, per-request seeds plumbed end to end.  Fusion is stubbed
+    flat in both engines so the samples actually spread."""
+    slm, sp, llm, lp, mlp = engine_parts
+    v = slm.cfg.vocab_size
+    seqe = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                        latency=LatencyModel(rtt_ms=10, jitter_ms=0),
+                        timeout_ms=200.0)
+    seqe._fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
+                                          jnp.ones((1,)))
+    bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                              latency=LatencyModel(rtt_ms=10, jitter_ms=0),
+                              timeout_ms=200.0, batch_size=4,
+                              edge_batch_size=2)
+    bat._fuse_batched = lambda sl, ll, arrived: (
+        jnp.full((sl.shape[0], v), 1.0 / v), jnp.ones((sl.shape[0],)))
+    s1, s2 = Scheduler(seqe), ContinuousBatchScheduler(bat)
+    for i, p in enumerate(PARITY_PROMPTS):
+        s1.submit(p, 6, greedy=False, seed=1000 + i)
+        s2.submit(p, 6, greedy=False, seed=1000 + i)
+    r_seq, r_bat = s1.run(), s2.run()
+    assert [r.text for r in r_bat] == [r.text for r in r_seq]
+    publics = [r.text for r in r_bat if not r.stats.private]
+    assert len(set(publics)) > 1         # distinct per-request keys
+
+
+def _lane_row(cache, axes_tree, slot):
+    """The slot's row of every batch-carrying lane-cache leaf, as numpy
+    (axes_tree: per-leaf batch axis from engine._cache_batch_axes)."""
+    return [np.asarray(jnp.take(leaf, slot, axis=ab))
+            for leaf, ab in zip(jax.tree.leaves(cache),
+                                jax.tree.leaves(axes_tree)) if ab >= 0]
+
+
+def test_freed_rows_parked_not_written(engine_parts):
+    """After a row hits EOS/max_new it must stop touching its lane
+    caches (the bug decoded token 0 into freed rows every step); the
+    freed row is parked at FREED_POS and its K/V stay bit-identical
+    until re-admission, which still matches the sequential engine."""
+    from repro.models.attention import FREED_POS
+    slm, sp, llm, lp, mlp = engine_parts
+    lat = dict(rtt_ms=10, jitter_ms=0)
+    bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                              latency=LatencyModel(**lat),
+                              timeout_ms=200.0, batch_size=2,
+                              edge_batch_size=1)
+    assert bat.add_request("translate to french: water ->", 2, True, 0)
+    assert bat.add_request("explain how rainbows form", 10, True, 1)
+    lane = bat.cloud_lane
+    slot = next(i for i, s in enumerate(lane.slots) if s and s.rid == 0)
+    done = []
+    while not any(d[0] == 0 for d in done):
+        done += bat.step()
+    snap_s = _lane_row(lane.s_cache, bat._slm_axes, slot)
+    snap_l = _lane_row(lane.l_cache, bat._llm_axes, slot)
+    assert int(lane.s_cache["pos"][slot]) == FREED_POS
+    assert int(lane.l_cache["pos"][slot]) == FREED_POS
+    for _ in range(3):                       # rid 1 keeps decoding
+        bat.step()
+    for want, cur in zip(snap_s, _lane_row(lane.s_cache, bat._slm_axes,
+                                           slot)):
+        np.testing.assert_array_equal(cur, want)
+    for want, cur in zip(snap_l, _lane_row(lane.l_cache, bat._llm_axes,
+                                           slot)):
+        np.testing.assert_array_equal(cur, want)
+    while bat.active_count():
+        bat.step()
+    # re-admission into the parked row still matches the sequential path
+    seq = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                       latency=LatencyModel(**lat), timeout_ms=200.0)
+    want_text, _ = seq.generate("sort ascending: 40 12 77 31 ->", 4, rid=2)
+    assert bat.add_request("sort ascending: 40 12 77 31 ->", 4, True, 2)
+    got = {}
+    while bat.active_count():
+        for rid, text, _ in bat.step():
+            got[rid] = text
+    assert got[2] == want_text
+
+
+def test_freed_rows_parked_ring(gemma_engine_parts):
+    """Ring-cache lanes: a parked row's ring buffer must stop receiving
+    garbage slot writes (the ring scatter previously wrote pos % window
+    every idle step)."""
+    from repro.models.attention import FREED_POS
+    slm, sp, llm, lp, mlp = gemma_engine_parts
+    bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                              latency=LatencyModel(rtt_ms=10, jitter_ms=0),
+                              timeout_ms=200.0, batch_size=2,
+                              edge_batch_size=1)
+    assert bat.add_request("translate to french: water ->", 2, True, 0)
+    assert bat.add_request("explain how rainbows form", 24, True, 1)
+    lane = bat.cloud_lane
+    slot = next(i for i, s in enumerate(lane.slots) if s and s.rid == 0)
+    done = []
+    while not any(d[0] == 0 for d in done):
+        done += bat.step()
+    assert int(lane.s_cache["pos"][slot]) == FREED_POS
+    snap = _lane_row(lane.s_cache, bat._slm_axes, slot)
+    for _ in range(20):                      # past window=16: ring wraps
+        bat.step()
+    for want, cur in zip(snap, _lane_row(lane.s_cache, bat._slm_axes,
+                                         slot)):
+        np.testing.assert_array_equal(cur, want)
+
+
 def test_sampling_keys_differ_across_requests(engine_parts):
     """Non-greedy decode must not reuse one PRNG key for every request
     (the seed bug made all requests sample identical tokens).  The
