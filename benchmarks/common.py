@@ -45,6 +45,18 @@ def row(name: str, us: float, derived) -> str:
     return line
 
 
+def write_json(path: str, payload: Dict[str, Any]) -> str:
+    """Machine-readable benchmark output (BENCH_*.json): flat metric
+    dict -> pretty JSON on disk, so CI can upload the perf trajectory
+    as an artifact instead of grepping stdout rows."""
+    import json
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path
+
+
 @dataclass
 class System:
     slm: LM

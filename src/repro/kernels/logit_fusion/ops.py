@@ -49,6 +49,17 @@ def fused_probs_masked(slm_logits, llm_logits, w, arrived,
     return out[:b]
 
 
+def _categorical_rows(probs, rids, steps, seed: int):
+    """Vmapped keyed categorical: row i draws with key
+    fold_in(fold_in(key(seed), rids[i]), steps[i])."""
+    def one(p, r, s):
+        key = jax.random.fold_in(jax.random.fold_in(
+            jax.random.key(seed), r), s)
+        return jax.random.categorical(key, jnp.log(jnp.clip(p, 1e-9)))
+    return jax.vmap(one)(probs, jnp.asarray(rids, jnp.int32),
+                         jnp.asarray(steps, jnp.int32))
+
+
 @partial(jax.jit, static_argnames=("seed",))
 def sample_fused(probs, rids, steps, seed: int = 0):
     """On-device batched sampling from the fused distribution.
@@ -61,9 +72,24 @@ def sample_fused(probs, rids, steps, seed: int = 0):
 
     probs: (B, V) fused distribution; rids/steps: (B,) int32.
     Returns (B,) sampled token ids."""
-    def one(p, r, s):
-        key = jax.random.fold_in(jax.random.fold_in(
-            jax.random.key(seed), r), s)
-        return jax.random.categorical(key, jnp.log(jnp.clip(p, 1e-9)))
-    return jax.vmap(one)(probs, jnp.asarray(rids, jnp.int32),
-                         jnp.asarray(steps, jnp.int32))
+    return _categorical_rows(probs, rids, steps, seed)
+
+
+@partial(jax.jit, static_argnames=("seed", "sample"))
+def select_sample_fused(probs, greedy, rids, steps, seed: int = 0,
+                        sample: bool = True):
+    """Fused next-token epilogue of the decode macro-step: per-row
+    greedy argmax OR keyed categorical, selected by the (B,) ``greedy``
+    mask, in one dispatch.  The categorical keys are exactly
+    ``sample_fused``'s (fold_in(fold_in(key(seed), rids[i]), steps[i])),
+    so mixed greedy/sampled batches stay bit-identical to the per-path
+    ops.  ``sample=False`` (static) skips the categorical entirely —
+    all-greedy lanes never pay the (B, V) Gumbel draw.
+
+    probs: (B, V); greedy: (B,) bool; rids/steps: (B,) int32.
+    Returns (B,) int32 token ids."""
+    nxt = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    if not sample:
+        return nxt
+    drawn = _categorical_rows(probs, rids, steps, seed).astype(jnp.int32)
+    return jnp.where(jnp.asarray(greedy, bool), nxt, drawn)

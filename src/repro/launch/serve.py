@@ -41,6 +41,10 @@ def main():
                     help="with --local: fake N host devices and shard "
                          "the decode lanes over a (pod, data, model) "
                          "serving mesh (requires --batch > 1)")
+    ap.add_argument("--macro-k", type=int, default=8,
+                    help="tokens decoded per jitted macro-step dispatch "
+                         "(1 host sync per K tokens; 0 = legacy "
+                         "per-token step path)")
     ap.add_argument("--sample", action="store_true",
                     help="non-greedy decoding (per-request PRNG keys)")
     ap.add_argument("--sample-seed", type=int, default=0,
@@ -80,7 +84,8 @@ def main():
                 slm, sp, llm, lp, mlp,
                 latency=LatencyModel(rtt_ms=args.rtt_ms),
                 timeout_ms=args.timeout_ms, batch_size=args.batch,
-                sample_seed=args.sample_seed, mesh=mesh)
+                sample_seed=args.sample_seed, mesh=mesh,
+                macro_k=args.macro_k)
             sched = ContinuousBatchScheduler(eng)
         else:
             eng = HybridEngine(slm, sp, llm, lp, mlp,

@@ -27,8 +27,12 @@ NEG_INF = -2.0 ** 30
 # this position until re-admission.  Both rowwise decode scatter paths
 # drop cache writes for parked rows (the plain path because FREED_POS is
 # far past max_seq, the ring path via an out-of-range slot index), so a
-# drained row's cache stays bit-identical while it idles in the batch.
-# Far below int32 max so pos+1 per idle step never overflows.
+# drained row's cache stays bit-identical while it idles in the batch —
+# including across the iterations of the serving engine's on-device
+# macro-step scan, where rows that hit EOS mid-macro park themselves
+# via a mask (no host involvement) and keep "decoding" as no-ops until
+# the next admission boundary.  Far below int32 max so pos+1 per idle
+# step never overflows.
 FREED_POS = 1 << 30
 
 

@@ -753,7 +753,16 @@ class LM:
 
     def decode_step(self, params, cache, tokens, lora=None, gates=None,
                     absorb=False):
-        """One-token decode.  tokens: (B,1).  Returns (logits, new_cache)."""
+        """One-token decode.  tokens: (B,1).  Returns (logits, new_cache).
+
+        Purely functional over the cache tree (every leaf of the input
+        is either threaded through untouched or rebuilt by a scatter),
+        so the serving engine can safely DONATE lane-cache buffers to a
+        jitted step and run it inside a ``lax.scan`` macro-step: XLA
+        updates the caches in place and no stale aliasing is possible.
+        Parked rows (continuous batching: pos >= ATT.FREED_POS after
+        EOS) keep decoding inside the scan as masked no-ops — their
+        KV/ring scatters drop and ``pos`` freezes below."""
         cfg = self.cfg
         pos = cache["pos"]
         x = L.embed(cfg, params["embed"], tokens)

@@ -71,7 +71,6 @@ class HybridEngine:
         self.timeout_ms = timeout_ms
         self.max_seq = max_seq
         self.sample_seed = sample_seed
-        self._jit_cache: Dict[str, Any] = {}
 
         self._slm_decode = jax.jit(
             lambda p, c, t, lora, g: slm.decode_step(p, c, t, lora, g))
@@ -87,6 +86,12 @@ class HybridEngine:
         self._fuse = jax.jit(
             lambda sl, ll, arrived: FUS.fused_distribution(
                 self.mlp, sl, ll, arrived))
+        # a whole request's network weather in ONE vectorized dispatch
+        # (steps 0..max_new-1 for one rid) — the per-token scalar shim
+        # paid a jit dispatch + blocking sync per decoded token
+        self._lat_request = jax.jit(
+            lambda rid, steps: self.latency.token_latency_device(
+                self.timeout_ms, jnp.full_like(steps, rid), steps))
 
     def _sample_key(self, rid: Optional[int]):
         """Per-request PRNG root; fold_in(step) yields per-token keys, so
@@ -125,10 +130,20 @@ class HybridEngine:
 
         out_ids: List[int] = []
         sl, ll = s_logits[:, 0], (l_logits[:, 0] if use_cloud else None)
+        lat_row = ok_row = None
+        if use_cloud and rid is not None:
+            lat_d, ok_d = self._lat_request(
+                jnp.int32(rid), jnp.arange(max_new_tokens,
+                                           dtype=jnp.int32))
+            lat_row, ok_row = np.asarray(lat_d), np.asarray(ok_d)
         for _ in range(max_new_tokens):
             if use_cloud:
-                lat_ms, arrived = self.latency.token_latency_ms(
-                    self.timeout_ms, rid=rid, step=len(out_ids))
+                if lat_row is not None:
+                    lat_ms, arrived = (float(lat_row[len(out_ids)]),
+                                       bool(ok_row[len(out_ids)]))
+                else:        # rid-less legacy path: stateful host stream
+                    lat_ms, arrived = self.latency.token_latency_ms(
+                        self.timeout_ms, rid=rid, step=len(out_ids))
                 p_out, w = self._fuse(sl, ll, jnp.asarray(arrived))
                 stats.cloud_tokens += int(arrived)
                 stats.fallback_tokens += int(not arrived)
@@ -314,20 +329,30 @@ class _Lane:
 
     # ------------------------------------------------------------- decode
     def step(self) -> List[Tuple[int, str, GenStats]]:
-        """One fused decode step over every occupied row.  Returns the
-        requests that finished this step as (rid, text, stats)."""
+        """One fused decode step over every occupied row (the per-step
+        reference path, ``macro_k=0``).  Returns the requests that
+        finished this step as (rid, text, stats).
+
+        This path pays multiple jit dispatches and 2-3 blocking host
+        syncs per token; ``macro_step`` collapses the same math into one
+        dispatch + one sync per K tokens and must stay bit-identical."""
         eng = self.eng
         if self.active == 0:
             return []
         b = self.batch
         if self.use_cloud:
-            arrived = np.zeros((b,), bool)
-            lat = np.zeros((b,), np.float64)
+            occ = np.zeros((b,), bool)
+            rids = np.zeros((b,), np.int32)
+            steps = np.zeros((b,), np.int32)
             for i, s in enumerate(self.slots):
-                if s is None:
-                    continue
-                lat[i], arrived[i] = eng.latency.token_latency_ms(
-                    eng.timeout_ms, rid=s.rid, step=len(s.out_ids))
+                if s is not None:
+                    occ[i], rids[i], steps[i] = True, s.rid, len(s.out_ids)
+            # one vectorized counter-based draw for the whole batch —
+            # the same threefry weather the macro-step scan draws
+            lat_d, ok_d = eng._lat_batched(jnp.asarray(rids),
+                                           jnp.asarray(steps))
+            lat = np.asarray(lat_d)
+            arrived = np.asarray(ok_d) & occ
             probs, w = eng._fuse_batched(self.sl, self.ll,
                                          jnp.asarray(arrived))
         else:
@@ -407,6 +432,76 @@ class _Lane:
                 self.l_cache,
                 pos=self.l_cache["pos"].at[idx].set(ATT.FREED_POS))
 
+    # -------------------------------------------------------- macro decode
+    def macro_step(self, k: int) -> List[Tuple[int, str, GenStats]]:
+        """Decode K tokens for every occupied row in ONE jitted,
+        cache-donating dispatch (an on-device ``lax.scan`` over the whole
+        per-token step: latency draws, fusion, select/sample, EOS + park
+        masks, SLM+LLM decode), then replay the returned per-step traces
+        into the host-side slot bookkeeping.
+
+        Exactly one host sync per call (the trace fetch); the lane's
+        cache/logit buffers are DONATED to the dispatch — any reference
+        taken before this call is invalid afterwards.  Returns the
+        requests that finished during the macro-step.  Bit-identical to
+        running ``step()`` k times: rows that finish mid-macro keep
+        decoding as parked rows (writes dropped, pos frozen) and their
+        freed slots refill at the next macro boundary."""
+        eng = self.eng
+        if self.active == 0:
+            return []
+        b = self.batch
+        rids = np.zeros((b,), np.int32)
+        keys = np.zeros((b,), np.int32)
+        steps = np.zeros((b,), np.int32)
+        maxn = np.zeros((b,), np.int32)
+        greedy = np.ones((b,), bool)
+        done = np.ones((b,), bool)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            done[i] = False
+            rids[i] = s.rid
+            keys[i] = s.rid if s.key_id is None else s.key_id
+            steps[i] = len(s.out_ids)
+            maxn[i] = s.max_new
+            greedy[i] = s.greedy
+        sample = bool((~greedy & ~done).any())
+        fn = eng._macro_cloud if self.use_cloud else eng._macro_edge
+        carry, traces = fn(
+            eng.slm_params, eng.llm_params if self.use_cloud else None,
+            eng.lora, self.gates,
+            self.s_cache, self.l_cache, self.sl, self.ll,
+            jnp.asarray(rids), jnp.asarray(keys), jnp.asarray(steps),
+            jnp.asarray(maxn), jnp.asarray(greedy), jnp.asarray(done),
+            k=k, sample=sample)
+        self.s_cache, self.l_cache, self.sl, self.ll = carry[:4]
+        # the ONE host sync of the macro-step: everything the replay
+        # needs arrives in a single device fetch
+        toks, arrived, lat, w, emit = eng._fetch_traces(traces)
+
+        out_done: List[Tuple[int, str, GenStats]] = []
+        for t in range(k):
+            for i, s in enumerate(self.slots):
+                if s is None or not emit[t, i]:
+                    continue
+                st = s.stats
+                if self.use_cloud:
+                    st.cloud_tokens += int(arrived[t, i])
+                    st.fallback_tokens += int(not arrived[t, i])
+                    st.latency_ms.append(float(lat[t, i]))
+                    st.fusion_w.append(float(w[t, i]))
+                else:
+                    st.latency_ms.append(float(eng.latency.edge_compute_ms))
+                    st.fusion_w.append(1.0)
+                nxt = int(toks[t, i])
+                s.out_ids.append(nxt)
+                st.tokens += 1
+                if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
+                    out_done.append((s.rid, TOK.decode(s.out_ids), st))
+                    self.slots[i] = None    # freed: refill next boundary
+        return out_done
+
 
 class BatchedHybridEngine(HybridEngine):
     """Continuous-batching Floe engine (the paper's real-time serving
@@ -419,10 +514,24 @@ class BatchedHybridEngine(HybridEngine):
     touch the network path).  Admissions that arrive in the same step
     share one packed B>1 prefill (prompts padded to a chunk-rounded
     length, per-row lengths masked) and are scattered into freed rows as
-    sequences hit EOS; every occupied row then advances one token per
-    jitted batched decode step.  All dense-family cache layouts are
-    supported — plain, grouped mixed-attention (gemma3 5:1), and
-    window-sized ring caches with per-row ring indices.
+    sequences hit EOS.  All dense-family cache layouts are supported —
+    plain, grouped mixed-attention (gemma3 5:1), and window-sized ring
+    caches with per-row ring indices.
+
+    Decoding advances in **K-token macro-steps** (``macro_k``, default
+    8): one jitted, cache-donating dispatch runs an on-device scan over
+    the whole per-token pipeline — latency draws, fusion, select/sample,
+    EOS detection, row parking, both decodes — and the host syncs once
+    per K tokens to replay the returned traces into request bookkeeping.
+    Admission therefore happens at macro boundaries: a row freed
+    mid-macro idles (parked, writes dropped) until the next boundary,
+    which changes wall-clock scheduling but not any request's output.
+    DONATION CONTRACT: each macro-step consumes the lane's cache/logit
+    buffers — callers must re-read ``lane.s_cache``/``lane.sl``/... after
+    every step and never hold stale references across one.  ``macro_k=0``
+    keeps the legacy per-token step path (multiple dispatches + syncs
+    per token) as a bit-exact reference and benchmark baseline;
+    ``macro_k=1`` is the macro path at today's one-token cadence.
 
     With ``mesh=`` a lane spans the mesh instead of one device: every
     stacked lane-cache leaf carries a per-leaf NamedSharding (batch rows
@@ -444,7 +553,8 @@ class BatchedHybridEngine(HybridEngine):
                  sample_seed: int = 0, batch_size: int = 8,
                  edge_batch_size: Optional[int] = None, block_b: int = 4,
                  packed_prefill: bool = True, prefill_chunk: int = 16,
-                 mesh: Optional[Mesh] = None, rules="inference"):
+                 mesh: Optional[Mesh] = None, rules="inference",
+                 macro_k: int = 8):
         super().__init__(slm, slm_params, llm, llm_params, alignment_mlp,
                          expert_bank=expert_bank, router=router,
                          detector=detector, latency=latency,
@@ -460,6 +570,7 @@ class BatchedHybridEngine(HybridEngine):
         self.block_b = block_b
         self.packed_prefill = packed_prefill
         self.prefill_chunk = prefill_chunk
+        self.macro_k = macro_k
         self.mesh = mesh
         if isinstance(rules, str):
             rules = SH.RULESETS[rules]
@@ -481,6 +592,17 @@ class BatchedHybridEngine(HybridEngine):
         self._argmax_batched = jax.jit(lambda p: jnp.argmax(p, -1))
         self._sample_batched = lambda probs, rids, steps: OPS.sample_fused(
             probs, rids, steps, seed=self.sample_seed)
+        # one vectorized counter-based weather draw for the whole batch
+        # (both the per-step reference path and the macro-step scan use
+        # this, so the two see bitwise-identical network state)
+        self._lat_batched = jax.jit(
+            lambda rids, steps: self.latency.token_latency_device(
+                self.timeout_ms, rids, steps))
+        # the macro-step trace fetch — an attribute so the dispatch-
+        # discipline tests can wrap it and count host syncs
+        self._fetch_traces = jax.device_get
+        self._macro_cloud = self._make_macro(use_cloud=True)
+        self._macro_edge = self._make_macro(use_cloud=False)
         self._insert_row = jax.jit(
             lambda full, rows, src, dst: full.at[dst].set(rows[src]))
         self._insert_slm = self._make_insert(slm, self._slm_axes)
@@ -553,6 +675,97 @@ class BatchedHybridEngine(HybridEngine):
             lambda: dict(lm.init_cache(b, self.max_seq),
                          pos=jnp.zeros((b,), jnp.int32)))
         return SH.lane_cache_shardings(cache, axes, self.mesh, self.rules)
+
+    # ---------------------------------------------------- macro-step jit
+    def _make_macro(self, use_cloud: bool):
+        """Build the jitted K-token macro-step for one lane flavour.
+
+        One dispatch decodes K tokens for the whole batch via an
+        on-device ``lax.scan``: per-row counter-based latency draws,
+        Pallas logit fusion with the arrived mask, the fused
+        greedy-argmax / keyed-categorical epilogue, EOS + max_new done
+        masks, row parking at FREED_POS, and both models' decode steps —
+        carrying only device arrays between iterations.  The cloud LLM
+        decode for step t+1 depends only on step t's selected token, not
+        on the host consuming step t's trace, so XLA's async dispatch
+        overlaps it with the fusion/epilogue of the next iteration (the
+        ROADMAP overlap item) and the host syncs exactly once per K
+        tokens, on the stacked traces.
+
+        Lane caches and current logits are DONATED (argnums 4-7): the
+        macro-step updates them in place, invalidating any stale
+        references a caller may hold.  ``k`` and ``sample`` (whether any
+        row draws categorically) are static — at most two traces per
+        lane flavour per K."""
+        eng = self
+
+        def impl(slm_params, llm_params, lora, gates,
+                 s_cache, l_cache, sl, ll,
+                 rids, key_ids, steps, max_new, greedy, done,
+                 k: int, sample: bool):
+            b = sl.shape[0]
+
+            def body(carry, _):
+                s_cache, l_cache, sl, ll, steps, done = carry
+                active = ~done
+                if use_cloud:
+                    lat, ok = eng._lat_batched(rids, steps)
+                    arrived = ok & active
+                    probs, w = eng._fuse_batched(sl, ll, arrived)
+                else:
+                    probs = eng._softmax_batched(sl)
+                    w = jnp.ones((b,), jnp.float32)
+                    lat = jnp.zeros((b,), jnp.float32)
+                    arrived = jnp.zeros((b,), bool)
+                nxt = OPS.select_sample_fused(probs, greedy, key_ids,
+                                              steps, seed=eng.sample_seed,
+                                              sample=sample)
+                done_now = active & ((nxt == TOK.EOS)
+                                     | (steps + 1 >= max_new))
+                feed = jnp.where(active & ~done_now, nxt, 0)[:, None]
+
+                def park(c):
+                    # rows that just finished: freeze before this very
+                    # decode so their caches never see the dummy token
+                    return dict(c, pos=jnp.where(done_now, ATT.FREED_POS,
+                                                 c["pos"]))
+
+                s_logits, new_s = eng._slm_decode(
+                    slm_params, park(s_cache), feed, lora, gates)
+                new_sl = s_logits[:, 0]
+                if use_cloud:
+                    l_logits, new_l = eng._llm_decode(
+                        llm_params, park(l_cache), feed)
+                    new_ll = l_logits[:, 0]
+                else:
+                    new_l, new_ll = l_cache, ll
+                new_carry = (new_s, new_l, new_sl, new_ll,
+                             steps + active.astype(jnp.int32),
+                             done | done_now)
+                return new_carry, (nxt, arrived, lat, w, active)
+
+            def pin(carry):
+                # pin the scan carry to the lane layout at BOTH ends:
+                # GSPMD's carry unification may otherwise override the
+                # in-body constraints (it resharded pos/sl over the
+                # batch axes) and reshard every iteration
+                if eng.mesh is None:
+                    return carry
+                s_c, l_c, sl_c, ll_c, st, dn = carry
+                s_c = eng._constrain_lane(s_c, eng._slm_axes)
+                sl_c = eng._replicated(sl_c)
+                if use_cloud:
+                    l_c = eng._constrain_lane(l_c, eng._llm_axes)
+                    ll_c = eng._replicated(ll_c)
+                return (s_c, l_c, sl_c, ll_c, st, dn)
+
+            carry, traces = jax.lax.scan(
+                body, pin((s_cache, l_cache, sl, ll, steps, done)),
+                None, length=k)
+            return pin(carry), traces
+
+        return jax.jit(impl, static_argnames=("k", "sample"),
+                       donate_argnums=(4, 5, 6, 7))
 
     # ------------------------------------------------- cache row scatter
     def _cache_batch_axes(self, lm):
@@ -687,7 +900,13 @@ class BatchedHybridEngine(HybridEngine):
         return self.cloud_lane.active + self.edge_lane.active
 
     def step(self) -> List[Tuple[int, str, GenStats]]:
-        """Advance both lanes one token.  Returns finished requests."""
+        """Advance both lanes by one macro-step (``macro_k`` tokens per
+        occupied row in a single dispatch + single host sync per lane;
+        ``macro_k=0`` falls back to the per-token reference path).
+        Returns the requests that finished."""
+        if self.macro_k:
+            return (self.edge_lane.macro_step(self.macro_k)
+                    + self.cloud_lane.macro_step(self.macro_k))
         return self.edge_lane.step() + self.cloud_lane.step()
 
 
@@ -701,6 +920,11 @@ class SoloEngine:
         self.max_seq = max_seq
         self._decode = jax.jit(
             lambda p, c, t, lora, g: lm.decode_step(p, c, t, lora, g))
+        # jitted prefill (one retrace per distinct prompt length) — this
+        # was the last remaining eager op-by-op prefill path
+        self._prefill = jax.jit(
+            lambda p, toks, lora, g: lm.prefill(
+                p, {"tokens": toks}, self.max_seq, lora=lora, gates=g))
 
     def generate(self, prompt: str, max_new_tokens: int = 16) -> str:
         gates = lora = None
@@ -709,8 +933,7 @@ class SoloEngine:
             lora = LORA.bank_for_model(self.bank)
         ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
         toks = jnp.asarray([ids], jnp.int32)
-        logits, cache = self.lm.prefill(self.params, {"tokens": toks},
-                                        self.max_seq, lora=lora, gates=gates)
+        logits, cache = self._prefill(self.params, toks, lora, gates)
         out: List[int] = []
         cur = logits[:, 0]
         for _ in range(max_new_tokens):

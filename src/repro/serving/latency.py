@@ -4,11 +4,25 @@ The paper's Sec. IV-D / Fig. 16 experiment varies RTT 0-500 ms against a
 ~65 ms/token edge decode and a 200 ms fallback budget.  We model per-token
 cloud-logit arrival as RTT/2 each way + cloud compute, with seedable
 jitter, and expose the same "masked vs bounded" regimes.
+
+Counter-based draws are keyed by ``(seed, rid, step)`` and computed with
+the JAX threefry PRNG in float32, so the serving engine can draw a whole
+batch of arrivals *inside* a jitted decode macro-step
+(``token_latency_device``) with zero host round-trips.  The host entry
+points (``arrival_ms_at`` / ``token_latency_ms``) are parity shims over
+the exact same device computation: they return the identical float32
+weather, so sequential, per-step-batched and K-token macro-step engines
+all see the same per-(request, token) network state and host-side tests
+can still reason about a single draw at a time.
 """
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass
@@ -18,37 +32,76 @@ class LatencyModel:
     cloud_compute_ms: float = 20.0
     edge_compute_ms: float = 65.0        # Jetson Orin NX (paper Fig. 16)
     seed: int = 0
+    _arrival_jit: object = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
         self._rng = random.Random(self.seed)
 
     def cloud_logits_arrival_ms(self) -> float:
-        """Time until the cloud LLM's logits are available at the edge."""
+        """Time until the cloud LLM's logits are available at the edge
+        (stateful stream — the rid-less legacy path)."""
         jitter = self._rng.gauss(0.0, self.jitter_ms)
         return max(0.0, self.rtt_ms + self.cloud_compute_ms + jitter)
 
+    # ------------------------------------------------------------- device
+    def arrival_device(self, rids, steps) -> jax.Array:
+        """Vectorized counter-based arrival draw, jit/vmap/scan-safe.
+
+        rids/steps: (B,) int32.  Row i draws its Gaussian jitter from the
+        threefry key fold_in(fold_in(key(seed), rids[i]), steps[i]) — the
+        same (rid, step) sees the same network weather no matter which
+        engine (or which row of which macro-step) evaluates it.  Returns
+        (B,) float32 arrival times in ms."""
+        def one(r, s):
+            key = jax.random.fold_in(jax.random.fold_in(
+                jax.random.key(self.seed), r), s)
+            return jax.random.normal(key)
+        noise = jax.vmap(one)(jnp.asarray(rids, jnp.int32),
+                              jnp.asarray(steps, jnp.int32))
+        base = jnp.float32(self.rtt_ms + self.cloud_compute_ms)
+        return jnp.maximum(0.0, base + jnp.float32(self.jitter_ms) * noise)
+
+    def token_latency_device(self, timeout_ms: float, rids, steps):
+        """Batched Sec. IV-D decision on device: (lat_ms (B,) f32,
+        cloud_used (B,) bool).  Same regimes as ``token_latency_ms``."""
+        arrival = self.arrival_device(rids, steps)
+        edge = jnp.float32(self.edge_compute_ms)
+        timeout = jnp.float32(timeout_ms)
+        lat = jnp.where(arrival <= edge, edge,
+                        jnp.where(arrival <= timeout, arrival,
+                                  jnp.maximum(edge, timeout)))
+        return lat, arrival <= timeout
+
+    # --------------------------------------------------------------- host
     def arrival_ms_at(self, rid: int, step: int) -> float:
-        """Counter-based arrival draw keyed by (request, token): the same
-        (rid, step) sees the same network weather no matter in which order
-        requests are decoded, so the sequential and batched engines face
-        identical per-row fallback patterns."""
-        rng = random.Random((self.seed, rid, step))
-        jitter = rng.gauss(0.0, self.jitter_ms)
-        return max(0.0, self.rtt_ms + self.cloud_compute_ms + jitter)
+        """Host parity shim over ``arrival_device``: the float32 arrival
+        the device draw produces for this (rid, step), as a Python
+        float.  One cached jit; used by the sequential engine and by
+        tests that inspect a single draw."""
+        if self._arrival_jit is None:
+            self._arrival_jit = jax.jit(self.arrival_device)
+        return float(self._arrival_jit(
+            jnp.asarray([rid], jnp.int32), jnp.asarray([step], jnp.int32))[0])
 
     def token_latency_ms(self, timeout_ms: float, rid: int | None = None,
                          step: int = 0) -> tuple[float, bool]:
         """Per-token end-to-end latency under parallel edge/cloud decode
         with the Sec. IV-D fallback.  Returns (latency_ms, cloud_used).
 
-        With ``rid`` given the draw is counter-based (order-independent);
-        otherwise it comes from the stateful stream."""
+        With ``rid`` given the draw is counter-based (order-independent,
+        identical to the in-macro-step device draw); otherwise it comes
+        from the stateful stream.  Thresholds and returned constants are
+        float32-quantized so the regime decisions AND the recorded
+        latencies match ``token_latency_device`` bit for bit even when
+        edge/timeout are not exactly representable in float32."""
+        edge = float(np.float32(self.edge_compute_ms))
+        timeout = float(np.float32(timeout_ms))
         if rid is None:
             arrival = self.cloud_logits_arrival_ms()
         else:
             arrival = self.arrival_ms_at(rid, step)
-        if arrival <= self.edge_compute_ms:
-            return self.edge_compute_ms, True            # fully masked
-        if arrival <= timeout_ms:
+        if arrival <= edge:
+            return edge, True                            # fully masked
+        if arrival <= timeout:
             return arrival, True                         # bounded wait
-        return max(self.edge_compute_ms, timeout_ms), False  # fallback
+        return max(edge, timeout), False                 # fallback

@@ -85,9 +85,17 @@ class Scheduler:
 class ContinuousBatchScheduler:
     """Continuous batching: cloud-eligible requests share a hybrid decode
     batch, private requests an SLM-only batch; freed batch rows are
-    refilled from the queue as sequences finish, so the engine runs one
-    jitted SLM+LLM step per token for the WHOLE batch instead of a
-    Python loop per request."""
+    refilled from the queue as sequences finish.
+
+    With the macro-step engine (``macro_k=K``) every ``engine.step()``
+    decodes K tokens per occupied row in ONE jitted, cache-donating
+    dispatch and replays the returned per-step traces into request
+    bookkeeping — so admission happens at K-token macro boundaries: a
+    row that frees mid-macro idles (parked on device, writes dropped)
+    until the next boundary.  That shifts wall-clock admission timing
+    but never any request's tokens/stats (latency draws and sampling
+    keys are counter-based on (rid, step), independent of when a row is
+    admitted).  ``macro_k=0`` restores the per-token cadence."""
 
     def __init__(self, engine: BatchedHybridEngine):
         self.engine = engine
@@ -109,10 +117,11 @@ class ContinuousBatchScheduler:
         admitted_at: Dict[int, float] = {}
         out: List[Response] = []
         while pending or self.engine.active_count():
-            # fill freed slots as ONE admission burst (FIFO per lane; a
-            # full lane skips, a later request bound for the other lane
-            # may still be admitted) — all admissions that land in a
-            # lane this step share a single packed B>1 prefill
+            # fill freed slots as ONE admission burst per macro boundary
+            # (FIFO per lane; a full lane skips, a later request bound
+            # for the other lane may still be admitted) — all admissions
+            # that land in a lane this step share a single packed B>1
+            # prefill
             if pending:
                 flags = self.engine.add_requests(
                     [(r.prompt, r.max_new_tokens, r.greedy, r.rid, r.seed)

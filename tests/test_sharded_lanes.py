@@ -48,10 +48,19 @@ def _build(pair):
     return slm, sp, llm, lp, mlp
 
 
-def _run_pair(pair, mesh, n_tokens=6):
+def _run_pair(pair, mesh, n_tokens=6, mesh_macro_k=4):
     """Same workload through a single-device and a mesh-sharded batched
     engine; 6 requests into a 4-wide cloud lane exercises the refill
-    (shard_map scatter into freed rows) on the sharded path too."""
+    (shard_map scatter into freed rows) on the sharded path too.
+
+    The reference engine runs the LEGACY per-token step path
+    (macro_k=0) on a single device while the mesh engine decodes in
+    K=4 macro-steps (the ISSUE 4 scan), so this parity spans both the
+    sharding and the macro-step rewrite at once — the scan must keep
+    the per-leaf lane shardings pinned across iterations.
+    ``mesh_macro_k=0`` instead covers the sharded PER-TOKEN step path
+    (still reachable via --macro-k 0), which must not lose its
+    sharding constraints either."""
     from repro.serving.engine import BatchedHybridEngine
     from repro.serving.latency import LatencyModel
     from repro.serving.scheduler import ContinuousBatchScheduler
@@ -60,10 +69,11 @@ def _run_pair(pair, mesh, n_tokens=6):
     kw = dict(max_seq=48, batch_size=4, edge_batch_size=2,
               timeout_ms=200.0)
     e_plain = BatchedHybridEngine(slm, sp, llm, lp, mlp,
-                                  latency=LatencyModel(**lat), **kw)
+                                  latency=LatencyModel(**lat),
+                                  macro_k=0, **kw)
     e_mesh = BatchedHybridEngine(slm, sp, llm, lp, mlp,
                                  latency=LatencyModel(**lat), mesh=mesh,
-                                 **kw)
+                                 macro_k=mesh_macro_k, **kw)
     s1 = ContinuousBatchScheduler(e_plain)
     s2 = ContinuousBatchScheduler(e_mesh)
     for p in PROMPTS:
@@ -144,6 +154,17 @@ def test_sharded_parity_and_layout_2b(mesh):
 
 
 @multi
+def test_sharded_per_step_parity_2b(mesh):
+    """The sharded PER-TOKEN step path (macro_k=0, the pre-macro
+    reference that --macro-k 0 still serves with) keeps its sharding
+    constraints and parity too."""
+    r_plain, r_mesh, eng = _run_pair("2b", mesh, n_tokens=4,
+                                     mesh_macro_k=0)
+    _assert_parity(r_plain, r_mesh)
+    _assert_layout(eng)
+
+
+@multi
 def test_sharded_parity_gemma3_ring(mesh):
     """Grouped mixed-attention layout with window-sized ring caches:
     per-row ring writes and the grouped (n_groups, g-1, B, ...) batch
@@ -183,9 +204,11 @@ if __name__ == "__main__":
     assert len(jax.devices()) >= 4, "set XLA_FLAGS before running"
     m = _make_mesh()
     print(f"mesh: {dict(m.shape)} over {len(jax.devices())} devices")
-    for pair_name, ntok in (("2b", 6), ("gemma3", 20)):
-        r_plain, r_mesh, eng_m = _run_pair(pair_name, m, n_tokens=ntok)
+    for pair_name, ntok, mk in (("2b", 6, 4), ("2b", 4, 0),
+                                ("gemma3", 20, 4)):
+        r_plain, r_mesh, eng_m = _run_pair(pair_name, m, n_tokens=ntok,
+                                           mesh_macro_k=mk)
         _assert_parity(r_plain, r_mesh)
         _assert_layout(eng_m)
-        print(f"{pair_name}: parity + layout ok")
+        print(f"{pair_name} (mesh macro_k={mk}): parity + layout ok")
     print("SHARDED-LANES-OK")
