@@ -41,6 +41,7 @@ from benchmarks import common as C  # noqa: E402
 from repro.configs.floe_pair import needs_ring_cache, pair_configs  # noqa: E402
 from repro.core import fusion as FUS  # noqa: E402
 from repro.models.model import LM  # noqa: E402
+from repro.serving.deployment import ServingDeployment  # noqa: E402
 from repro.serving.engine import BatchedHybridEngine, HybridEngine  # noqa: E402
 from repro.serving.latency import LatencyModel  # noqa: E402
 from repro.serving.scheduler import (ContinuousBatchScheduler,  # noqa: E402
@@ -73,6 +74,16 @@ def _build(pair: str = "2b"):
     return slm, sp, llm, lp, mlp
 
 
+def _deployment(parts, mesh=None, rules="inference", max_seq=48):
+    """All engines in a comparison share ONE ServingDeployment: the
+    placed params and the compiled entry points are built once, so a
+    sweep over batch sizes / macro_k re-times only the serving path."""
+    slm, sp, llm, lp, mlp = parts
+    return ServingDeployment(slm, sp, llm, lp, mlp,
+                             latency=LatencyModel(**LAT), max_seq=max_seq,
+                             mesh=mesh, rules=rules)
+
+
 def _timed_run(make_sched, prompts=PROMPTS, max_new=MAX_NEW):
     sched = make_sched()
     for p in prompts:                        # warmup pass (compile)
@@ -87,28 +98,18 @@ def _timed_run(make_sched, prompts=PROMPTS, max_new=MAX_NEW):
     return toks / dt, res
 
 
-def _batched_sched(parts, batch_size, macro_k, max_seq=48):
-    slm, sp, llm, lp, mlp = parts
-
+def _batched_sched(dep, batch_size, macro_k):
     def make():
-        eng = BatchedHybridEngine(slm, sp, llm, lp, mlp,
-                                  latency=LatencyModel(**LAT),
-                                  max_seq=max_seq, batch_size=batch_size,
-                                  edge_batch_size=1, macro_k=macro_k)
-        return ContinuousBatchScheduler(eng)
+        return ContinuousBatchScheduler.from_deployment(
+            dep, batch_size=batch_size, edge_batch_size=1, macro_k=macro_k)
     return make
 
 
 def run():
     parts = _build()
-    slm, sp, llm, lp, mlp = parts
+    dep = _deployment(parts)
 
-    def seq_sched():
-        eng = HybridEngine(slm, sp, llm, lp, mlp,
-                           latency=LatencyModel(**LAT), max_seq=48)
-        return Scheduler(eng)
-
-    seq_tps, _ = _timed_run(seq_sched)
+    seq_tps, _ = _timed_run(lambda: Scheduler.from_deployment(dep))
     C.row("throughput/sequential", 1e6 / seq_tps,
           f"tokens_per_s={seq_tps:.1f}")
 
@@ -116,9 +117,9 @@ def run():
     # burst admission early, before the sweeps fill the process with
     # compiled programs and lane caches — its ~20 ms packed-prefill
     # timing is the most sensitive to in-process memory pressure
-    out["burst_admission_speedup"] = run_burst(slm, sp, llm, lp, mlp)
+    out["burst_admission_speedup"] = run_burst(dep)
     for bs in BATCH_SIZES:
-        tps, _ = _timed_run(_batched_sched(parts, bs, macro_k=8))
+        tps, _ = _timed_run(_batched_sched(dep, bs, macro_k=8))
         out[f"batch={bs}_tokens_per_s"] = tps
         C.row(f"throughput/batch={bs}", 1e6 / tps,
               f"tokens_per_s={tps:.1f} speedup={tps / seq_tps:.2f}x")
@@ -128,15 +129,16 @@ def run():
         f"batched @8 only {speedup8:.2f}x over sequential")
     C.row("throughput/batch8_vs_sequential", 0, f"{speedup8:.2f}x>=2x")
 
-    out.update(run_macro(parts))
+    out.update(run_macro(dep))
     out["gemma3_tokens_per_s"] = run_windowed()
+    out["per_device_param_bytes"] = dep.per_device_param_bytes()
     return out
 
 
 # ---------------------------------------------------------------- macro
 
 
-def _decode_tps(parts, batch, macro_k, max_new=32, repeats=3):
+def _decode_tps(dep, batch, macro_k, max_new=32, repeats=3):
     """Decode-only tokens/sec (admission excluded, best of ``repeats``):
     admit a full batch, block until the admission dispatches settle,
     then time stepping until the lane drains.  The macro-step tentpole
@@ -144,11 +146,8 @@ def _decode_tps(parts, batch, macro_k, max_new=32, repeats=3):
     prefill cost into the ratio only adds noise — and best-of isolates
     the 2-core box's scheduling jitter from the dispatch-discipline
     effect under test."""
-    slm, sp, llm, lp, mlp = parts
-    eng = BatchedHybridEngine(slm, sp, llm, lp, mlp,
-                              latency=LatencyModel(**LAT), max_seq=48,
-                              batch_size=batch, edge_batch_size=1,
-                              macro_k=macro_k)
+    eng = BatchedHybridEngine(deployment=dep, batch_size=batch,
+                              edge_batch_size=1, macro_k=macro_k)
     best = 0.0
     for r in range(repeats + 1):            # round 0 warms the jits
         flags = eng.add_requests([(p, max_new, True, 100 * r + i)
@@ -194,7 +193,7 @@ def _micro_pair():
     return slm, sp, llm, lp, mlp
 
 
-def run_macro(parts, batch: int = 8):
+def run_macro(dep, batch: int = 8):
     """Single-dispatch macro-steps vs the per-token per-step path at
     batch 8 (decode-only tokens/sec), with a K sweep.
 
@@ -203,36 +202,53 @@ def run_macro(parts, batch: int = 8):
     carrying the ISSUE 4 tentpole assert: >=2x batched tokens/sec over
     the per-step path on the same host."""
     out = {}
-    per_2b = _decode_tps(parts, batch, macro_k=0)
+    per_2b = _decode_tps(dep, batch, macro_k=0)
     out[f"per_step_batch{batch}_tokens_per_s"] = per_2b
     C.row(f"throughput/per_step_batch{batch}", 1e6 / per_2b,
           f"decode_tokens_per_s={per_2b:.1f} (per-token path, 2b pair)")
     for k in MACRO_KS:
-        tps = _decode_tps(parts, batch, macro_k=k)
+        tps = _decode_tps(dep, batch, macro_k=k)
         out[f"macro_k={k}_tokens_per_s"] = tps
         C.row(f"throughput/macro_k={k}_batch{batch}", 1e6 / tps,
               f"decode_tokens_per_s={tps:.1f} "
               f"vs_per_step={tps / per_2b:.2f}x")
 
-    micro = _micro_pair()
-    per_step_tps = _decode_tps(micro, batch, macro_k=0)
-    out[f"micro_per_step_batch{batch}_tokens_per_s"] = per_step_tps
-    C.row(f"throughput/micro_per_step_batch{batch}", 1e6 / per_step_tps,
-          f"decode_tokens_per_s={per_step_tps:.1f} (per-token path)")
-    best = 0.0
-    for k in MACRO_KS:
-        tps = _decode_tps(micro, batch, macro_k=k)
-        out[f"micro_macro_k={k}_tokens_per_s"] = tps
-        best = max(best, tps)
-        C.row(f"throughput/micro_macro_k={k}_batch{batch}", 1e6 / tps,
-              f"decode_tokens_per_s={tps:.1f} "
-              f"vs_per_step={tps / per_step_tps:.2f}x")
-    speedup = best / per_step_tps
+    out.update(run_micro_dispatch(batch=batch, macro_ks=MACRO_KS))
+    speedup = out["micro_dispatch_speedup"]
     assert speedup >= 2.0, (
         f"macro-step best only {speedup:.2f}x over per-step at batch "
         f"{batch}")
     C.row("throughput/macro_vs_per_step", 0, f"{speedup:.2f}x>=2x")
     out["macro_vs_per_step_speedup"] = speedup
+    return out
+
+
+def run_micro_dispatch(batch: int = 8, macro_ks=(4,), max_new: int = 32,
+                       repeats: int = 3):
+    """The dispatch-bound micro-pair comparison on its own: the number
+    that actually tracks what serving pays per token (dispatches +
+    syncs, the regime real accelerators put decode in).  Recorded in
+    EVERY BENCH_throughput.json — the smoke pair's per-step numbers
+    alone made the trajectory look like the macro path was a 8x
+    REGRESSION, when its op-execution cost was just masking the
+    dispatch win on the CPU box."""
+    out = {}
+    micro_dep = _deployment(_micro_pair())
+    per_step_tps = _decode_tps(micro_dep, batch, macro_k=0,
+                               max_new=max_new, repeats=repeats)
+    out[f"micro_per_step_batch{batch}_tokens_per_s"] = per_step_tps
+    C.row(f"throughput/micro_per_step_batch{batch}", 1e6 / per_step_tps,
+          f"decode_tokens_per_s={per_step_tps:.1f} (per-token path)")
+    best = 0.0
+    for k in macro_ks:
+        tps = _decode_tps(micro_dep, batch, macro_k=k,
+                          max_new=max_new, repeats=repeats)
+        out[f"micro_macro_k={k}_tokens_per_s"] = tps
+        best = max(best, tps)
+        C.row(f"throughput/micro_macro_k={k}_batch{batch}", 1e6 / tps,
+              f"decode_tokens_per_s={tps:.1f} "
+              f"vs_per_step={tps / per_step_tps:.2f}x")
+    out["micro_dispatch_speedup"] = best / per_step_tps
     return out
 
 
@@ -269,14 +285,13 @@ def _admission_seconds(eng) -> float:
     return best
 
 
-def run_burst(slm, sp, llm, lp, mlp) -> float:
+def run_burst(dep) -> float:
     """Burst admission: one packed B=8 prefill vs 8 B=1 prefill calls."""
     def build(packed):
         # chunk=8: prompt lengths round up to the next multiple of 8,
         # bounding both the pad waste and the retrace count
-        return BatchedHybridEngine(slm, sp, llm, lp, mlp,
-                                   latency=LatencyModel(**LAT),
-                                   max_seq=48, batch_size=N_REQUESTS,
+        return BatchedHybridEngine(deployment=dep,
+                                   batch_size=N_REQUESTS,
                                    edge_batch_size=1,
                                    packed_prefill=packed,
                                    prefill_chunk=8)
@@ -299,15 +314,12 @@ def run_burst(slm, sp, llm, lp, mlp) -> float:
 def run_windowed() -> float:
     """gemma3-style pair (mixed attention, window > 0, ring caches):
     batched serving (macro-step path) must run end to end AND reproduce
-    the sequential engine's greedy outputs request for request."""
-    slm, sp, llm, lp, mlp = _build("gemma3")
-    seq = HybridEngine(slm, sp, llm, lp, mlp,
-                       latency=LatencyModel(**LAT), max_seq=48)
-    s1 = Scheduler(seq)
-    bat = BatchedHybridEngine(slm, sp, llm, lp, mlp,
-                              latency=LatencyModel(**LAT), max_seq=48,
-                              batch_size=8, edge_batch_size=1)
-    s2 = ContinuousBatchScheduler(bat)
+    the sequential engine's greedy outputs request for request — both
+    engines off ONE deployment (shared placed params + entry points)."""
+    dep = _deployment(_build("gemma3"))
+    s1 = Scheduler.from_deployment(dep)
+    s2 = ContinuousBatchScheduler.from_deployment(dep, batch_size=8,
+                                                  edge_batch_size=1)
     for p in PROMPTS:                    # warmup pass (compile)
         s2.submit(p, MAX_NEW)
     s2.run()
@@ -330,17 +342,36 @@ def run_windowed() -> float:
 # ---------------------------------------------------------------- smoke
 
 
-def run_smoke():
+def run_smoke(mesh_devices: int = 0, rules: str = "inference"):
     """CI-sized macro-step smoke: batch 2, K=4, 4 tokens — per-step vs
     macro parity (bit-identical) + tokens/sec, no speedup asserts (CI
     machines are too noisy to gate on).  Runs in-matrix under both the
     single-device and the 8-fake-device CI entries, so the scan-based
-    macro path compiles and serves on every PR."""
+    macro path compiles and serves on every PR.
+
+    ``mesh_devices > 1`` runs the macro engine through a PARAM-SHARDED
+    ServingDeployment (``rules``, default RULES_INFERENCE) on a fake
+    host mesh while the per-step reference stays replicated
+    single-device — the smoke parity then certifies the whole
+    deployment acceptance path (sharded params, lane layout, macro
+    scan) on every PR of the mesh CI entry.
+
+    The JSON always carries the dispatch-bound ``_micro_pair`` numbers
+    and ``per_device_param_bytes`` alongside the smoke pair: the smoke
+    pair's op-execution-bound tokens/sec alone misread the macro path
+    as a regression on CPU boxes."""
     parts = _build()
     prompts = PROMPTS[:4]
-    tps0, r0 = _timed_run(_batched_sched(parts, 2, macro_k=0),
+    dep_ref = _deployment(parts)
+    mesh = None
+    if mesh_devices > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(mesh_devices)
+    dep = _deployment(parts, mesh=mesh, rules=rules) if mesh is not None \
+        else dep_ref
+    tps0, r0 = _timed_run(_batched_sched(dep_ref, 2, macro_k=0),
                           prompts=prompts, max_new=4)
-    tps4, r4 = _timed_run(_batched_sched(parts, 2, macro_k=4),
+    tps4, r4 = _timed_run(_batched_sched(dep, 2, macro_k=4),
                           prompts=prompts, max_new=4)
     assert [r.text for r in r4] == [r.text for r in r0], \
         "macro-step smoke diverged from the per-step path"
@@ -349,32 +380,49 @@ def run_smoke():
     C.row("throughput/smoke_per_step", 1e6 / tps0,
           f"tokens_per_s={tps0:.1f}")
     C.row("throughput/smoke_macro_k4", 1e6 / tps4,
-          f"tokens_per_s={tps4:.1f} parity ok")
-    return {"smoke_per_step_tokens_per_s": tps0,
-            "smoke_macro_k4_tokens_per_s": tps4,
-            "smoke_macro_parity": True}
+          f"tokens_per_s={tps4:.1f} parity ok"
+          + (f" (param-sharded, mesh={dict(mesh.shape)})"
+             if mesh is not None else ""))
+    out = {"smoke_per_step_tokens_per_s": tps0,
+           "smoke_macro_k4_tokens_per_s": tps4,
+           "smoke_macro_parity": True}
+    out.update(run_micro_dispatch(batch=4, macro_ks=(4,), max_new=16,
+                                  repeats=2))
+    pd = dep.per_device_param_bytes()
+    out["per_device_param_bytes"] = pd
+    if mesh is not None and dict(mesh.shape).get("model", 1) > 1:
+        assert pd["total_bytes"] < pd["replicated_bytes"], \
+            "param sharding did not shrink the per-device footprint"
+        C.row("throughput/per_device_param_bytes", pd["total_bytes"],
+              f"vs replicated {pd['replicated_bytes']} "
+              f"({pd['replicated_bytes'] / pd['total_bytes']:.2f}x smaller)")
+    return out
 
 
 # ------------------------------------------------------------- sharded
 
 
-def run_sharded(mesh_devices: int, pair: str = "2b") -> float:
-    """--mesh-devices mode: continuous-decode lanes sharded over a host
-    mesh of ``mesh_devices`` fake CPU devices (batch rows over
+def run_sharded(mesh_devices: int, pair: str = "2b",
+                rules: str = "inference") -> dict:
+    """--mesh-devices mode: the FULL deployment layout on a host mesh
+    of ``mesh_devices`` fake CPU devices — engine params laid out by
+    the ``rules`` rule set (SLM/LLM leaves sharded over "model") AND
+    continuous-decode lanes sharded per the lane rules (batch rows over
     ("pod", "data"), wide KV dims over "model").  Asserts request-for-
-    request greedy parity against the single-device batched engine AND
-    that the live lane-cache leaves carry the launch/sharding.py lane
-    layout (macro-steps must keep it pinned across the scan), then
-    reports sharded tokens/sec."""
+    request greedy parity against the replicated single-device batched
+    engine, the lane layout on the live cache leaves, and a strictly
+    smaller measured per-device param footprint; reports sharded
+    tokens/sec plus the per-device param bytes."""
     from repro.launch.mesh import make_serving_mesh
     mesh = make_serving_mesh(mesh_devices)
-    slm, sp, llm, lp, mlp = _build(pair)
-    kw = dict(max_seq=48, batch_size=8, edge_batch_size=1)
+    parts = _build(pair)
+    kw = dict(batch_size=8, edge_batch_size=1)
+    dep_mesh = _deployment(parts, mesh=mesh, rules=rules)
+    dep_plain = _deployment(parts)
 
     def engine(m):
-        return BatchedHybridEngine(slm, sp, llm, lp, mlp,
-                                   latency=LatencyModel(**LAT),
-                                   mesh=m, **kw)
+        return BatchedHybridEngine(
+            deployment=dep_mesh if m is not None else dep_plain, **kw)
 
     eng = engine(mesh)
     warm = ContinuousBatchScheduler(eng)     # warmup pass (compile)
@@ -396,7 +444,7 @@ def run_sharded(mesh_devices: int, pair: str = "2b") -> float:
         "sharded lanes diverged from the single-device engine"
 
     lane = eng.cloud_lane
-    want = eng.lane_shardings(eng.slm, lane.batch)
+    want = eng.dep.lane_shardings(eng.slm, lane.batch)
     for leaf, sh in zip(jax.tree.leaves(lane.s_cache),
                         jax.tree.leaves(want)):
         assert leaf.sharding.is_equivalent_to(sh, leaf.ndim), \
@@ -411,12 +459,28 @@ def run_sharded(mesh_devices: int, pair: str = "2b") -> float:
                    for leaf in jax.tree.leaves(lane.s_cache)), \
             "no lane-cache leaf actually spans the mesh"
 
+    # engine params: every leaf on its declared rule-set sharding, and
+    # the per-device footprint strictly below replicated on a >1 model
+    # axis (measured from the live shards, not computed)
+    for params, want in ((eng.slm_params, dep_mesh.slm_param_shardings),
+                         (eng.llm_params, dep_mesh.llm_param_shardings)):
+        for leaf, sh in zip(jax.tree.leaves(params),
+                            jax.tree.leaves(want)):
+            assert leaf.sharding.is_equivalent_to(sh, leaf.ndim), \
+                (leaf.shape, leaf.sharding, sh)
+    pd = dep_mesh.per_device_param_bytes()
+    if sizes["model"] > 1:
+        assert pd["total_bytes"] < pd["replicated_bytes"], \
+            "param sharding did not shrink the per-device footprint"
+
     toks = sum(r.stats.tokens for r in r_mesh)
     tps = toks / dt
     C.row(f"throughput/sharded_mesh{mesh_devices}", 1e6 / tps,
           f"tokens_per_s={tps:.1f} mesh={dict(mesh.shape)} "
-          f"parity+layout ok")
-    return tps
+          f"parity+layout ok, per-device params "
+          f"{pd['total_bytes']}/{pd['replicated_bytes']}B")
+    return {"sharded_tokens_per_s": tps,
+            "per_device_param_bytes": pd}
 
 
 if __name__ == "__main__":
@@ -424,9 +488,17 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh-devices", type=int, default=0,
-                    help="fake N host devices and run the mesh-sharded "
-                         "lane mode instead of the batch-size sweep")
+                    help="fake N host devices and run the param+lane-"
+                         "sharded deployment mode (with --smoke: the "
+                         "macro smoke engine serves from the sharded "
+                         "deployment)")
     ap.add_argument("--pair", default="2b")
+    ap.add_argument("--rules", default="inference",
+                    choices=("fsdp", "inference"),
+                    help="launch/sharding.py rule set laying engine "
+                         "params over the mesh (inference: weight-"
+                         "stationary, replicated over data, sharded "
+                         "over model)")
     ap.add_argument("--json", nargs="?", const=JSON_DEFAULT, default=None,
                     help="write metrics to this JSON file "
                          f"(default {JSON_DEFAULT})")
@@ -434,11 +506,10 @@ if __name__ == "__main__":
                     help="CI-sized run: batch 2, K=4, few tokens, "
                          "parity only")
     args = ap.parse_args()
-    if args.mesh_devices > 1:
-        metrics = {"sharded_tokens_per_s":
-                   run_sharded(args.mesh_devices, args.pair)}
-    elif args.smoke:
-        metrics = run_smoke()
+    if args.smoke:
+        metrics = run_smoke(args.mesh_devices, args.rules)
+    elif args.mesh_devices > 1:
+        metrics = run_sharded(args.mesh_devices, args.pair, args.rules)
     else:
         metrics = run()
     if args.json:

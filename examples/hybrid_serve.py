@@ -20,7 +20,7 @@ from repro.configs.floe_pair import (FLOE_PAIRS, needs_ring_cache,
                                      pair_configs)
 from repro.core import fusion as FUS
 from repro.models.model import LM
-from repro.serving.engine import BatchedHybridEngine, HybridEngine
+from repro.serving.deployment import ServingDeployment
 from repro.serving.latency import LatencyModel
 from repro.serving.scheduler import (ContinuousBatchScheduler, Scheduler,
                                      summarize)
@@ -55,18 +55,16 @@ def main():
 
     for rtt in (args.rtt_ms, 400.0):
         print(f"\n=== network RTT {rtt:.0f} ms ===")
+        # the deployment places params + compiles the entry points;
+        # the schedulers build their engines through it
+        dep = ServingDeployment(slm, sp, llm, lp, mlp,
+                                latency=LatencyModel(rtt_ms=rtt, seed=3),
+                                timeout_ms=args.timeout_ms, max_seq=64)
         if args.batch > 1:
-            eng = BatchedHybridEngine(
-                slm, sp, llm, lp, mlp,
-                latency=LatencyModel(rtt_ms=rtt, seed=3),
-                timeout_ms=args.timeout_ms, max_seq=64,
-                batch_size=args.batch)
-            sched = ContinuousBatchScheduler(eng)
+            sched = ContinuousBatchScheduler.from_deployment(
+                dep, batch_size=args.batch)
         else:
-            eng = HybridEngine(slm, sp, llm, lp, mlp,
-                               latency=LatencyModel(rtt_ms=rtt, seed=3),
-                               timeout_ms=args.timeout_ms, max_seq=64)
-            sched = Scheduler(eng)
+            sched = Scheduler.from_deployment(dep)
         for p in PROMPTS:
             sched.submit(p, max_new_tokens=args.tokens)
         responses = sched.run()

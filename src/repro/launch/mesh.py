@@ -18,17 +18,23 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_serving_mesh(n_devices: int = 0, devices=None):
-    """Mesh for mesh-sharded continuous-decode lanes: one lane spans a
-    pod slice, batch rows over ("pod", "data"), wide cache dims over
-    "model" (launch/sharding.py ``lane_leaf_spec`` rules).
+def make_serving_mesh(n_devices: int = 0, devices=None,
+                      model_parallel: int = 0):
+    """Mesh for a ``ServingDeployment`` (serving/deployment.py): engine
+    params are laid out by the launch/sharding.py param rules (SLM/LLM
+    weight leaves sharded over "model" under RULES_INFERENCE, so
+    per-device param bytes shrink with the model axis) and one decode
+    lane spans a pod slice — batch rows over ("pod", "data"), wide
+    cache dims over "model" (``lane_leaf_spec`` rules).
 
     Factors the device count as pod×data×model: "model" takes a factor
     of 2 when 4+ devices are available (enough left for batch
     parallelism), the remainder backs the ("pod", "data") batch axes —
-    8 devices -> (2, 2, 2), 4 -> (1, 2, 2), 2 -> (1, 2, 1).  Works for
-    real accelerators and for host meshes of fake CPU devices
-    (``--xla_force_host_platform_device_count``)."""
+    8 devices -> (2, 2, 2), 4 -> (1, 2, 2), 2 -> (1, 2, 1).
+    ``model_parallel`` overrides the model-axis width (e.g. 4 on 8
+    devices trades batch parallelism for a ~4x smaller per-device
+    param footprint).  Works for real accelerators and for host meshes
+    of fake CPU devices (``--xla_force_host_platform_device_count``)."""
     devs = list(devices) if devices is not None else list(jax.devices())
     if n_devices:
         if n_devices > len(devs):
@@ -38,7 +44,14 @@ def make_serving_mesh(n_devices: int = 0, devices=None):
                 "--xla_force_host_platform_device_count before jax init)")
         devs = devs[:n_devices]
     n = len(devs)
-    model = 2 if (n % 2 == 0 and n >= 4) else 1
+    if model_parallel:
+        if n % model_parallel:
+            raise ValueError(
+                f"make_serving_mesh: model_parallel={model_parallel} "
+                f"does not divide {n} devices")
+        model = model_parallel
+    else:
+        model = 2 if (n % 2 == 0 and n >= 4) else 1
     rest = n // model
     pod = 2 if rest % 4 == 0 else 1
     data = rest // pod

@@ -38,9 +38,22 @@ def main():
                     help="decode-batch width; >1 uses the continuous-"
                          "batching engine (Pallas-fused logit path)")
     ap.add_argument("--mesh-devices", type=int, default=0,
-                    help="with --local: fake N host devices and shard "
-                         "the decode lanes over a (pod, data, model) "
-                         "serving mesh (requires --batch > 1)")
+                    help="with --local: fake N host devices and lay the "
+                         "WHOLE deployment — engine params (SLM, LLM, "
+                         "alignment MLP) and decode lanes — over a "
+                         "(pod, data, model) serving mesh "
+                         "(requires --batch > 1)")
+    ap.add_argument("--rules", default="inference",
+                    choices=("fsdp", "inference"),
+                    help="launch/sharding.py rule set laying the engine "
+                         "params over the mesh (inference: weight-"
+                         "stationary decode — replicated over data, "
+                         "sharded over model)")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="override the serving mesh's model-axis width "
+                         "(must divide --mesh-devices; wider = smaller "
+                         "per-device param footprint, less batch "
+                         "parallelism)")
     ap.add_argument("--macro-k", type=int, default=8,
                     help="tokens decoded per jitted macro-step dispatch "
                          "(1 host sync per K tokens; 0 = legacy "
@@ -57,13 +70,16 @@ def main():
     if args.mesh_devices > 1 and not (args.local and args.batch > 1):
         ap.error("--mesh-devices requires --local and --batch > 1 "
                  "(only the continuous-batching lanes are mesh-sharded)")
+    if args.model_parallel and args.mesh_devices <= 1:
+        ap.error("--model-parallel requires --mesh-devices > 1 (it "
+                 "overrides the serving mesh's model-axis width)")
 
     if args.local:
         import jax
         from repro.configs.floe_pair import needs_ring_cache, pair_configs
         from repro.core import fusion as FUS
         from repro.models.model import LM
-        from repro.serving.engine import BatchedHybridEngine, HybridEngine
+        from repro.serving.deployment import ServingDeployment
         from repro.serving.latency import LatencyModel
         from repro.serving.scheduler import (ContinuousBatchScheduler,
                                              Scheduler, summarize)
@@ -77,22 +93,25 @@ def main():
         mesh = None
         if args.mesh_devices > 1:
             from repro.launch.mesh import make_serving_mesh
-            mesh = make_serving_mesh(args.mesh_devices)
+            mesh = make_serving_mesh(args.mesh_devices,
+                                     model_parallel=args.model_parallel)
             print(f"serving mesh: {dict(mesh.shape)}")
+        # the deployment owns placement: params are laid out over the
+        # mesh here, once, and the engines below only do bookkeeping
+        dep = ServingDeployment(
+            slm, sp, llm, lp, mlp,
+            latency=LatencyModel(rtt_ms=args.rtt_ms),
+            timeout_ms=args.timeout_ms, sample_seed=args.sample_seed,
+            mesh=mesh, rules=args.rules)
+        if mesh is not None:
+            pd = dep.per_device_param_bytes()
+            print(f"per-device param bytes: {pd['total_bytes']} "
+                  f"(replicated would hold {pd['replicated_bytes']})")
         if args.batch > 1:
-            eng = BatchedHybridEngine(
-                slm, sp, llm, lp, mlp,
-                latency=LatencyModel(rtt_ms=args.rtt_ms),
-                timeout_ms=args.timeout_ms, batch_size=args.batch,
-                sample_seed=args.sample_seed, mesh=mesh,
-                macro_k=args.macro_k)
-            sched = ContinuousBatchScheduler(eng)
+            sched = ContinuousBatchScheduler.from_deployment(
+                dep, batch_size=args.batch, macro_k=args.macro_k)
         else:
-            eng = HybridEngine(slm, sp, llm, lp, mlp,
-                               latency=LatencyModel(rtt_ms=args.rtt_ms),
-                               timeout_ms=args.timeout_ms,
-                               sample_seed=args.sample_seed)
-            sched = Scheduler(eng)
+            sched = Scheduler.from_deployment(dep)
         for prompt in [
             "math: compute 12 plus 7 =",
             "my ssn is 123-45-6789, fill the benefits form",

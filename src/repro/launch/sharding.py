@@ -83,6 +83,30 @@ def like_tree(tree: Any, mesh: Mesh, spec: P) -> Any:
     return jax.tree.map(lambda _: NamedSharding(mesh, spec), tree)
 
 
+def bank_shardings(lora_tree: Any, mesh: Mesh,
+                   rules: Optional[Dict[str, Optional[str]]] = None) -> Any:
+    """Per-leaf NamedShardings for a stacked LoRA expert bank.
+
+    Bank leaves are A: (*stack_dims, E, r, d_in) and B: (*stack_dims, E,
+    d_out, r) (core/lora.py ``stack_adapters``) — the expert axis E sits
+    at ndim-3 in both.  It maps to the rule set's ``experts`` mesh axis
+    when divisible, mirroring the expert-parallel layout of the model's
+    own MoE params; everything else stays replicated (adapter ranks are
+    tiny next to the base weights)."""
+    rules = rules or RULES_INFERENCE
+    sizes = dict(mesh.shape)
+    ax = rules.get("experts")
+
+    def f(leaf):
+        spec = [None] * leaf.ndim
+        if (ax and ax in sizes and sizes[ax] > 1 and leaf.ndim >= 3
+                and leaf.shape[-3] % sizes[ax] == 0):
+            spec[-3] = ax
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(f, lora_tree)
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Mesh axes used for batch data parallelism."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -182,7 +206,7 @@ def lane_leaf_spec(shape: Tuple[int, ...], batch_ax: int, mesh: Mesh,
     """PartitionSpec for one stacked decode-lane cache leaf.
 
     ``batch_ax`` is the leaf's structurally-discovered batch axis
-    (``BatchedHybridEngine._cache_batch_axes``; -1 marks batch-free
+    (``serving/deployment.py cache_batch_axes``; -1 marks batch-free
     leaves such as the per-row "pos" vector, which stays replicated).
     The batch axis goes to the mesh batch axes ("pod", "data"); the wide
     trailing dims behind the sequence axis (KV heads / head_dim — the

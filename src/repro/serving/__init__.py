@@ -1,1 +1,11 @@
-"""Serving runtime (paper Sec. IV): hybrid LLM-SLM engine, scheduler, RTT."""
+"""Serving runtime (paper Sec. IV): deployment placement layer, hybrid
+LLM-SLM engines, schedulers, RTT model.
+
+Layering (docs/serving.md):
+  ServingDeployment (deployment.py)  — WHERE state lives, compiled entry
+                                       points, param + lane shardings
+  engines (engine.py)                — request/slot/lane bookkeeping
+  schedulers (scheduler.py)          — queueing, admission pipelining,
+                                       latency accounting
+"""
+from repro.serving.deployment import ServingDeployment  # noqa: F401

@@ -1,0 +1,473 @@
+"""ServingDeployment — the placement layer of the Floe serving stack.
+
+One object owns every decision about WHERE serving state lives and HOW
+the compiled entry points see it; the engines (serving/engine.py) are
+pure request bookkeeping on top.
+
+  * the serving mesh (launch/mesh.py ``make_serving_mesh``) and the rule
+    set (``launch/sharding.py RULESETS``: "inference" — weight-stationary
+    decode, params replicated over ("pod", "data") and sharded over
+    "model" — or "fsdp");
+  * per-leaf param NamedShardings for the SLM, the LLM, the LoRA expert
+    bank and the alignment MLP, built from the models' declarative axes
+    trees (``LM.param_specs``) through ``param_shardings``; params are
+    ``device_put`` onto the mesh at construction and NEVER gathered —
+    per-device param bytes drop ~Nx on an N-way "model" axis
+    (``per_device_param_bytes`` measures it from the live shards);
+  * the lane-cache shardings (``lane_leaf_spec`` driven by the
+    structural ``cache_batch_axes`` discovery) and the lane commit /
+    constrain helpers the continuous-decode lanes use;
+  * the jitted entry points — B=1 prefill, packed B>1 prefill, the
+    per-token decode step, the K-token macro-step scan, and the
+    admission row-scatter ``shard_map`` — compiled once per deployment
+    with explicit ``in_shardings`` pinning the param layouts (and
+    replicated ``out_shardings`` on logits), shared by every engine
+    constructed through the deployment.
+
+REPLICATION CONTRACT (Alg. 2 edge/cloud split): whatever the param and
+cache layouts, per-token logits always come back replicated — the
+Sec. IV-C fusion (alignment MLP + Pallas ``logit_fusion`` kernel) and
+the sampling epilogue run edge-side on full vocab rows.  Bit-exact
+parity with a replicated single-device engine is part of the contract
+and locked in by tests/test_deployment.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import fusion as FUS
+from repro.core import lora as LORA
+from repro.data import tokenizer as TOK
+from repro.kernels.logit_fusion import ops as OPS
+from repro.launch import sharding as SH
+from repro.models import attention as ATT
+from repro.serving.latency import LatencyModel
+
+
+def cache_batch_axes(lm, max_seq: int):
+    """Per-leaf batch axis of a lane cache, found structurally: the
+    axis whose extent tracks init_cache's batch argument (grouped
+    layouts stack it behind the group dims).  -1 marks batch-free
+    leaves (the scalar "pos", which the lane overrides per-row)."""
+    c2 = jax.eval_shape(lambda: lm.init_cache(2, max_seq))
+    c3 = jax.eval_shape(lambda: lm.init_cache(3, max_seq))
+
+    def ax(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        return -1
+    return jax.tree.map(ax, c2, c3)
+
+
+def _tree_bytes(tree, per_device: bool) -> int:
+    """Bytes a tree occupies; per_device reads the placed arrays'
+    addressable shards (replicated leaves count full size)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if per_device and hasattr(leaf, "addressable_shards"):
+            d = leaf.addressable_shards[0].data
+            total += d.size * d.dtype.itemsize
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+class ServingDeployment:
+    """Placement + compiled entry points for one servable model set.
+
+    ``slm`` is required; ``llm``/``alignment_mlp`` make the deployment
+    hybrid-servable (HybridEngine / BatchedHybridEngine), a lone
+    ``slm`` serves SoloEngine.  Without ``mesh`` everything is identity
+    placement on the default device — the engines behave exactly as the
+    pre-deployment code did."""
+
+    def __init__(self, slm, slm_params, llm=None, llm_params=None,
+                 alignment_mlp=None, expert_bank=None,
+                 latency: Optional[LatencyModel] = None,
+                 timeout_ms: float = 200.0, max_seq: int = 96,
+                 sample_seed: int = 0, mesh: Optional[Mesh] = None,
+                 rules="inference", block_b: int = 4):
+        assert slm is not None, "a deployment needs at least one model"
+        self.slm, self.llm = slm, llm
+        self.bank = expert_bank
+        self.latency = latency or LatencyModel()
+        self.timeout_ms = timeout_ms
+        self.max_seq = max_seq
+        self.sample_seed = sample_seed
+        self.block_b = block_b
+        self.mesh = mesh
+        if isinstance(rules, str):
+            rules = SH.RULESETS[rules]
+        self.rules = rules or SH.RULES_INFERENCE
+
+        # ---- param placement: per-leaf NamedShardings from the models'
+        # declarative axes trees; device_put commits the layout once, so
+        # every jit below sees pre-placed params and never gathers them
+        self.slm_param_shardings = self._model_shardings(slm)
+        self.llm_param_shardings = self._model_shardings(llm)
+        self.mlp_shardings = self._mlp_shardings(alignment_mlp)
+        lora = (LORA.bank_for_model(expert_bank)
+                if expert_bank is not None else None)
+        self.lora_shardings = (
+            SH.bank_shardings(lora, mesh, self.rules)
+            if mesh is not None and lora is not None else None)
+        self.slm_params = self._place(slm_params, self.slm_param_shardings)
+        self.llm_params = self._place(llm_params, self.llm_param_shardings)
+        self.mlp = self._place(alignment_mlp, self.mlp_shardings)
+        self.lora = self._place(lora, self.lora_shardings)
+
+        # ---- lane-cache layout (structural batch-axis discovery)
+        self.slm_axes = cache_batch_axes(slm, max_seq)
+        self.llm_axes = cache_batch_axes(llm, max_seq) if llm else None
+
+        # ---- compiled entry points (shared by every engine built on
+        # this deployment).  The macro-step reads the fusion/latency/
+        # decode callables through `self` at trace time, so tests can
+        # stub e.g. `dep.fuse_batched` before the first dispatch.
+        rep = (NamedSharding(mesh, P()) if mesh is not None else None)
+        psh_s, psh_l = self.slm_param_shardings, self.llm_param_shardings
+
+        def jit(fn, n_extra, params_shardings, out=None, **kw):
+            """jit with the params arg (position 0) pinned to its
+            placed layout when a mesh is present; remaining args and
+            outputs are unconstrained unless ``out`` pins them."""
+            if mesh is None or params_shardings is None:
+                return jax.jit(fn, **kw)
+            return jax.jit(
+                fn, in_shardings=(params_shardings,) + (None,) * n_extra,
+                out_shardings=out, **kw)
+
+        self.slm_prefill = jit(
+            lambda p, toks, lora, g: slm.prefill(
+                p, {"tokens": toks}, max_seq, lora=lora, gates=g),
+            3, psh_s)
+        self.slm_prefill_packed = jit(
+            lambda p, toks, lens, lora, g: self._lane_out(
+                slm.prefill_packed(p, {"tokens": toks}, lens, max_seq,
+                                   lora=lora, gates=g), self.slm_axes),
+            4, psh_s, out=(rep, None) if mesh is not None else None)
+        self.slm_decode = jit(
+            lambda p, c, t, lora, g: self._lane_out(
+                slm.decode_step(p, c, t, lora, g), self.slm_axes),
+            4, psh_s, out=(rep, None) if mesh is not None else None)
+        self.insert_slm = self._make_insert(self.slm_axes)
+        self.insert_row = jax.jit(
+            lambda full, rows, src, dst: full.at[dst].set(rows[src]))
+        if llm is not None:
+            self.llm_prefill = jit(
+                lambda p, toks: llm.prefill(p, {"tokens": toks}, max_seq),
+                1, psh_l)
+            self.llm_prefill_packed = jit(
+                lambda p, toks, lens: self._lane_out(
+                    llm.prefill_packed(p, {"tokens": toks}, lens, max_seq),
+                    self.llm_axes),
+                2, psh_l, out=(rep, None) if mesh is not None else None)
+            self.llm_decode = jit(
+                lambda p, c, t: self._lane_out(
+                    llm.decode_step(p, c, t), self.llm_axes),
+                2, psh_l, out=(rep, None) if mesh is not None else None)
+            self.insert_llm = self._make_insert(self.llm_axes)
+
+        if alignment_mlp is not None:
+            self.fuse = jax.jit(
+                lambda sl, ll, arrived: FUS.fused_distribution(
+                    self.mlp, sl, ll, arrived))
+            self.fuse_batched = jax.jit(
+                lambda sl, ll, arrived: FUS.fused_distribution_kernel(
+                    self.mlp, sl, ll, arrived, block_b=block_b))
+        self.softmax_batched = jax.jit(
+            lambda sl: jax.nn.softmax(sl.astype(jnp.float32), -1))
+        self.argmax_batched = jax.jit(lambda p: jnp.argmax(p, -1))
+        self.sample_batched = lambda probs, rids, steps: OPS.sample_fused(
+            probs, rids, steps, seed=self.sample_seed)
+        # counter-based network weather, one vectorized draw per call:
+        # lat_batched serves a whole batch row set (per-step AND inside
+        # the macro scan — both see bitwise-identical weather),
+        # lat_request a whole request's steps for the sequential engine
+        self.lat_batched = jax.jit(
+            lambda rids, steps: self.latency.token_latency_device(
+                self.timeout_ms, rids, steps))
+        self.lat_request = jax.jit(
+            lambda rid, steps: self.latency.token_latency_device(
+                self.timeout_ms, jnp.full_like(steps, rid), steps))
+        # the macro-step trace fetch — an attribute so dispatch-
+        # discipline tests can wrap it and count host syncs
+        self.fetch_traces = jax.device_get
+        if llm is not None:
+            self.macro_cloud = self._make_macro(use_cloud=True)
+        self.macro_edge = self._make_macro(use_cloud=False)
+
+    # ------------------------------------------------------ param layout
+    def _model_shardings(self, lm):
+        if self.mesh is None or lm is None:
+            return None
+        return SH.param_shardings(lm.param_axes(), lm.param_specs(),
+                                  self.mesh, self.rules)
+
+    def _mlp_shardings(self, mlp):
+        if self.mesh is None or mlp is None:
+            return None
+        spec = FUS.alignment_spec(mlp["w1"].shape[0] // 2,
+                                  mlp["b1"].shape[0])
+        return SH.param_shardings(None, spec, self.mesh, self.rules)
+
+    def _place(self, tree, shardings):
+        if tree is None or shardings is None:
+            return tree
+        return jax.device_put(tree, shardings)
+
+    def per_device_param_bytes(self) -> Dict[str, int]:
+        """Measured per-device bytes of the placed serving param state
+        (addressable shard 0 of every leaf; replicated leaves count
+        full size, exactly what a device must hold).  ``replicated_
+        bytes`` is the no-mesh footprint for comparison — the Nx
+        shrink on an N-way model axis is the tentpole's memory claim."""
+        parts = {"slm": self.slm_params, "llm": self.llm_params,
+                 "alignment_mlp": self.mlp, "lora_bank": self.lora}
+        out: Dict[str, int] = {}
+        total = rep = 0
+        for name, tree in parts.items():
+            if tree is None:
+                continue
+            b = _tree_bytes(tree, per_device=True)
+            out[f"{name}_bytes"] = b
+            total += b
+            rep += _tree_bytes(tree, per_device=False)
+        out["total_bytes"] = total
+        out["replicated_bytes"] = rep
+        return out
+
+    # ------------------------------------------------------- lane layout
+    def axes_for(self, lm):
+        return self.slm_axes if lm is self.slm else self.llm_axes
+
+    def lane_shardings(self, lm, batch: int) -> Any:
+        """The NamedSharding tree a lane cache of ``lm`` is laid out
+        with (None without a mesh) — the contract tests assert against
+        ``leaf.sharding`` on the live lane caches."""
+        if self.mesh is None:
+            return None
+        cache = jax.eval_shape(
+            lambda: dict(lm.init_cache(batch, self.max_seq),
+                         pos=jnp.zeros((batch,), jnp.int32)))
+        return SH.lane_cache_shardings(cache, self.axes_for(lm),
+                                       self.mesh, self.rules)
+
+    def init_lane_cache(self, lm, batch: int) -> Any:
+        """A freshly allocated stacked lane cache (per-row pos), laid
+        out over the mesh per the launch/sharding.py lane rules."""
+        cache = dict(lm.init_cache(batch, self.max_seq),
+                     pos=jnp.zeros((batch,), jnp.int32))
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, SH.lane_cache_shardings(
+            cache, self.axes_for(lm), self.mesh, self.rules))
+
+    def commit_replicated(self, x):
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
+
+    def constrain_lane(self, cache, axes_tree):
+        return jax.tree.map(
+            lambda x, ab: jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, SH.lane_leaf_spec(
+                    x.shape, ab, self.mesh, self.rules))),
+            cache, axes_tree)
+
+    def replicated(self, x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P()))
+
+    def _lane_out(self, logits_and_cache, axes_tree):
+        """Constrain a (logits, cache) pair to the lane layout: cache
+        leaves to their per-leaf lane specs, logits replicated (the
+        fusion replication contract).  Identity without a mesh."""
+        logits, cache = logits_and_cache
+        if self.mesh is None:
+            return logits, cache
+        return self.replicated(logits), self.constrain_lane(cache,
+                                                            axes_tree)
+
+    # ---------------------------------------------------- macro-step jit
+    def _make_macro(self, use_cloud: bool):
+        """Build the jitted K-token macro-step for one lane flavour.
+
+        One dispatch decodes K tokens for the whole batch via an
+        on-device ``lax.scan``: per-row counter-based latency draws,
+        Pallas logit fusion with the arrived mask, the fused
+        greedy-argmax / keyed-categorical epilogue, EOS + max_new done
+        masks, row parking at FREED_POS, and both models' decode steps —
+        carrying only device arrays between iterations.  The cloud LLM
+        decode for step t+1 depends only on step t's selected token, not
+        on the host consuming step t's trace, so XLA's async dispatch
+        overlaps it with the fusion/epilogue of the next iteration and
+        the host syncs exactly once per K tokens, on the stacked traces.
+
+        Lane caches and current logits are DONATED (argnums 4-7): the
+        macro-step updates them in place, invalidating any stale
+        references a caller may hold.  ``k`` and ``sample`` (whether any
+        row draws categorically) are static — at most two traces per
+        lane flavour per K.  Param args are pinned to their placed
+        layouts via ``in_shardings`` on a mesh deployment."""
+        dep = self
+
+        def impl(slm_params, llm_params, lora, gates,
+                 s_cache, l_cache, sl, ll,
+                 rids, key_ids, steps, max_new, greedy, done,
+                 k: int, sample: bool):
+            b = sl.shape[0]
+
+            def body(carry, _):
+                s_cache, l_cache, sl, ll, steps, done = carry
+                active = ~done
+                if use_cloud:
+                    lat, ok = dep.lat_batched(rids, steps)
+                    arrived = ok & active
+                    probs, w = dep.fuse_batched(sl, ll, arrived)
+                else:
+                    probs = dep.softmax_batched(sl)
+                    w = jnp.ones((b,), jnp.float32)
+                    lat = jnp.zeros((b,), jnp.float32)
+                    arrived = jnp.zeros((b,), bool)
+                nxt = OPS.select_sample_fused(probs, greedy, key_ids,
+                                              steps, seed=dep.sample_seed,
+                                              sample=sample)
+                done_now = active & ((nxt == TOK.EOS)
+                                     | (steps + 1 >= max_new))
+                feed = jnp.where(active & ~done_now, nxt, 0)[:, None]
+
+                def park(c):
+                    # rows that just finished: freeze before this very
+                    # decode so their caches never see the dummy token
+                    return dict(c, pos=jnp.where(done_now, ATT.FREED_POS,
+                                                 c["pos"]))
+
+                s_logits, new_s = dep.slm_decode(
+                    slm_params, park(s_cache), feed, lora, gates)
+                new_sl = s_logits[:, 0]
+                if use_cloud:
+                    l_logits, new_l = dep.llm_decode(
+                        llm_params, park(l_cache), feed)
+                    new_ll = l_logits[:, 0]
+                else:
+                    new_l, new_ll = l_cache, ll
+                new_carry = (new_s, new_l, new_sl, new_ll,
+                             steps + active.astype(jnp.int32),
+                             done | done_now)
+                return new_carry, (nxt, arrived, lat, w, active)
+
+            def pin(carry):
+                # pin the scan carry to the lane layout at BOTH ends:
+                # GSPMD's carry unification may otherwise override the
+                # in-body constraints (it resharded pos/sl over the
+                # batch axes) and reshard every iteration
+                if dep.mesh is None:
+                    return carry
+                s_c, l_c, sl_c, ll_c, st, dn = carry
+                s_c = dep.constrain_lane(s_c, dep.slm_axes)
+                sl_c = dep.replicated(sl_c)
+                if use_cloud:
+                    l_c = dep.constrain_lane(l_c, dep.llm_axes)
+                    ll_c = dep.replicated(ll_c)
+                return (s_c, l_c, sl_c, ll_c, st, dn)
+
+            carry, traces = jax.lax.scan(
+                body, pin((s_cache, l_cache, sl, ll, steps, done)),
+                None, length=k)
+            return pin(carry), traces
+
+        kw: Dict[str, Any] = {}
+        if self.mesh is not None:
+            psh_l = self.llm_param_shardings if use_cloud else None
+            kw["in_shardings"] = ((self.slm_param_shardings, psh_l)
+                                  + (None,) * 12)
+        # k/sample are positional statics: pjit rejects kwargs when
+        # in_shardings is given, so the engine passes them by position
+        return jax.jit(impl, static_argnums=(14, 15),
+                       donate_argnums=(4, 5, 6, 7), **kw)
+
+    # ------------------------------------------------- cache row scatter
+    def _make_insert(self, axes_tree):
+        """Jitted (full, row_cache, src_rows, dst_slots) scatter of
+        prefilled cache rows into a stacked lane cache — ALL rows of an
+        admission burst in one fused update (a per-row loop would copy
+        the whole lane cache once per row), generic over the model's
+        cache layout.  src/dst: (n,) int32 index arrays.
+
+        With a mesh, batch-sharded leaves scatter through a
+        ``shard_map`` over the batch mesh axes: each device holds only
+        its own rows, translates dst slots to shard-local indices and
+        drops rows owned by other shards, so admitting a burst never
+        gathers the whole lane cache to one device (only the freshly
+        prefilled rows — n of them — are broadcast)."""
+        axes = jax.tree.leaves(axes_tree)
+        mesh, rules = self.mesh, self.rules
+        daxes = SH.batch_axes(mesh) if mesh is not None else ()
+        sizes = dict(mesh.shape) if mesh is not None else {}
+
+        def plain(f, r, ax, src, dst):
+            taken = jnp.moveaxis(
+                jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
+            fm = jnp.moveaxis(f, ax, 0).at[dst].set(taken)
+            return jnp.moveaxis(fm, 0, ax)
+
+        def sharded(f, r, ax, src, dst, spec):
+            # batch moved to front; a dim d of the original layout lands
+            # at d (d > ax), d + 1 (d < ax), or 0 (d == ax)
+            taken = jnp.moveaxis(
+                jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
+            fm = jnp.moveaxis(f, ax, 0)
+            mspec = [None] * fm.ndim
+            mspec[0] = spec[ax]
+            for d in range(len(spec)):
+                if d != ax and spec[d] is not None:
+                    mspec[d if d > ax else d + 1] = spec[d]
+            rspec = list(mspec)
+            rspec[0] = None              # admitted rows: replicated batch
+
+            def body(f_loc, t_loc, dst_loc):
+                idx = jnp.int32(0)
+                for a in daxes:
+                    idx = idx * sizes[a] + jax.lax.axis_index(a)
+                nb = f_loc.shape[0]
+                start = idx * nb
+                # slots outside this shard -> index nb, dropped by the
+                # scatter (never wrap: dst - start can be negative)
+                loc = jnp.where((dst_loc >= start) & (dst_loc < start + nb),
+                                dst_loc - start, nb)
+                return f_loc.at[loc].set(t_loc, mode="drop")
+
+            fm = shard_map(body, mesh=mesh,
+                           in_specs=(P(*mspec), P(*rspec), P()),
+                           out_specs=P(*mspec),
+                           check_rep=False)(fm, taken, dst)
+            return jnp.moveaxis(fm, 0, ax)
+
+        def impl(full, row, src, dst):
+            ff, fdef = jax.tree.flatten(full)
+            rr, _ = jax.tree.flatten(row)
+            out = []
+            for f, r, ax in zip(ff, rr, axes):
+                if f.ndim == 1:       # per-row pos <- scalar or (B,) row
+                    out.append(f.at[dst].set(
+                        jnp.reshape(r, (-1,))[src].astype(f.dtype)))
+                    continue
+                if mesh is None:
+                    out.append(plain(f, r, ax, src, dst))
+                    continue
+                spec = SH.lane_leaf_spec(f.shape, ax, mesh, rules)
+                if spec[ax] is None:  # batch replicated: plain scatter
+                    res = jax.lax.with_sharding_constraint(
+                        plain(f, r, ax, src, dst), NamedSharding(mesh, spec))
+                else:
+                    res = sharded(f, r, ax, src, dst, spec)
+                out.append(res)
+            return jax.tree.unflatten(fdef, out)
+        return jax.jit(impl)

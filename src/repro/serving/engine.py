@@ -8,13 +8,14 @@ Pipeline per request (Fig. 8):
      parallel; logits fused per Eq. 12-15; if the cloud misses the τ
      budget the fusion weight is forced to w=1 (Sec. IV-D fallback).
 
-Both models run as JAX decode steps; "cloud" latency comes from
-serving/latency.py.  The dry-run lowers the same fused step onto the
-production mesh (launch/dryrun.py ``floe-fusion`` target).
-
-``BatchedHybridEngine(mesh=...)`` shards the continuous-decode lanes
-over a JAX mesh (launch/mesh.py ``make_serving_mesh``) so one lane
-spans a pod slice — see the class docstring for the layout contract.
+Placement is delegated wholesale to ``serving/deployment.py``: a
+``ServingDeployment`` owns the mesh, the param + lane-cache shardings
+and every compiled entry point; the engines here are host-side request
+bookkeeping (slots, lanes, stats, admission) on top of it.  Engines can
+be built either through an explicit ``deployment=`` (serve.py,
+benchmarks — several engines may share one deployment and its compiled
+programs) or from the legacy flat argument list, which constructs a
+private deployment internally.
 """
 from __future__ import annotations
 
@@ -24,18 +25,26 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import fusion as FUS
-from repro.core import lora as LORA
-from repro.kernels.logit_fusion import ops as OPS
 from repro.core.privacy import PrivacyDetector
 from repro.core.router import Router
 from repro.data import tokenizer as TOK
-from repro.launch import sharding as SH
 from repro.models import attention as ATT
+from repro.serving.deployment import ServingDeployment
 from repro.serving.latency import LatencyModel
+
+
+def _reject_deployment_args(**named):
+    """Engines given an explicit ``deployment=`` must not also receive
+    deployment-level config — it would be silently ignored (the
+    deployment already compiled with its own).  ``named`` maps arg name
+    -> (value, default)."""
+    clashing = [k for k, (v, d) in named.items() if v != d]
+    if clashing:
+        raise ValueError(
+            "deployment-level arguments are ignored when deployment= is "
+            f"given — set them on the ServingDeployment instead: "
+            f"{sorted(clashing)}")
 
 
 @dataclass
@@ -55,43 +64,47 @@ class GenStats:
 class HybridEngine:
     """Floe inference engine pairing an edge SLM with a cloud LLM."""
 
-    def __init__(self, slm, slm_params, llm, llm_params, alignment_mlp,
-                 expert_bank=None, router: Optional[Router] = None,
+    def __init__(self, slm=None, slm_params=None, llm=None, llm_params=None,
+                 alignment_mlp=None, expert_bank=None,
+                 router: Optional[Router] = None,
                  detector: Optional[PrivacyDetector] = None,
                  latency: Optional[LatencyModel] = None,
                  timeout_ms: float = 200.0, max_seq: int = 96,
-                 sample_seed: int = 0):
-        self.slm, self.slm_params = slm, slm_params
-        self.llm, self.llm_params = llm, llm_params
-        self.mlp = alignment_mlp
-        self.bank = expert_bank
+                 sample_seed: int = 0,
+                 deployment: Optional[ServingDeployment] = None):
+        if deployment is None:
+            deployment = ServingDeployment(
+                slm, slm_params, llm, llm_params, alignment_mlp,
+                expert_bank=expert_bank, latency=latency,
+                timeout_ms=timeout_ms, max_seq=max_seq,
+                sample_seed=sample_seed)
+        else:
+            _reject_deployment_args(
+                slm=(slm, None), slm_params=(slm_params, None),
+                llm=(llm, None), llm_params=(llm_params, None),
+                alignment_mlp=(alignment_mlp, None),
+                expert_bank=(expert_bank, None), latency=(latency, None),
+                timeout_ms=(timeout_ms, 200.0), max_seq=(max_seq, 96),
+                sample_seed=(sample_seed, 0))
+        if deployment.llm is None or deployment.mlp is None:
+            raise ValueError(
+                "HybridEngine needs a hybrid deployment (llm + alignment "
+                "mlp); an SLM-only deployment serves SoloEngine")
+        self.dep = deployment
+        self.slm, self.slm_params = deployment.slm, deployment.slm_params
+        self.llm, self.llm_params = deployment.llm, deployment.llm_params
+        self.mlp = deployment.mlp
+        self.bank = deployment.bank
         self.router = router
         self.detector = detector or PrivacyDetector()
-        self.latency = latency or LatencyModel()
-        self.timeout_ms = timeout_ms
-        self.max_seq = max_seq
-        self.sample_seed = sample_seed
-
-        self._slm_decode = jax.jit(
-            lambda p, c, t, lora, g: slm.decode_step(p, c, t, lora, g))
-        self._llm_decode = jax.jit(
-            lambda p, c, t: llm.decode_step(p, c, t))
-        # jitted prefill (one retrace per distinct prompt length) — the
-        # eager op-by-op prefill dominated per-request wall time
-        self._slm_prefill = jax.jit(
-            lambda p, toks, lora, g: slm.prefill(
-                p, {"tokens": toks}, self.max_seq, lora=lora, gates=g))
-        self._llm_prefill = jax.jit(
-            lambda p, toks: llm.prefill(p, {"tokens": toks}, self.max_seq))
-        self._fuse = jax.jit(
-            lambda sl, ll, arrived: FUS.fused_distribution(
-                self.mlp, sl, ll, arrived))
-        # a whole request's network weather in ONE vectorized dispatch
-        # (steps 0..max_new-1 for one rid) — the per-token scalar shim
-        # paid a jit dispatch + blocking sync per decoded token
-        self._lat_request = jax.jit(
-            lambda rid, steps: self.latency.token_latency_device(
-                self.timeout_ms, jnp.full_like(steps, rid), steps))
+        self.latency = deployment.latency
+        self.timeout_ms = deployment.timeout_ms
+        self.max_seq = deployment.max_seq
+        self.sample_seed = deployment.sample_seed
+        # placed LoRA bank, consumed only when a router gates it
+        self.lora = (deployment.lora
+                     if router is not None and self.bank is not None
+                     else None)
 
     def _sample_key(self, rid: Optional[int]):
         """Per-request PRNG root; fold_in(step) yields per-token keys, so
@@ -110,29 +123,33 @@ class HybridEngine:
         ``sample_key_id`` (a caller-supplied per-request seed, plumbed
         from ``Scheduler.submit``) overrides rid in the sampling key
         derivation only — latency draws stay keyed by rid."""
+        dep = self.dep
         stats = GenStats()
         stats.private = self.detector.detect(prompt)
         gates = None
         lora = None
         if self.router is not None and self.bank is not None:
             gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
-            lora = LORA.bank_for_model(self.bank)
+            lora = self.lora
         sample_key = self._sample_key(
             rid if sample_key_id is None else sample_key_id)
 
         ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
         toks = jnp.asarray([ids], jnp.int32)
-        s_logits, s_cache = self._slm_prefill(self.slm_params, toks,
-                                              lora, gates)
+        s_logits, s_cache = dep.slm_prefill(self.slm_params, toks,
+                                            lora, gates)
         use_cloud = not stats.private
         if use_cloud:
-            l_logits, l_cache = self._llm_prefill(self.llm_params, toks)
+            l_logits, l_cache = dep.llm_prefill(self.llm_params, toks)
 
         out_ids: List[int] = []
         sl, ll = s_logits[:, 0], (l_logits[:, 0] if use_cloud else None)
         lat_row = ok_row = None
         if use_cloud and rid is not None:
-            lat_d, ok_d = self._lat_request(
+            # a whole request's network weather in ONE vectorized
+            # dispatch — the per-token scalar shim paid a jit dispatch
+            # + blocking sync per decoded token
+            lat_d, ok_d = dep.lat_request(
                 jnp.int32(rid), jnp.arange(max_new_tokens,
                                            dtype=jnp.int32))
             lat_row, ok_row = np.asarray(lat_d), np.asarray(ok_d)
@@ -144,7 +161,7 @@ class HybridEngine:
                 else:        # rid-less legacy path: stateful host stream
                     lat_ms, arrived = self.latency.token_latency_ms(
                         self.timeout_ms, rid=rid, step=len(out_ids))
-                p_out, w = self._fuse(sl, ll, jnp.asarray(arrived))
+                p_out, w = dep.fuse(sl, ll, jnp.asarray(arrived))
                 stats.cloud_tokens += int(arrived)
                 stats.fallback_tokens += int(not arrived)
             else:
@@ -163,12 +180,12 @@ class HybridEngine:
             if nxt == TOK.EOS:
                 break
             t = jnp.asarray([[nxt]], jnp.int32)
-            s_logits, s_cache = self._slm_decode(self.slm_params, s_cache, t,
-                                                 lora, gates)
+            s_logits, s_cache = dep.slm_decode(self.slm_params, s_cache, t,
+                                               lora, gates)
             sl = s_logits[:, 0]
             if use_cloud:
-                l_logits, l_cache = self._llm_decode(self.llm_params,
-                                                     l_cache, t)
+                l_logits, l_cache = dep.llm_decode(self.llm_params,
+                                                   l_cache, t)
                 ll = l_logits[:, 0]
         return TOK.decode(out_ids), stats
 
@@ -205,6 +222,7 @@ class _Lane:
         self.sl = None               # (B, V) current SLM logits
         self.ll = None               # (B, V) current LLM logits
         self.gates = None            # (B, E) router weights or None
+        self._inflight = None        # dispatched macro awaiting replay
 
     # ----------------------------------------------------------- helpers
     def free_slot(self) -> Optional[int]:
@@ -221,20 +239,16 @@ class _Lane:
         return sum(s is not None for s in self.slots)
 
     def _alloc(self, vocab: int, n_experts: Optional[int]):
-        eng = self.eng
+        dep = self.eng.dep
         b = self.batch
-        self.s_cache = eng._commit_lane(
-            dict(eng.slm.init_cache(b, eng.max_seq),
-                 pos=jnp.zeros((b,), jnp.int32)), eng._slm_axes)
+        self.s_cache = dep.init_lane_cache(dep.slm, b)
         if self.use_cloud:
-            self.l_cache = eng._commit_lane(
-                dict(eng.llm.init_cache(b, eng.max_seq),
-                     pos=jnp.zeros((b,), jnp.int32)), eng._llm_axes)
-            self.ll = eng._commit_replicated(
+            self.l_cache = dep.init_lane_cache(dep.llm, b)
+            self.ll = dep.commit_replicated(
                 jnp.zeros((b, vocab), jnp.float32))
-        self.sl = eng._commit_replicated(jnp.zeros((b, vocab), jnp.float32))
+        self.sl = dep.commit_replicated(jnp.zeros((b, vocab), jnp.float32))
         if n_experts is not None:
-            self.gates = eng._commit_replicated(
+            self.gates = dep.commit_replicated(
                 jnp.zeros((b, n_experts), jnp.float32))
 
     # --------------------------------------------------------- admission
@@ -246,8 +260,14 @@ class _Lane:
         as a single jitted call with per-row valid lengths masked
         (``LM.prefill_packed``); the batch axis is padded to a power of
         two so retraces stay bounded.  Each resulting cache row is then
-        scattered into its free lane slot."""
+        scattered into its free lane slot.
+
+        Safe to call while a macro-step is in flight (the pipelined
+        scheduler does): target slots are by construction parked rows
+        of the running scan, and the scatter is dispatched against the
+        macro's OUTPUT caches."""
         eng = self.eng
+        dep = eng.dep
         if not jobs:
             return
         if not eng.packed_prefill:
@@ -276,24 +296,24 @@ class _Lane:
             g[:n] = gates_rows
             g = jnp.asarray(g)
         toks_j, lens_j = jnp.asarray(toks), jnp.asarray(lens_p)
-        s_logits, s_cache = eng._slm_prefill_packed(
+        s_logits, s_cache = dep.slm_prefill_packed(
             eng.slm_params, toks_j, lens_j, eng.lora, g)
         if self.s_cache is None:
             self._alloc(s_logits.shape[-1],
                         None if g is None else g.shape[-1])
         l_logits = l_cache = None
         if self.use_cloud:
-            l_logits, l_cache = eng._llm_prefill_packed(
+            l_logits, l_cache = dep.llm_prefill_packed(
                 eng.llm_params, toks_j, lens_j)
         src = jnp.arange(n)
         dst = jnp.asarray([j[0] for j in jobs], jnp.int32)
-        self.s_cache = eng._insert_slm(self.s_cache, s_cache, src, dst)
-        self.sl = eng._insert_row(self.sl, s_logits[:, 0], src, dst)
+        self.s_cache = dep.insert_slm(self.s_cache, s_cache, src, dst)
+        self.sl = dep.insert_row(self.sl, s_logits[:, 0], src, dst)
         if self.use_cloud:
-            self.l_cache = eng._insert_llm(self.l_cache, l_cache, src, dst)
-            self.ll = eng._insert_row(self.ll, l_logits[:, 0], src, dst)
+            self.l_cache = dep.insert_llm(self.l_cache, l_cache, src, dst)
+            self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
         if g is not None:
-            self.gates = eng._insert_row(self.gates, g, src, dst)
+            self.gates = dep.insert_row(self.gates, g, src, dst)
         for slot, prompt, max_new, greedy, rid, private, key_id in jobs:
             self.slots[slot] = _Slot(rid, max_new, greedy,
                                      GenStats(private=private),
@@ -305,25 +325,26 @@ class _Lane:
         """Legacy per-request B=1 prefill (kept as the burst-admission
         benchmark baseline and a bit-exact reference path)."""
         eng = self.eng
+        dep = eng.dep
         gates_row = None
         if eng.router is not None and eng.bank is not None:
             gates_row = jnp.asarray(eng.router.gate_weights(prompt))[None, :]
         ids = TOK.encode(prompt + " ")[: eng.max_seq - max_new - 1]
         toks = jnp.asarray([ids], jnp.int32)
-        s_logits, s_cache = eng._slm_prefill(eng.slm_params, toks,
-                                             eng.lora, gates_row)
+        s_logits, s_cache = dep.slm_prefill(eng.slm_params, toks,
+                                            eng.lora, gates_row)
         if self.s_cache is None:
             self._alloc(s_logits.shape[-1],
                         None if gates_row is None else gates_row.shape[-1])
         src, dst = jnp.zeros((1,), jnp.int32), jnp.asarray([slot], jnp.int32)
-        self.s_cache = eng._insert_slm(self.s_cache, s_cache, src, dst)
-        self.sl = eng._insert_row(self.sl, s_logits[:, 0], src, dst)
+        self.s_cache = dep.insert_slm(self.s_cache, s_cache, src, dst)
+        self.sl = dep.insert_row(self.sl, s_logits[:, 0], src, dst)
         if self.use_cloud:
-            l_logits, l_cache = eng._llm_prefill(eng.llm_params, toks)
-            self.l_cache = eng._insert_llm(self.l_cache, l_cache, src, dst)
-            self.ll = eng._insert_row(self.ll, l_logits[:, 0], src, dst)
+            l_logits, l_cache = dep.llm_prefill(eng.llm_params, toks)
+            self.l_cache = dep.insert_llm(self.l_cache, l_cache, src, dst)
+            self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
         if gates_row is not None:
-            self.gates = eng._insert_row(self.gates, gates_row, src, dst)
+            self.gates = dep.insert_row(self.gates, gates_row, src, dst)
         self.slots[slot] = _Slot(rid, max_new, greedy,
                                  GenStats(private=private), key_id=key_id)
 
@@ -337,6 +358,7 @@ class _Lane:
         syncs per token; ``macro_step`` collapses the same math into one
         dispatch + one sync per K tokens and must stay bit-identical."""
         eng = self.eng
+        dep = eng.dep
         if self.active == 0:
             return []
         b = self.batch
@@ -349,16 +371,16 @@ class _Lane:
                     occ[i], rids[i], steps[i] = True, s.rid, len(s.out_ids)
             # one vectorized counter-based draw for the whole batch —
             # the same threefry weather the macro-step scan draws
-            lat_d, ok_d = eng._lat_batched(jnp.asarray(rids),
-                                           jnp.asarray(steps))
+            lat_d, ok_d = dep.lat_batched(jnp.asarray(rids),
+                                          jnp.asarray(steps))
             lat = np.asarray(lat_d)
             arrived = np.asarray(ok_d) & occ
-            probs, w = eng._fuse_batched(self.sl, self.ll,
-                                         jnp.asarray(arrived))
+            probs, w = dep.fuse_batched(self.sl, self.ll,
+                                        jnp.asarray(arrived))
         else:
-            probs = eng._softmax_batched(self.sl)
+            probs = dep.softmax_batched(self.sl)
             w = jnp.ones((b,))
-        nxt_greedy = np.asarray(eng._argmax_batched(probs))
+        nxt_greedy = np.asarray(dep.argmax_batched(probs))
         w_host = np.asarray(w)
         nxt_sampled = None
         if any(s is not None and not s.greedy for s in self.slots):
@@ -373,7 +395,7 @@ class _Lane:
                 if s is not None:
                     rids[i] = s.rid if s.key_id is None else s.key_id
                     steps[i] = len(s.out_ids)
-            nxt_sampled = np.asarray(eng._sample_batched(
+            nxt_sampled = np.asarray(dep.sample_batched(
                 probs, jnp.asarray(rids), jnp.asarray(steps)))
 
         done: List[Tuple[int, str, GenStats]] = []
@@ -406,11 +428,11 @@ class _Lane:
             self._park_rows(freed)
         if any(s is not None for s in self.slots):
             toks = jnp.asarray(next_tok)
-            s_logits, self.s_cache = eng._slm_decode(
+            s_logits, self.s_cache = dep.slm_decode(
                 eng.slm_params, self.s_cache, toks, eng.lora, self.gates)
             self.sl = s_logits[:, 0]
             if self.use_cloud:
-                l_logits, self.l_cache = eng._llm_decode(
+                l_logits, self.l_cache = dep.llm_decode(
                     eng.llm_params, self.l_cache, toks)
                 self.ll = l_logits[:, 0]
         return done
@@ -433,23 +455,24 @@ class _Lane:
                 pos=self.l_cache["pos"].at[idx].set(ATT.FREED_POS))
 
     # -------------------------------------------------------- macro decode
-    def macro_step(self, k: int) -> List[Tuple[int, str, GenStats]]:
-        """Decode K tokens for every occupied row in ONE jitted,
-        cache-donating dispatch (an on-device ``lax.scan`` over the whole
-        per-token step: latency draws, fusion, select/sample, EOS + park
-        masks, SLM+LLM decode), then replay the returned per-step traces
-        into the host-side slot bookkeeping.
+    def macro_dispatch(self, k: int):
+        """Dispatch a K-token macro-step for every occupied row in ONE
+        jitted, cache-donating call (an on-device ``lax.scan`` over the
+        whole per-token step: latency draws, fusion, select/sample, EOS
+        + park masks, SLM+LLM decode) WITHOUT the host sync — the
+        returned trace arrays are stashed for ``macro_collect``.
 
-        Exactly one host sync per call (the trace fetch); the lane's
-        cache/logit buffers are DONATED to the dispatch — any reference
-        taken before this call is invalid afterwards.  Returns the
-        requests that finished during the macro-step.  Bit-identical to
-        running ``step()`` k times: rows that finish mid-macro keep
-        decoding as parked rows (writes dropped, pos frozen) and their
-        freed slots refill at the next macro boundary."""
+        The lane's cache/logit buffers are DONATED to the dispatch —
+        any reference taken before this call is invalid afterwards.
+        Between dispatch and collect the host is free to run admission
+        (tokenize + packed prefill + row scatter) against the macro's
+        output caches: that is the scheduler's admission-pipelining
+        overlap.  No-op when the lane is idle or a macro is already in
+        flight."""
         eng = self.eng
-        if self.active == 0:
-            return []
+        dep = eng.dep
+        if self.active == 0 or self._inflight is not None:
+            return
         b = self.batch
         rids = np.zeros((b,), np.int32)
         keys = np.zeros((b,), np.int32)
@@ -467,18 +490,29 @@ class _Lane:
             maxn[i] = s.max_new
             greedy[i] = s.greedy
         sample = bool((~greedy & ~done).any())
-        fn = eng._macro_cloud if self.use_cloud else eng._macro_edge
+        fn = dep.macro_cloud if self.use_cloud else dep.macro_edge
         carry, traces = fn(
             eng.slm_params, eng.llm_params if self.use_cloud else None,
             eng.lora, self.gates,
             self.s_cache, self.l_cache, self.sl, self.ll,
             jnp.asarray(rids), jnp.asarray(keys), jnp.asarray(steps),
             jnp.asarray(maxn), jnp.asarray(greedy), jnp.asarray(done),
-            k=k, sample=sample)
+            k, sample)
         self.s_cache, self.l_cache, self.sl, self.ll = carry[:4]
-        # the ONE host sync of the macro-step: everything the replay
-        # needs arrives in a single device fetch
-        toks, arrived, lat, w, emit = eng._fetch_traces(traces)
+        self._inflight = (k, traces)
+
+    def macro_collect(self) -> List[Tuple[int, str, GenStats]]:
+        """The ONE host sync of an in-flight macro-step: fetch the
+        stacked traces and replay them into the slot bookkeeping.
+        Returns the requests that finished during the macro-step.
+        Rows admitted between dispatch and collect were parked for the
+        whole scan (emit mask all-False), so the replay skips them."""
+        eng = self.eng
+        if self._inflight is None:
+            return []
+        k, traces = self._inflight
+        self._inflight = None
+        toks, arrived, lat, w, emit = eng.dep.fetch_traces(traces)
 
         out_done: List[Tuple[int, str, GenStats]] = []
         for t in range(k):
@@ -502,6 +536,15 @@ class _Lane:
                     self.slots[i] = None    # freed: refill next boundary
         return out_done
 
+    def macro_step(self, k: int) -> List[Tuple[int, str, GenStats]]:
+        """Dispatch + collect in one call: decode K tokens for every
+        occupied row in ONE jitted dispatch with ONE host sync.
+        Bit-identical to running ``step()`` k times: rows that finish
+        mid-macro keep decoding as parked rows (writes dropped, pos
+        frozen) and their freed slots refill at the next boundary."""
+        self.macro_dispatch(k)
+        return self.macro_collect()
+
 
 class BatchedHybridEngine(HybridEngine):
     """Continuous-batching Floe engine (the paper's real-time serving
@@ -520,346 +563,75 @@ class BatchedHybridEngine(HybridEngine):
 
     Decoding advances in **K-token macro-steps** (``macro_k``, default
     8): one jitted, cache-donating dispatch runs an on-device scan over
-    the whole per-token pipeline — latency draws, fusion, select/sample,
-    EOS detection, row parking, both decodes — and the host syncs once
-    per K tokens to replay the returned traces into request bookkeeping.
-    Admission therefore happens at macro boundaries: a row freed
-    mid-macro idles (parked, writes dropped) until the next boundary,
-    which changes wall-clock scheduling but not any request's output.
+    the whole per-token pipeline and the host syncs once per K tokens to
+    replay the returned traces into request bookkeeping.  ``step()``
+    splits into ``dispatch_step()`` (enqueue the macro, no sync) and
+    ``collect_step()`` (trace fetch + replay), so a scheduler can admit
+    the next burst — tokenize, packed prefill, row scatter — while the
+    macro is still executing (macro-boundary admission pipelining).
     DONATION CONTRACT: each macro-step consumes the lane's cache/logit
     buffers — callers must re-read ``lane.s_cache``/``lane.sl``/... after
     every step and never hold stale references across one.  ``macro_k=0``
     keeps the legacy per-token step path (multiple dispatches + syncs
-    per token) as a bit-exact reference and benchmark baseline;
-    ``macro_k=1`` is the macro path at today's one-token cadence.
+    per token) as a bit-exact reference and benchmark baseline.
 
-    With ``mesh=`` a lane spans the mesh instead of one device: every
-    stacked lane-cache leaf carries a per-leaf NamedSharding (batch rows
-    over the ("pod", "data") axes, wide KV/head dims over "model" — the
-    ``launch/sharding.py`` lane rules under ``rules=``, a RULESETS name
-    or an explicit dict), the jitted decode step and packed prefill pin
-    those layouts with sharding constraints, and admission scatters
-    freshly prefilled rows into the lane via a ``shard_map`` that routes
-    each row to the shard owning its slot — the whole lane cache is
-    never gathered to one device.  Fused logits are pulled back
-    replicated each step (the paper fuses at the edge), so the Pallas
-    fusion kernel and sampling are untouched."""
+    Placement — the mesh, per-leaf param NamedShardings (SLM, LLM, LoRA
+    bank, alignment MLP laid out by the launch/sharding.py rule sets so
+    per-device param bytes shrink with the "model" axis), the lane-cache
+    layout, and all compiled entry points — lives on the
+    ``ServingDeployment`` (``deployment=``, or built internally from the
+    legacy ``mesh=``/``rules=`` arguments).  Fused logits always come
+    back replicated (the paper fuses at the edge), so the Pallas fusion
+    kernel and sampling are untouched whatever the layout."""
 
-    def __init__(self, slm, slm_params, llm, llm_params, alignment_mlp,
-                 expert_bank=None, router: Optional[Router] = None,
+    def __init__(self, slm=None, slm_params=None, llm=None, llm_params=None,
+                 alignment_mlp=None, expert_bank=None,
+                 router: Optional[Router] = None,
                  detector: Optional[PrivacyDetector] = None,
                  latency: Optional[LatencyModel] = None,
                  timeout_ms: float = 200.0, max_seq: int = 96,
                  sample_seed: int = 0, batch_size: int = 8,
                  edge_batch_size: Optional[int] = None, block_b: int = 4,
                  packed_prefill: bool = True, prefill_chunk: int = 16,
-                 mesh: Optional[Mesh] = None, rules="inference",
-                 macro_k: int = 8):
-        super().__init__(slm, slm_params, llm, llm_params, alignment_mlp,
-                         expert_bank=expert_bank, router=router,
-                         detector=detector, latency=latency,
-                         timeout_ms=timeout_ms, max_seq=max_seq,
-                         sample_seed=sample_seed)
-        for lm in (slm, llm):
-            # the per-leaf batch-axis scatter below covers every dense
-            # cache layout; other families keep a scalar decode pos
+                 mesh=None, rules="inference", macro_k: int = 8,
+                 deployment: Optional[ServingDeployment] = None):
+        if deployment is None:
+            deployment = ServingDeployment(
+                slm, slm_params, llm, llm_params, alignment_mlp,
+                expert_bank=expert_bank, latency=latency,
+                timeout_ms=timeout_ms, max_seq=max_seq,
+                sample_seed=sample_seed, mesh=mesh, rules=rules,
+                block_b=block_b)
+        else:
+            _reject_deployment_args(
+                slm=(slm, None), slm_params=(slm_params, None),
+                llm=(llm, None), llm_params=(llm_params, None),
+                alignment_mlp=(alignment_mlp, None),
+                expert_bank=(expert_bank, None), latency=(latency, None),
+                timeout_ms=(timeout_ms, 200.0), max_seq=(max_seq, 96),
+                sample_seed=(sample_seed, 0), mesh=(mesh, None),
+                rules=(rules, "inference"), block_b=(block_b, 4))
+        if deployment.llm is None:
+            raise ValueError(
+                "BatchedHybridEngine needs a hybrid (SLM+LLM) deployment;"
+                " this one is SLM-only — serve it with SoloEngine")
+        super().__init__(router=router, detector=detector,
+                         deployment=deployment)
+        for lm in (self.slm, self.llm):
+            # the per-leaf batch-axis scatter covers every dense cache
+            # layout; other families keep a scalar decode pos
             if lm.cfg.family != "dense":
                 raise NotImplementedError(
                     "batched continuous decode supports dense-family "
                     f"models (got {lm.cfg.family})")
-        self.block_b = block_b
         self.packed_prefill = packed_prefill
         self.prefill_chunk = prefill_chunk
         self.macro_k = macro_k
-        self.mesh = mesh
-        if isinstance(rules, str):
-            rules = SH.RULESETS[rules]
-        self.rules = rules or SH.RULES_INFERENCE
-        self._slm_axes = self._cache_batch_axes(slm)
-        self._llm_axes = self._cache_batch_axes(llm)
-        self.lora = (LORA.bank_for_model(self.bank)
-                     if self.router is not None and self.bank is not None
-                     else None)
+        self.mesh = deployment.mesh
+        self.rules = deployment.rules
         self.cloud_lane = _Lane(self, batch_size, use_cloud=True)
         self.edge_lane = _Lane(self, edge_batch_size or batch_size,
                                use_cloud=False)
-
-        self._fuse_batched = jax.jit(
-            lambda sl, ll, arrived: FUS.fused_distribution_kernel(
-                self.mlp, sl, ll, arrived, block_b=self.block_b))
-        self._softmax_batched = jax.jit(
-            lambda sl: jax.nn.softmax(sl.astype(jnp.float32), -1))
-        self._argmax_batched = jax.jit(lambda p: jnp.argmax(p, -1))
-        self._sample_batched = lambda probs, rids, steps: OPS.sample_fused(
-            probs, rids, steps, seed=self.sample_seed)
-        # one vectorized counter-based weather draw for the whole batch
-        # (both the per-step reference path and the macro-step scan use
-        # this, so the two see bitwise-identical network state)
-        self._lat_batched = jax.jit(
-            lambda rids, steps: self.latency.token_latency_device(
-                self.timeout_ms, rids, steps))
-        # the macro-step trace fetch — an attribute so the dispatch-
-        # discipline tests can wrap it and count host syncs
-        self._fetch_traces = jax.device_get
-        self._macro_cloud = self._make_macro(use_cloud=True)
-        self._macro_edge = self._make_macro(use_cloud=False)
-        self._insert_row = jax.jit(
-            lambda full, rows, src, dst: full.at[dst].set(rows[src]))
-        self._insert_slm = self._make_insert(slm, self._slm_axes)
-        self._insert_llm = self._make_insert(llm, self._llm_axes)
-        # packed burst prefill: one retrace per (padded B, padded L) pair
-        self._slm_prefill_packed = jax.jit(
-            lambda p, toks, lens, lora, g: self._lane_out(
-                slm.prefill_packed(p, {"tokens": toks}, lens, self.max_seq,
-                                   lora=lora, gates=g), self._slm_axes))
-        self._llm_prefill_packed = jax.jit(
-            lambda p, toks, lens: self._lane_out(
-                llm.prefill_packed(p, {"tokens": toks}, lens,
-                                   self.max_seq), self._llm_axes))
-        if mesh is not None:
-            # sharding-aware decode steps: pin every stacked cache leaf
-            # back to the lane layout each step (GSPMD propagation must
-            # not drift across the scan) and pull logits replicated for
-            # the edge-side fusion kernel
-            self._slm_decode = jax.jit(
-                lambda p, c, t, lora, g: self._lane_out(
-                    slm.decode_step(p, c, t, lora, g), self._slm_axes))
-            self._llm_decode = jax.jit(
-                lambda p, c, t: self._lane_out(
-                    llm.decode_step(p, c, t), self._llm_axes))
-
-    # ----------------------------------------------------- mesh plumbing
-    def _lane_out(self, logits_and_cache, axes_tree):
-        """Constrain a (logits, cache) pair to the lane layout: cache
-        leaves to their per-leaf lane specs, logits replicated (fusion
-        happens at the edge).  Identity without a mesh."""
-        logits, cache = logits_and_cache
-        if self.mesh is None:
-            return logits, cache
-        return self._replicated(logits), self._constrain_lane(cache,
-                                                              axes_tree)
-
-    def _constrain_lane(self, cache, axes_tree):
-        return jax.tree.map(
-            lambda x, ab: jax.lax.with_sharding_constraint(
-                x, NamedSharding(self.mesh, SH.lane_leaf_spec(
-                    x.shape, ab, self.mesh, self.rules))),
-            cache, axes_tree)
-
-    def _replicated(self, x):
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(self.mesh, P()))
-
-    def _commit_lane(self, cache, axes_tree):
-        """Lay a freshly allocated lane cache out over the mesh per the
-        launch/sharding.py lane rules (identity without a mesh)."""
-        if self.mesh is None:
-            return cache
-        return jax.device_put(cache, SH.lane_cache_shardings(
-            cache, axes_tree, self.mesh, self.rules))
-
-    def _commit_replicated(self, x):
-        if self.mesh is None:
-            return x
-        return jax.device_put(x, NamedSharding(self.mesh, P()))
-
-    def lane_shardings(self, lm, batch: Optional[int] = None) -> Any:
-        """The NamedSharding tree a lane cache of ``lm`` is laid out
-        with (None without a mesh) — the contract tests assert against
-        ``leaf.sharding`` on the live lane caches."""
-        if self.mesh is None:
-            return None
-        axes = self._slm_axes if lm is self.slm else self._llm_axes
-        b = batch or self.cloud_lane.batch
-        cache = jax.eval_shape(
-            lambda: dict(lm.init_cache(b, self.max_seq),
-                         pos=jnp.zeros((b,), jnp.int32)))
-        return SH.lane_cache_shardings(cache, axes, self.mesh, self.rules)
-
-    # ---------------------------------------------------- macro-step jit
-    def _make_macro(self, use_cloud: bool):
-        """Build the jitted K-token macro-step for one lane flavour.
-
-        One dispatch decodes K tokens for the whole batch via an
-        on-device ``lax.scan``: per-row counter-based latency draws,
-        Pallas logit fusion with the arrived mask, the fused
-        greedy-argmax / keyed-categorical epilogue, EOS + max_new done
-        masks, row parking at FREED_POS, and both models' decode steps —
-        carrying only device arrays between iterations.  The cloud LLM
-        decode for step t+1 depends only on step t's selected token, not
-        on the host consuming step t's trace, so XLA's async dispatch
-        overlaps it with the fusion/epilogue of the next iteration (the
-        ROADMAP overlap item) and the host syncs exactly once per K
-        tokens, on the stacked traces.
-
-        Lane caches and current logits are DONATED (argnums 4-7): the
-        macro-step updates them in place, invalidating any stale
-        references a caller may hold.  ``k`` and ``sample`` (whether any
-        row draws categorically) are static — at most two traces per
-        lane flavour per K."""
-        eng = self
-
-        def impl(slm_params, llm_params, lora, gates,
-                 s_cache, l_cache, sl, ll,
-                 rids, key_ids, steps, max_new, greedy, done,
-                 k: int, sample: bool):
-            b = sl.shape[0]
-
-            def body(carry, _):
-                s_cache, l_cache, sl, ll, steps, done = carry
-                active = ~done
-                if use_cloud:
-                    lat, ok = eng._lat_batched(rids, steps)
-                    arrived = ok & active
-                    probs, w = eng._fuse_batched(sl, ll, arrived)
-                else:
-                    probs = eng._softmax_batched(sl)
-                    w = jnp.ones((b,), jnp.float32)
-                    lat = jnp.zeros((b,), jnp.float32)
-                    arrived = jnp.zeros((b,), bool)
-                nxt = OPS.select_sample_fused(probs, greedy, key_ids,
-                                              steps, seed=eng.sample_seed,
-                                              sample=sample)
-                done_now = active & ((nxt == TOK.EOS)
-                                     | (steps + 1 >= max_new))
-                feed = jnp.where(active & ~done_now, nxt, 0)[:, None]
-
-                def park(c):
-                    # rows that just finished: freeze before this very
-                    # decode so their caches never see the dummy token
-                    return dict(c, pos=jnp.where(done_now, ATT.FREED_POS,
-                                                 c["pos"]))
-
-                s_logits, new_s = eng._slm_decode(
-                    slm_params, park(s_cache), feed, lora, gates)
-                new_sl = s_logits[:, 0]
-                if use_cloud:
-                    l_logits, new_l = eng._llm_decode(
-                        llm_params, park(l_cache), feed)
-                    new_ll = l_logits[:, 0]
-                else:
-                    new_l, new_ll = l_cache, ll
-                new_carry = (new_s, new_l, new_sl, new_ll,
-                             steps + active.astype(jnp.int32),
-                             done | done_now)
-                return new_carry, (nxt, arrived, lat, w, active)
-
-            def pin(carry):
-                # pin the scan carry to the lane layout at BOTH ends:
-                # GSPMD's carry unification may otherwise override the
-                # in-body constraints (it resharded pos/sl over the
-                # batch axes) and reshard every iteration
-                if eng.mesh is None:
-                    return carry
-                s_c, l_c, sl_c, ll_c, st, dn = carry
-                s_c = eng._constrain_lane(s_c, eng._slm_axes)
-                sl_c = eng._replicated(sl_c)
-                if use_cloud:
-                    l_c = eng._constrain_lane(l_c, eng._llm_axes)
-                    ll_c = eng._replicated(ll_c)
-                return (s_c, l_c, sl_c, ll_c, st, dn)
-
-            carry, traces = jax.lax.scan(
-                body, pin((s_cache, l_cache, sl, ll, steps, done)),
-                None, length=k)
-            return pin(carry), traces
-
-        return jax.jit(impl, static_argnames=("k", "sample"),
-                       donate_argnums=(4, 5, 6, 7))
-
-    # ------------------------------------------------- cache row scatter
-    def _cache_batch_axes(self, lm):
-        """Per-leaf batch axis of a lane cache, found structurally: the
-        axis whose extent tracks init_cache's batch argument (grouped
-        layouts stack it behind the group dims).  -1 marks batch-free
-        leaves (the scalar "pos", which _alloc overrides per-row)."""
-        c2 = jax.eval_shape(lambda: lm.init_cache(2, self.max_seq))
-        c3 = jax.eval_shape(lambda: lm.init_cache(3, self.max_seq))
-
-        def ax(a, b):
-            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-                if x != y:
-                    return i
-            return -1
-        return jax.tree.map(ax, c2, c3)
-
-    def _make_insert(self, lm, axes_tree):
-        """Jitted (full, row_cache, src_rows, dst_slots) scatter of
-        prefilled cache rows into a stacked lane cache — ALL rows of an
-        admission burst in one fused update (a per-row loop would copy
-        the whole lane cache once per row), generic over the model's
-        cache layout.  src/dst: (n,) int32 index arrays.
-
-        With a mesh, batch-sharded leaves scatter through a
-        ``shard_map`` over the batch mesh axes: each device holds only
-        its own rows, translates dst slots to shard-local indices and
-        drops rows owned by other shards, so admitting a burst never
-        gathers the whole lane cache to one device (only the freshly
-        prefilled rows — n of them — are broadcast)."""
-        axes = jax.tree.leaves(axes_tree)
-        mesh, rules = self.mesh, self.rules
-        daxes = SH.batch_axes(mesh) if mesh is not None else ()
-        sizes = dict(mesh.shape) if mesh is not None else {}
-
-        def plain(f, r, ax, src, dst):
-            taken = jnp.moveaxis(
-                jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
-            fm = jnp.moveaxis(f, ax, 0).at[dst].set(taken)
-            return jnp.moveaxis(fm, 0, ax)
-
-        def sharded(f, r, ax, src, dst, spec):
-            # batch moved to front; a dim d of the original layout lands
-            # at d (d > ax), d + 1 (d < ax), or 0 (d == ax)
-            taken = jnp.moveaxis(
-                jnp.take(r, src, axis=ax), ax, 0).astype(f.dtype)
-            fm = jnp.moveaxis(f, ax, 0)
-            mspec = [None] * fm.ndim
-            mspec[0] = spec[ax]
-            for d in range(len(spec)):
-                if d != ax and spec[d] is not None:
-                    mspec[d if d > ax else d + 1] = spec[d]
-            rspec = list(mspec)
-            rspec[0] = None              # admitted rows: replicated batch
-
-            def body(f_loc, t_loc, dst_loc):
-                idx = jnp.int32(0)
-                for a in daxes:
-                    idx = idx * sizes[a] + jax.lax.axis_index(a)
-                nb = f_loc.shape[0]
-                start = idx * nb
-                # slots outside this shard -> index nb, dropped by the
-                # scatter (never wrap: dst - start can be negative)
-                loc = jnp.where((dst_loc >= start) & (dst_loc < start + nb),
-                                dst_loc - start, nb)
-                return f_loc.at[loc].set(t_loc, mode="drop")
-
-            fm = shard_map(body, mesh=mesh,
-                           in_specs=(P(*mspec), P(*rspec), P()),
-                           out_specs=P(*mspec),
-                           check_rep=False)(fm, taken, dst)
-            return jnp.moveaxis(fm, 0, ax)
-
-        def impl(full, row, src, dst):
-            ff, fdef = jax.tree.flatten(full)
-            rr, _ = jax.tree.flatten(row)
-            out = []
-            for f, r, ax in zip(ff, rr, axes):
-                if f.ndim == 1:       # per-row pos <- scalar or (B,) row
-                    out.append(f.at[dst].set(
-                        jnp.reshape(r, (-1,))[src].astype(f.dtype)))
-                    continue
-                if mesh is None:
-                    out.append(plain(f, r, ax, src, dst))
-                    continue
-                spec = SH.lane_leaf_spec(f.shape, ax, mesh, rules)
-                if spec[ax] is None:  # batch replicated: plain scatter
-                    res = jax.lax.with_sharding_constraint(
-                        plain(f, r, ax, src, dst), NamedSharding(mesh, spec))
-                else:
-                    res = sharded(f, r, ax, src, dst, spec)
-                out.append(res)
-            return jax.tree.unflatten(fdef, out)
-        return jax.jit(impl)
 
     # ------------------------------------------------------------- public
     def has_capacity(self, private: bool) -> bool:
@@ -899,41 +671,63 @@ class BatchedHybridEngine(HybridEngine):
     def active_count(self) -> int:
         return self.cloud_lane.active + self.edge_lane.active
 
+    def dispatch_step(self):
+        """Dispatch both lanes' macro-steps WITHOUT syncing (no-op on
+        the ``macro_k=0`` per-token path, which is inherently
+        host-synchronous).  Follow with admission work to overlap it
+        with the in-flight decode, then ``collect_step()``."""
+        if self.macro_k:
+            self.edge_lane.macro_dispatch(self.macro_k)
+            self.cloud_lane.macro_dispatch(self.macro_k)
+
+    def collect_step(self) -> List[Tuple[int, str, GenStats]]:
+        """Sync + replay the in-flight macro-steps (or, with
+        ``macro_k=0``, run one legacy per-token step).  Returns the
+        requests that finished."""
+        if self.macro_k:
+            return (self.edge_lane.macro_collect()
+                    + self.cloud_lane.macro_collect())
+        return self.edge_lane.step() + self.cloud_lane.step()
+
     def step(self) -> List[Tuple[int, str, GenStats]]:
         """Advance both lanes by one macro-step (``macro_k`` tokens per
         occupied row in a single dispatch + single host sync per lane;
         ``macro_k=0`` falls back to the per-token reference path).
         Returns the requests that finished."""
-        if self.macro_k:
-            return (self.edge_lane.macro_step(self.macro_k)
-                    + self.cloud_lane.macro_step(self.macro_k))
-        return self.edge_lane.step() + self.cloud_lane.step()
+        self.dispatch_step()
+        return self.collect_step()
 
 
 class SoloEngine:
     """Single-model greedy decoding (SLM-only / LLM-only baselines)."""
 
-    def __init__(self, lm, params, expert_bank=None,
-                 router: Optional[Router] = None, max_seq: int = 96):
-        self.lm, self.params = lm, params
-        self.bank, self.router = expert_bank, router
-        self.max_seq = max_seq
-        self._decode = jax.jit(
-            lambda p, c, t, lora, g: lm.decode_step(p, c, t, lora, g))
-        # jitted prefill (one retrace per distinct prompt length) — this
-        # was the last remaining eager op-by-op prefill path
-        self._prefill = jax.jit(
-            lambda p, toks, lora, g: lm.prefill(
-                p, {"tokens": toks}, self.max_seq, lora=lora, gates=g))
+    def __init__(self, lm=None, params=None, expert_bank=None,
+                 router: Optional[Router] = None, max_seq: int = 96,
+                 deployment: Optional[ServingDeployment] = None):
+        if deployment is None:
+            deployment = ServingDeployment(lm, params,
+                                           expert_bank=expert_bank,
+                                           max_seq=max_seq)
+        else:
+            _reject_deployment_args(lm=(lm, None), params=(params, None),
+                                    expert_bank=(expert_bank, None),
+                                    max_seq=(max_seq, 96))
+        self.dep = deployment
+        self.lm, self.params = deployment.slm, deployment.slm_params
+        self.bank, self.router = deployment.bank, router
+        self.max_seq = deployment.max_seq
+        self.lora = (deployment.lora
+                     if router is not None and self.bank is not None
+                     else None)
 
     def generate(self, prompt: str, max_new_tokens: int = 16) -> str:
-        gates = lora = None
+        dep = self.dep
+        gates = None
         if self.router is not None and self.bank is not None:
             gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
-            lora = LORA.bank_for_model(self.bank)
         ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
         toks = jnp.asarray([ids], jnp.int32)
-        logits, cache = self._prefill(self.params, toks, lora, gates)
+        logits, cache = dep.slm_prefill(self.params, toks, self.lora, gates)
         out: List[int] = []
         cur = logits[:, 0]
         for _ in range(max_new_tokens):
@@ -941,8 +735,8 @@ class SoloEngine:
             out.append(nxt)
             if nxt == TOK.EOS:
                 break
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray([[nxt]], jnp.int32),
-                                         lora, gates)
+            logits, cache = dep.slm_decode(self.params, cache,
+                                           jnp.asarray([[nxt]], jnp.int32),
+                                           self.lora, gates)
             cur = logits[:, 0]
         return TOK.decode(out)

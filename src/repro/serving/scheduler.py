@@ -23,6 +23,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.serving.deployment import ServingDeployment
 from repro.serving.engine import (BatchedHybridEngine, GenStats,
                                   HybridEngine)
 
@@ -54,6 +55,13 @@ class Scheduler:
         self.engine = engine
         self.queue: List[Request] = []
         self._next = 0
+
+    @classmethod
+    def from_deployment(cls, deployment: ServingDeployment,
+                        **engine_kw) -> "Scheduler":
+        """Build the sequential engine through a ServingDeployment (the
+        placement layer owns params/mesh/compiled entry points)."""
+        return cls(HybridEngine(deployment=deployment, **engine_kw))
 
     def submit(self, prompt: str, max_new_tokens: int = 16,
                greedy: bool = True, seed: Optional[int] = None) -> int:
@@ -87,20 +95,38 @@ class ContinuousBatchScheduler:
     batch, private requests an SLM-only batch; freed batch rows are
     refilled from the queue as sequences finish.
 
-    With the macro-step engine (``macro_k=K``) every ``engine.step()``
-    decodes K tokens per occupied row in ONE jitted, cache-donating
-    dispatch and replays the returned per-step traces into request
-    bookkeeping — so admission happens at K-token macro boundaries: a
-    row that frees mid-macro idles (parked on device, writes dropped)
-    until the next boundary.  That shifts wall-clock admission timing
-    but never any request's tokens/stats (latency draws and sampling
-    keys are counter-based on (rid, step), independent of when a row is
-    admitted).  ``macro_k=0`` restores the per-token cadence."""
+    With the macro-step engine (``macro_k=K``) every boundary decodes K
+    tokens per occupied row in ONE jitted, cache-donating dispatch and
+    replays the returned per-step traces into request bookkeeping — so
+    admission happens at K-token macro boundaries: a row that frees
+    mid-macro idles (parked on device, writes dropped) until the next
+    boundary.  That shifts wall-clock admission timing but never any
+    request's tokens/stats (latency draws and sampling keys are
+    counter-based on (rid, step), independent of when a row is
+    admitted).  ``macro_k=0`` restores the per-token cadence.
+
+    ADMISSION PIPELINING: ``run`` dispatches the in-flight macro-step
+    first (``engine.dispatch_step()``, no host sync), THEN admits the
+    next burst — tokenization, the packed B>1 prefill dispatch, and the
+    row scatter all overlap the decode executing on device — and only
+    then pays the boundary's single host sync (``engine.collect_step()``,
+    the trace fetch).  Admitted rows were parked for the whole in-flight
+    scan, so outputs are bit-identical to unpipelined admission; only
+    wall-clock timing improves.  With ``macro_k=0`` the dispatch phase
+    is empty and the loop degenerates to admit-then-step."""
 
     def __init__(self, engine: BatchedHybridEngine):
         self.engine = engine
         self.queue: List[Request] = []
         self._next = 0
+
+    @classmethod
+    def from_deployment(cls, deployment: ServingDeployment,
+                        **engine_kw) -> "ContinuousBatchScheduler":
+        """Build the continuous-batching engine through a
+        ServingDeployment — engines constructed this way share the
+        deployment's placed params and compiled entry points."""
+        return cls(BatchedHybridEngine(deployment=deployment, **engine_kw))
 
     def submit(self, prompt: str, max_new_tokens: int = 16,
                greedy: bool = True, seed: Optional[int] = None) -> int:
@@ -117,11 +143,15 @@ class ContinuousBatchScheduler:
         admitted_at: Dict[int, float] = {}
         out: List[Response] = []
         while pending or self.engine.active_count():
+            # enqueue this boundary's macro-step(s) before any host-side
+            # admission work — the trace fetch happens in collect_step,
+            # so everything between here and there overlaps the decode
+            self.engine.dispatch_step()
             # fill freed slots as ONE admission burst per macro boundary
             # (FIFO per lane; a full lane skips, a later request bound
             # for the other lane may still be admitted) — all admissions
             # that land in a lane this step share a single packed B>1
-            # prefill
+            # prefill, dispatched while the macro-step is in flight
             if pending:
                 flags = self.engine.add_requests(
                     [(r.prompt, r.max_new_tokens, r.greedy, r.rid, r.seed)
@@ -134,7 +164,7 @@ class ContinuousBatchScheduler:
                     else:
                         still.append(r)
                 pending = still
-            for rid, text, stats in self.engine.step():
+            for rid, text, stats in self.engine.collect_step():
                 now = time.time()
                 out.append(Response(
                     rid, text, stats,

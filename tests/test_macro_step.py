@@ -65,7 +65,7 @@ def _engine(parts, macro_k, latency_kw=JITTERY, flat_fusion=False, **kw):
                               edge_batch_size=2, macro_k=macro_k, **kw)
     if flat_fusion:
         v = slm.cfg.vocab_size
-        eng._fuse_batched = lambda sl, ll, arrived: (
+        eng.dep.fuse_batched = lambda sl, ll, arrived: (
             jnp.full((sl.shape[0], v), 1.0 / v),
             jnp.ones((sl.shape[0],)))
     return eng
@@ -147,11 +147,11 @@ def test_macro_k_mixed_greedy_and_sampled(parts):
 
 
 def _count(eng):
-    """Wrap the compiled macro-step fns + the trace fetch with counters:
-    'macro' counts jitted macro dispatches, 'sync' counts host syncs,
-    'inner' counts Python-level calls into the per-token decode-path
-    jits (must be ZERO once the scan is traced — they only run inside
-    the macro's XLA program)."""
+    """Wrap the deployment's compiled macro-step fns + trace fetch with
+    counters: 'macro' counts jitted macro dispatches, 'sync' counts host
+    syncs, 'inner' counts Python-level calls into the per-token
+    decode-path jits (must be ZERO once the scan is traced — they only
+    run inside the macro's XLA program)."""
     counts = {"macro": 0, "sync": 0, "inner": 0}
 
     def wrap(fn, key):
@@ -159,13 +159,13 @@ def _count(eng):
             counts[key] += 1
             return fn(*a, **k)
         return g
-    eng._macro_cloud = wrap(eng._macro_cloud, "macro")
-    eng._macro_edge = wrap(eng._macro_edge, "macro")
-    eng._fetch_traces = wrap(eng._fetch_traces, "sync")
-    for name in ("_slm_decode", "_llm_decode", "_fuse_batched",
-                 "_softmax_batched", "_argmax_batched", "_sample_batched",
-                 "_lat_batched"):
-        setattr(eng, name, wrap(getattr(eng, name), "inner"))
+    eng.dep.macro_cloud = wrap(eng.dep.macro_cloud, "macro")
+    eng.dep.macro_edge = wrap(eng.dep.macro_edge, "macro")
+    eng.dep.fetch_traces = wrap(eng.dep.fetch_traces, "sync")
+    for name in ("slm_decode", "llm_decode", "fuse_batched",
+                 "softmax_batched", "argmax_batched", "sample_batched",
+                 "lat_batched"):
+        setattr(eng.dep, name, wrap(getattr(eng.dep, name), "inner"))
     return counts
 
 

@@ -244,12 +244,12 @@ def test_batched_sampling_matches_sequential_stream(engine_parts):
     seqe = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
                         latency=LatencyModel(rtt_ms=10, jitter_ms=0),
                         timeout_ms=200.0)
-    seqe._fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
+    seqe.dep.fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
                                           jnp.ones((1,)))
     bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
                               latency=LatencyModel(rtt_ms=10, jitter_ms=0),
                               timeout_ms=200.0, batch_size=4)
-    bat._fuse_batched = lambda sl, ll, arrived: (
+    bat.dep.fuse_batched = lambda sl, ll, arrived: (
         jnp.full((sl.shape[0], v), 1.0 / v), jnp.ones((sl.shape[0],)))
     prompts = [p for p in PARITY_PROMPTS if not bat.detector.detect(p)]
     want = [seqe.generate(p, 6, greedy=False, rid=i)[0]
@@ -317,13 +317,13 @@ def test_scheduler_nongreedy_bitexact(engine_parts):
     seqe = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
                         latency=LatencyModel(rtt_ms=10, jitter_ms=0),
                         timeout_ms=200.0)
-    seqe._fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
+    seqe.dep.fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
                                           jnp.ones((1,)))
     bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
                               latency=LatencyModel(rtt_ms=10, jitter_ms=0),
                               timeout_ms=200.0, batch_size=4,
                               edge_batch_size=2)
-    bat._fuse_batched = lambda sl, ll, arrived: (
+    bat.dep.fuse_batched = lambda sl, ll, arrived: (
         jnp.full((sl.shape[0], v), 1.0 / v), jnp.ones((sl.shape[0],)))
     s1, s2 = Scheduler(seqe), ContinuousBatchScheduler(bat)
     for i, p in enumerate(PARITY_PROMPTS):
@@ -337,7 +337,7 @@ def test_scheduler_nongreedy_bitexact(engine_parts):
 
 def _lane_row(cache, axes_tree, slot):
     """The slot's row of every batch-carrying lane-cache leaf, as numpy
-    (axes_tree: per-leaf batch axis from engine._cache_batch_axes)."""
+    (axes_tree: per-leaf batch axis, deployment.cache_batch_axes)."""
     return [np.asarray(jnp.take(leaf, slot, axis=ab))
             for leaf, ab in zip(jax.tree.leaves(cache),
                                 jax.tree.leaves(axes_tree)) if ab >= 0]
@@ -362,16 +362,16 @@ def test_freed_rows_parked_not_written(engine_parts):
     done = []
     while not any(d[0] == 0 for d in done):
         done += bat.step()
-    snap_s = _lane_row(lane.s_cache, bat._slm_axes, slot)
-    snap_l = _lane_row(lane.l_cache, bat._llm_axes, slot)
+    snap_s = _lane_row(lane.s_cache, bat.dep.slm_axes, slot)
+    snap_l = _lane_row(lane.l_cache, bat.dep.llm_axes, slot)
     assert int(lane.s_cache["pos"][slot]) == FREED_POS
     assert int(lane.l_cache["pos"][slot]) == FREED_POS
     for _ in range(3):                       # rid 1 keeps decoding
         bat.step()
-    for want, cur in zip(snap_s, _lane_row(lane.s_cache, bat._slm_axes,
+    for want, cur in zip(snap_s, _lane_row(lane.s_cache, bat.dep.slm_axes,
                                            slot)):
         np.testing.assert_array_equal(cur, want)
-    for want, cur in zip(snap_l, _lane_row(lane.l_cache, bat._llm_axes,
+    for want, cur in zip(snap_l, _lane_row(lane.l_cache, bat.dep.llm_axes,
                                            slot)):
         np.testing.assert_array_equal(cur, want)
     while bat.active_count():
@@ -406,10 +406,10 @@ def test_freed_rows_parked_ring(gemma_engine_parts):
     while not any(d[0] == 0 for d in done):
         done += bat.step()
     assert int(lane.s_cache["pos"][slot]) == FREED_POS
-    snap = _lane_row(lane.s_cache, bat._slm_axes, slot)
+    snap = _lane_row(lane.s_cache, bat.dep.slm_axes, slot)
     for _ in range(20):                      # past window=16: ring wraps
         bat.step()
-    for want, cur in zip(snap, _lane_row(lane.s_cache, bat._slm_axes,
+    for want, cur in zip(snap, _lane_row(lane.s_cache, bat.dep.slm_axes,
                                          slot)):
         np.testing.assert_array_equal(cur, want)
 
@@ -423,8 +423,8 @@ def test_sampling_keys_differ_across_requests(engine_parts):
     eng = HybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
                        latency=LatencyModel(rtt_ms=10, jitter_ms=0))
     v = slm.cfg.vocab_size
-    eng._fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
-                                         jnp.ones((1,)))
+    eng.dep.fuse = lambda sl, ll, arrived: (jnp.full((1, v), 1.0 / v),
+                                            jnp.ones((1,)))
     outs = {eng.generate("tell me a fun fact", 8, greedy=False, rid=rid)[0]
             for rid in range(4)}
     assert len(outs) > 1

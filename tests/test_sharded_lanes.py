@@ -105,7 +105,7 @@ def _assert_layout(eng):
                     and lane.batch % (sizes["pod"] * sizes["data"]) == 0)
     expect_wide = sizes["model"] > 1        # head_dim=32 always divides
     for lm, cache in ((eng.slm, lane.s_cache), (eng.llm, lane.l_cache)):
-        want = eng.lane_shardings(lm, lane.batch)
+        want = eng.dep.lane_shardings(lm, lane.batch)
         spanned = batch_sharded = wide_sharded = False
         for leaf, sh in zip(jax.tree.leaves(cache), jax.tree.leaves(want)):
             assert leaf.sharding.is_equivalent_to(sh, leaf.ndim), \
