@@ -131,6 +131,8 @@ def run():
 
     out.update(run_macro(dep))
     out["gemma3_tokens_per_s"] = run_windowed()
+    out.update(run_capacity())
+    out.update(run_prefix())
     out["per_device_param_bytes"] = dep.per_device_param_bytes()
     return out
 
@@ -308,6 +310,135 @@ def run_burst(dep) -> float:
     return speedup
 
 
+# ---------------------------------------------------------------- paged
+
+
+def run_capacity(dep=None) -> dict:
+    """Capacity sweep (ISSUE 6): max concurrent rows admissible at a
+    FIXED KV pool byte budget, dense vs paged, mixed request lengths.
+
+    The dense lane spends ``max_seq`` rows of KV per slot whatever the
+    request needs; the paged lane spends ``ceil(alloc_len/page_size)``
+    pages.  With the paged pool capped at the dense engine's exact byte
+    budget (``dense_batch * nb`` pages) short mixed-length requests pack
+    >= 2x more concurrent rows into the same bytes."""
+    dep = dep or _deployment(_micro_pair())
+    dense_batch = 4
+    geo = dep.paged_geometry(dep.slm)
+    pool_pages = dense_batch * geo["nb"]        # same bytes as dense B=4
+    # mixed lengths: mostly one-page rows (prompt + max_new <= 16) with
+    # a two-page long request every 4th — the regime dense padding wastes
+    reqs = [(f"c{i}" + (" plus extra padding" if i % 4 == 0 else ""),
+             4, True, i) for i in range(3 * pool_pages)]
+
+    def cloud_pool_bytes(eng):
+        """KV capacity of the CLOUD lane (the lane under comparison;
+        the edge lane's budget is out of scope for the sweep)."""
+        total = 0
+        for pager in (eng.cloud_lane.pager_s, eng.cloud_lane.pager_l):
+            if pager is None:            # dense: the would-be page count
+                continue
+            total += pager.alloc.num_pages * pager.geo["page_bytes_full"]
+            if pager.local_alloc is not None:
+                total += (pager.local_alloc.num_pages
+                          * pager.geo["page_bytes_local"])
+        if not eng.paged:
+            for lm in (eng.slm, eng.llm):
+                g = dep.paged_geometry(lm)
+                total += eng.cloud_lane.batch * (
+                    g["nb"] * g["page_bytes_full"]
+                    + g["nl"] * g["page_bytes_local"])
+        return total
+
+    def max_concurrency(paged):
+        if paged:
+            eng = BatchedHybridEngine(
+                deployment=dep, batch_size=3 * pool_pages,
+                edge_batch_size=1, paged=True, pool_pages=pool_pages,
+                local_pool_pages=dense_batch * geo["nl"])
+        else:
+            # dense capacity = its lane width at the same byte budget
+            eng = BatchedHybridEngine(deployment=dep,
+                                      batch_size=dense_batch,
+                                      edge_batch_size=1, paged=False)
+        n = 0
+        for r in reqs:
+            if not eng.add_request(*r):
+                break
+            n += 1
+        return n, eng.resident_kv_bytes(), cloud_pool_bytes(eng)
+
+    dense_n, dense_res, dense_pool = max_concurrency(False)
+    paged_n, paged_res, paged_pool = max_concurrency(True)
+    assert paged_pool <= dense_pool, (paged_pool, dense_pool)
+    ratio = paged_n / max(1, dense_n)
+    assert ratio >= 2.0, (
+        f"paged packs only {ratio:.2f}x the dense concurrency "
+        f"({paged_n} vs {dense_n}) at the same pool bytes")
+    C.row("throughput/capacity_dense", dense_n,
+          f"rows@{dense_pool}B pool, resident={dense_res}B")
+    C.row("throughput/capacity_paged", paged_n,
+          f"rows@{paged_pool}B pool, resident={paged_res}B "
+          f"({ratio:.2f}x>=2x)")
+    return {"max_concurrency": {"dense": dense_n, "paged": paged_n,
+                                "ratio": ratio},
+            "resident_kv_bytes": {"dense": dense_res, "paged": paged_res},
+            "kv_pool_bytes": {"dense": dense_pool, "paged": paged_pool}}
+
+
+def run_prefix(dep=None, n: int = 6) -> dict:
+    """Shared-prefix admission: ``n`` requests carrying one preamble
+    must prefill it exactly ONCE per model (counted the PR-4 dispatch-
+    discipline way: wrap the compiled entry point) and COW-share its
+    whole pages across every row's block table."""
+    dep = dep or _deployment(_micro_pair())
+    # >= 1 whole page of tokens, short enough to leave context room for
+    # every request's suffix + decode (longer preambles are refused as
+    # structurally unshareable at max_seq=48)
+    prefix = "you are a helpful assistant. "
+    eng = BatchedHybridEngine(deployment=dep, batch_size=n,
+                              edge_batch_size=1)
+    calls = {"slm": 0, "llm": 0}
+    orig_s, orig_l = dep.slm_build_prefix, dep.llm_build_prefix
+
+    def wrap(tag, fn):
+        def counting(*a, **kw):
+            calls[tag] += 1
+            return fn(*a, **kw)
+        return counting
+
+    dep.slm_build_prefix = wrap("slm", orig_s)
+    dep.llm_build_prefix = wrap("llm", orig_l)
+    try:
+        t0 = time.perf_counter()
+        flags = eng.add_requests([(f"question number {i}", 4, True, i,
+                                   None, prefix) for i in range(n)])
+        dt = time.perf_counter() - t0
+    finally:
+        dep.slm_build_prefix, dep.llm_build_prefix = orig_s, orig_l
+    assert all(flags), flags
+    assert calls == {"slm": 1, "llm": 1}, (
+        f"shared preamble prefilled more than once per model: {calls}")
+    lane = eng.cloud_lane
+    entry = next(iter(lane._prefixes.values()))
+    shared = entry["share_np"]
+    assert shared >= 1
+    # every admitted row forked the SAME preamble pages (refcount n+1:
+    # the registry holds one reference, each row one more)
+    for pid in entry["pids_s"]:
+        assert lane.pager_s.alloc.refcount(pid) == n + 1
+    res = eng.resident_kv_bytes()
+    while eng.active_count():
+        eng.step()
+    C.row("throughput/prefix_admission", dt * 1e6,
+          f"{n} reqs, preamble prefilled once, {shared} COW pages/model, "
+          f"resident={res}B")
+    return {"prefix_admission_seconds": dt,
+            "prefix_shared_pages": shared,
+            "prefix_prefill_calls": dict(calls),
+            "prefix_resident_kv_bytes": res}
+
+
 # ------------------------------------------------------------- windowed
 
 
@@ -388,6 +519,12 @@ def run_smoke(mesh_devices: int = 0, rules: str = "inference"):
            "smoke_macro_parity": True}
     out.update(run_micro_dispatch(batch=4, macro_ks=(4,), max_new=16,
                                   repeats=2))
+    # paged smoke: capacity at fixed pool bytes + COW shared-prefix
+    # admission, on the dispatch-bound micro pair (runs in BOTH CI
+    # matrix entries; max_concurrency / resident_kv_bytes land in the
+    # JSON artifact)
+    out.update(run_capacity())
+    out.update(run_prefix())
     pd = dep.per_device_param_bytes()
     out["per_device_param_bytes"] = pd
     if mesh is not None and dict(mesh.shape).get("model", 1) > 1:
@@ -444,7 +581,14 @@ def run_sharded(mesh_devices: int, pair: str = "2b",
         "sharded lanes diverged from the single-device engine"
 
     lane = eng.cloud_lane
-    want = eng.dep.lane_shardings(eng.slm, lane.batch)
+    if eng.paged:
+        pager = lane.pager_s
+        lp = (pager.local_alloc.num_pages
+              if pager.local_alloc is not None else 0)
+        want = eng.dep.paged_lane_shardings(eng.slm, lane.batch,
+                                            pager.alloc.num_pages, lp)
+    else:
+        want = eng.dep.lane_shardings(eng.slm, lane.batch)
     for leaf, sh in zip(jax.tree.leaves(lane.s_cache),
                         jax.tree.leaves(want)):
         assert leaf.sharding.is_equivalent_to(sh, leaf.ndim), \

@@ -1,0 +1,137 @@
+"""Paged decode attention Pallas TPU kernel: one-token GQA decode over a
+paged KV pool with per-row block tables (vLLM-style layout, the TPU
+target of the jnp paged-decode branch in ``repro/models/attention.py``).
+
+Grid: (batch, n_pages) — the page axis is the innermost (sequential)
+reduction: each step DMAs ONE page of K and V straight out of the pool
+via scalar-prefetched block tables (``pltpu.PrefetchScalarGridSpec``:
+the table and per-row positions arrive before the kernel body runs, so
+the BlockSpec index maps can chase ``table[b, j]`` to place the DMA —
+the gather never materializes a dense per-row cache).  Online softmax
+statistics (running max / denominator / accumulator) live in VMEM
+scratch and the output row is emitted on the last page.
+
+Ring windows: sliding-window layers store only ``window`` slots on a
+bounded page ring.  With ``window > 0`` the table is the ring's local
+block table and each gathered slot is mapped back to the absolute
+position it currently holds (``pos - (pos - slot) % window`` — the same
+addressing invariant as ``ring_kv_positions``); slots past the window
+extent on the last ring page are masked out.
+
+Unmapped table entries hold a sentinel far past the pool; the index map
+clamps them onto the last page and the position mask zeroes whatever
+garbage was fetched (NEG_INF score -> exp underflows to exact 0.0), so
+a partially-filled row reduces over exactly its live slots.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _paged_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, ps: int, nb: int, group: int,
+                  window: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale      # (H, hd)
+    k = k_ref[0].astype(jnp.float32)              # (ps, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    h, hd = q.shape
+    kvh = k.shape[1]
+    qg = q.reshape(kvh, group, hd)
+
+    # (KV, G, hd) x (ps, KV, hd) -> (KV, G, ps), batched over KV heads
+    s = jax.lax.dot_general(
+        qg, k, dimension_numbers=(((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32).reshape(h, ps)
+
+    pos = pos_ref[b]
+    slot = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    if window:
+        # ring slot i holds absolute position pos - ((pos - i) % window)
+        kv_pos = pos - jnp.mod(pos - slot, window)
+        mask = (kv_pos >= 0) & (kv_pos <= pos) & (slot < window)
+    else:
+        mask = slot <= pos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (H, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    # (KV, G, ps) x (ps, KV, hd) -> (KV, G, hd), batched over KV heads
+    pv = jax.lax.dot_general(
+        p.reshape(kvh, group, ps), v,
+        dimension_numbers=(((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32).reshape(h, hd)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, pool_k, pool_v, table, pos, *,
+                           window: int = 0, interpret: bool = False):
+    """One-token decode against a paged KV pool.
+
+    q: (B, H, hd); pool_k/pool_v: (P, page_size, KV, hd);
+    table: (B, n_pages) int32 page ids (the row's block table, or its
+    ring-local table when ``window > 0``); pos: (B,) int32 per-row
+    absolute positions.  Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    n_pool, ps, kvh, _ = pool_k.shape
+    nb = table.shape[1]
+    group = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    if window:
+        assert nb * ps >= window, (nb, ps, window)
+
+    kernel = functools.partial(_paged_kernel, ps=ps, nb=nb, group=group,
+                               window=window, scale=scale)
+
+    def page_map(b_, j, table_ref, pos_ref):
+        # chase the block table; sentinel entries clamp onto the last
+        # page (fetched garbage is masked out by position in the body)
+        return (jnp.minimum(table_ref[b_, j], n_pool - 1), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda b_, j, t, p: (b_, 0, 0)),
+            pl.BlockSpec((1, ps, kvh, hd), page_map),
+            pl.BlockSpec((1, ps, kvh, hd), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda b_, j, t, p: (b_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, hd), jnp.float32),     # acc
+            pltpu.VMEM((h, 1), jnp.float32),      # running max m
+            pltpu.VMEM((h, 1), jnp.float32),      # denominator l
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pos.astype(jnp.int32), q, pool_k, pool_v)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the paged decode-attention kernel.
+
+On CPU (this container) ``interpret=True`` executes the kernel body with
+the Pallas interpreter for correctness; on TPU the same call lowers to a
+Mosaic kernel whose block-table-driven index maps DMA pages straight
+out of the HBM pool.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_decode(q, pool_k, pool_v, table, pos, window: int = 0):
+    """Paged one-token decode.  q: (B, H, hd); pools (P, ps, KV, hd);
+    table (B, n_pages) int32; pos (B,) int32 -> (B, H, hd)."""
+    return paged_decode_attention(q, pool_k, pool_v, table, pos,
+                                  window=window, interpret=_on_cpu())

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Mirrors the paged decode branch of ``repro/models/attention.py``:
+gather the row's mapped pages back into a dense per-row view (clamping
+sentinel page ids onto garbage that the mask then zeroes) and run naive
+masked softmax attention over the gathered slots.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def paged_decode_ref(q, pool_k, pool_v, table, pos, *, window: int = 0):
+    """q: (B,H,hd); pool_k/v: (P,ps,KV,hd); table: (B,nb); pos: (B,)."""
+    b, h, hd = q.shape
+    n_pool, ps, kvh, _ = pool_k.shape
+    nb = table.shape[1]
+    group = h // kvh
+    n_slots = window if window else nb * ps
+
+    j = jnp.arange(n_slots)
+    pid = jnp.take(table, j // ps, axis=1)                     # (B, n)
+    flat = jnp.clip(pid, 0, n_pool - 1) * ps + (j % ps)[None, :]
+    kf = pool_k.reshape((n_pool * ps,) + pool_k.shape[2:])
+    vf = pool_v.reshape((n_pool * ps,) + pool_v.shape[2:])
+    k = jnp.take(kf, flat, axis=0, mode="clip")                # (B,n,KV,hd)
+    v = jnp.take(vf, flat, axis=0, mode="clip")
+
+    if window:
+        kv_pos = pos[:, None] - jnp.mod(pos[:, None] - j[None, :], window)
+        mask = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    else:
+        mask = j[None, :] <= pos[:, None]
+
+    kk = jnp.repeat(k.astype(jnp.float32), group, axis=2)      # (B,n,H,hd)
+    vv = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    scores = jnp.einsum("bhd,bnhd->bhn", q.astype(jnp.float32),
+                        kk) / math.sqrt(hd)
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhn,bnhd->bhd", p, vv).astype(q.dtype)

@@ -58,6 +58,15 @@ def main():
                     help="tokens decoded per jitted macro-step dispatch "
                          "(1 host sync per K tokens; 0 = legacy "
                          "per-token step path)")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense stacked lane caches (the paged=False "
+                         "bit-exact oracle); default serves paged KV "
+                         "with COW shared-prefix admission")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (must divide max_seq)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool capacity per lane model (0 = size "
+                         "for the dense worst case, batch * max_seq)")
     ap.add_argument("--sample", action="store_true",
                     help="non-greedy decoding (per-request PRNG keys)")
     ap.add_argument("--sample-seed", type=int, default=0,
@@ -102,14 +111,20 @@ def main():
             slm, sp, llm, lp, mlp,
             latency=LatencyModel(rtt_ms=args.rtt_ms),
             timeout_ms=args.timeout_ms, sample_seed=args.sample_seed,
-            mesh=mesh, rules=args.rules)
+            mesh=mesh, rules=args.rules, page_size=args.page_size)
         if mesh is not None:
             pd = dep.per_device_param_bytes()
             print(f"per-device param bytes: {pd['total_bytes']} "
                   f"(replicated would hold {pd['replicated_bytes']})")
         if args.batch > 1:
-            sched = ContinuousBatchScheduler.from_deployment(
-                dep, batch_size=args.batch, macro_k=args.macro_k)
+            kw = dict(batch_size=args.batch, macro_k=args.macro_k,
+                      paged=not args.dense)
+            if args.pool_pages:
+                kw["pool_pages"] = args.pool_pages
+            sched = ContinuousBatchScheduler.from_deployment(dep, **kw)
+            eng = sched.engine
+            print(f"lane KV: {'dense' if args.dense else 'paged'}, "
+                  f"pool capacity {eng.kv_pool_bytes()}B")
         else:
             sched = Scheduler.from_deployment(dep)
         for prompt in [

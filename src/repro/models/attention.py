@@ -162,6 +162,58 @@ def rowwise_decode_attention(q, cache_k, cache_v, pos_b, window: int = 0):
     return _sdpa(qg, cache_k, cache_v, mask, scale).reshape(b, 1, h, hd)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV layout (serving/paging.py owns the host-side allocator)
+# ---------------------------------------------------------------------------
+#
+# A paged lane cache replaces each (B, S, KV, hd) leaf with a pool
+# (P, page_size, KV, hd) plus a per-row block table (B, n_pages): the
+# value at row position p lives at page table[b, p // page_size],
+# offset p % page_size.  Decode gathers each row's mapped pages back
+# into the dense rowwise layout and runs the IDENTICAL attention math,
+# so paged decode is bit-for-bit the dense path: extra gathered slots
+# are masked, masked scores hit NEG_INF, and exp underflows to exact
+# 0.0 in f32 — adding exact zeros never perturbs the reduction.
+# Unmapped table entries hold a sentinel far past the pool so writes
+# drop (mode="drop") and gathers clamp onto masked garbage.
+
+
+def gather_pages(pool_flat, table, n_slots: int, page_size: int):
+    """Dense per-row view of a paged pool.
+
+    pool_flat: (P*page_size, ...) slot-flattened pool; table: (B,
+    n_pages) int32.  Returns (B, n_slots, ...): row b, slot j =
+    pool[table[b, j//page_size], j%page_size].  Sentinel/garbage pages
+    clamp into range; callers mask those slots out."""
+    n_pool = pool_flat.shape[0] // page_size
+    j = jnp.arange(n_slots)
+    pid = jnp.take(table, j // page_size, axis=1)            # (B, n)
+    flat = jnp.clip(pid, 0, n_pool - 1) * page_size \
+        + (j % page_size)[None, :]
+    return jnp.take(pool_flat, flat, axis=0, mode="clip")
+
+
+def scatter_page_token(pool, table, row_pos, slot, token_kv,
+                       slot_limit: int):
+    """Write one decode token per row into its mapped page.
+
+    pool: (P, page_size, ...); table: (B, n_pages); slot: (B,) in-row
+    slot index (absolute position for full-length leaves, pos % window
+    for ring leaves); token_kv: (B, ...).  Parked rows (row_pos >=
+    FREED_POS), slots past ``slot_limit`` (mirrors the dense scatter
+    dropping row_pos >= max_seq), and unmapped NO_PAGE entries all
+    produce an out-of-pool flat index, so the write drops instead of
+    corrupting a live page."""
+    p_pages, ps = pool.shape[0], pool.shape[1]
+    page_ix = jnp.minimum(slot // ps, table.shape[1] - 1)
+    pid = jnp.take_along_axis(table, page_ix[:, None], axis=1)[:, 0]
+    ok = (row_pos < FREED_POS) & (slot < slot_limit)
+    flat = jnp.where(ok, pid * ps + slot % ps, p_pages * ps)
+    flat_pool = pool.reshape((p_pages * ps,) + pool.shape[2:])
+    out = flat_pool.at[flat].set(token_kv, mode="drop")
+    return out.reshape(pool.shape)
+
+
 def ring_kv_positions(pos, window: int) -> jax.Array:
     """Absolute position held by each slot of a ring cache at depth
     ``pos``: slot i holds p = pos - ((pos - i) mod window), i.e. the
@@ -222,11 +274,19 @@ def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
                     is_global: bool = True,
                     cache: Optional[Dict[str, jax.Array]] = None,
                     mode: str = "train",
-                    rope_enabled: bool = True) -> Tuple[jax.Array, Optional[Dict]]:
+                    rope_enabled: bool = True,
+                    pages: Optional[Dict[str, jax.Array]] = None,
+                    ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full attention sub-layer.  Returns (output, new_cache_or_None).
 
     mode: "train" (no cache) | "prefill" (build cache) | "decode" (use+update).
     ``is_global``: for attn_type=="mixed"/"sliding", False -> windowed.
+    ``pages``: paged decode — cache leaves are pool slices (P, page_size,
+    KV, hd) and ``pages`` carries the block tables ({"block": (B, nb)}
+    plus {"local": (B, nl)} when ring/window leaves are paged).
+    In prefill mode a ``cache`` holding {"k", "v", "hpos"} is a shared
+    prefix HISTORY: queries attend over history + fresh KV (suffix
+    prefill for COW prefix sharing) and only the fresh KV is returned.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -246,7 +306,7 @@ def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
     # slot of the batch sits at its own sequence depth
     row_pos = None
     if mode == "decode" and getattr(positions, "ndim", 0) == 1 \
-            and positions.shape[0] == b and b > 1:
+            and positions.shape[0] == b and (b > 1 or pages is not None):
         row_pos = positions
 
     if rope_enabled:
@@ -266,8 +326,49 @@ def attention_block(cfg, p, x, *, positions, lora=None, gates=None,
         new_cache = None
     elif mode == "prefill":
         pos1d = positions if positions.ndim == 1 else positions[0]
-        out = chunked_causal_attention(q, k, v, pos1d, pos1d, window)
+        if cache is not None and "hpos" in cache:
+            # suffix prefill against a shared-prefix history: the
+            # history KV was computed once (B=1) by the prefix prefill;
+            # causal masking makes those values independent of any
+            # suffix, so attending suffix queries over [history; fresh]
+            # with explicit absolute positions reproduces exactly what
+            # a full-prompt prefill would have computed at these rows.
+            hk = jnp.broadcast_to(cache["k"], (b,) + cache["k"].shape[1:])
+            hv = jnp.broadcast_to(cache["v"], (b,) + cache["v"].shape[1:])
+            kv_pos = jnp.concatenate([cache["hpos"], pos1d])
+            out = chunked_causal_attention(
+                q, jnp.concatenate([hk, k], axis=1),
+                jnp.concatenate([hv, v], axis=1),
+                pos1d, kv_pos, window, chunk=max(1024, s))
+        else:
+            out = chunked_causal_attention(q, k, v, pos1d, pos1d, window)
         new_cache = {"k": k, "v": v}
+    elif mode == "decode" and pages is not None:
+        # paged decode: cache leaves are pool slices (P, page_size, KV,
+        # hd).  Scatter the new token through the block table, gather
+        # the row's mapped pages back into the dense rowwise layout,
+        # and run the IDENTICAL rowwise attention — bit-for-bit the
+        # dense path (extra slots are masked to exact zero weight).
+        rp = row_pos if row_pos is not None else jnp.reshape(positions, (b,))
+        ps = cache["k"].shape[1]
+        local = pages.get("local")
+        if window and local is not None:
+            table, slot, n_slots = local, jnp.mod(rp, window), window
+        else:
+            table, slot = pages["block"], rp
+            n_slots = pages["block"].shape[1] * ps
+        ck = scatter_page_token(cache["k"], table, rp, slot, k[:, 0],
+                                n_slots)
+        cv = scatter_page_token(cache["v"], table, rp, slot, v[:, 0],
+                                n_slots)
+        flat = lambda a: a.reshape((a.shape[0] * ps,) + a.shape[2:])
+        gk = gather_pages(flat(ck), table, n_slots, ps)
+        gv = gather_pages(flat(cv), table, n_slots, ps)
+        if window and local is not None:
+            out = rowwise_ring_decode_attention(q, gk, gv, rp, window)
+        else:
+            out = rowwise_decode_attention(q, gk, gv, rp, window)
+        new_cache = {"k": ck, "v": cv}
     elif mode == "decode" and row_pos is not None:
         if window and cache["k"].shape[1] == window:
             # ring cache + per-row positions: row b writes its new KV

@@ -60,6 +60,20 @@ def _tree_index(tree, idx):
     return jax.tree.map(lambda t: t[idx] if t is not None else None, tree)
 
 
+def _to_pages(leaf, a, ps: int):
+    """Split axis ``a`` (length S) into (ceil(S/ps), ps), zero-padding
+    the remainder — the reshape between dense sequence layout and
+    per-row page rows."""
+    s = leaf.shape[a]
+    n = -(-s // ps)
+    pad = n * ps - s
+    if pad:
+        spec = [(0, 0)] * leaf.ndim
+        spec[a] = (0, pad)
+        leaf = jnp.pad(leaf, spec)
+    return leaf.reshape(leaf.shape[:a] + (n, ps) + leaf.shape[a + 1:])
+
+
 # ===========================================================================
 # Layer bodies
 # ===========================================================================
@@ -79,10 +93,12 @@ def dense_layer_spec(cfg, use_moe: bool = False, d_ff: Optional[int] = None):
 
 
 def dense_layer(cfg, p, x, *, positions, mode, cache, lora, gates,
-                is_global=True, absorb=False):
+                is_global=True, absorb=False, pages=None):
     """Pre-norm [attn|mla] + [mlp|moe].  Returns (x, new_cache, aux)."""
     h = L.norm(cfg, p["ln1"], x)
     if cfg.use_mla:
+        if pages is not None:
+            raise NotImplementedError("paged decode: GQA layers only")
         a, new_cache = MLA.mla_block(cfg, p["attn"], h, positions=positions,
                                      lora=lora, gates=gates, cache=cache,
                                      mode=mode, absorb=absorb)
@@ -90,7 +106,8 @@ def dense_layer(cfg, p, x, *, positions, mode, cache, lora, gates,
         a, new_cache = ATT.attention_block(cfg, p["attn"], h,
                                            positions=positions, lora=lora,
                                            gates=gates, is_global=is_global,
-                                           cache=cache, mode=mode)
+                                           cache=cache, mode=mode,
+                                           pages=pages)
     x = x + a
     h = L.norm(cfg, p["ln2"], x)
     aux = jnp.zeros((), jnp.float32)
@@ -452,8 +469,13 @@ class LM:
 
     # --------------------------------------------------------- stack run
     def _run_stack(self, params, x, *, positions, mode, cache, lora, gates,
-                   enc=None, absorb=False):
-        """Dispatch to the family stack.  Returns (x, new_cache, aux)."""
+                   enc=None, absorb=False, pages=None):
+        """Dispatch to the family stack.  Returns (x, new_cache, aux).
+
+        ``pages``: block tables for paged decode (cache leaves are page
+        pools).  In prefill mode a non-None ``cache`` is a shared-prefix
+        attention HISTORY ({"k","v","hpos"} per stack kind) and the
+        returned cache covers only the fresh suffix positions."""
         cfg = self.cfg
         kind, n_groups, g, tail = self._layout()
         remat = self.remat and mode == "train"
@@ -486,7 +508,8 @@ class LM:
             def body(xx, p_i, c_i, l_i):
                 return wrap(lambda a, b, c, d: dense_layer(
                     cfg, b, a, positions=positions, mode=mode, cache=c,
-                    lora=d, gates=gates, is_global=is_global, absorb=absorb)
+                    lora=d, gates=gates, is_global=is_global, absorb=absorb,
+                    pages=pages)
                 )(xx, p_i, c_i, l_i)
             return body
 
@@ -550,7 +573,7 @@ class LM:
                 else None  # per-group global layers for gemma3
 
             inner_c = special_c = tail_c = None
-            if mode == "decode":
+            if mode == "decode" or (mode == "prefill" and cache is not None):
                 inner_c = cache["inner"]
                 tail_c = cache["tail"]
                 special_c = cache["attn"] if is_hybrid else cache["global"]
@@ -611,7 +634,12 @@ class LM:
             return x, new_cache, aux_total
 
         # plain dense
-        c_xs = {"k": cache["k"], "v": cache["v"]} if mode == "decode" else None
+        c_xs = None
+        if mode == "decode":
+            c_xs = {"k": cache["k"], "v": cache["v"]}
+        elif mode == "prefill" and cache is not None:
+            # shared-prefix history threaded per layer as scan xs
+            c_xs = {"k": cache["k"], "v": cache["v"], "hpos": cache["hpos"]}
         x, new_c, aux = scan_layers(dense_body(), x, params["layers"], c_xs,
                                     lget.get("layers"), cfg.num_layers)
         new_cache = dict(new_c) if (mode in ("prefill", "decode")
@@ -751,6 +779,174 @@ class LM:
                 out[k] = v
         return out
 
+    # ------------------------------------------------- paged KV layout
+    # Every GQA cache leaf ends in (..., B, S, KV, hd); the helpers
+    # below rely on that trailing layout (seq at -3, batch at -4), so
+    # no per-leaf axis metadata is needed on the model side.
+
+    def cache_batch_axes_tree(self, max_seq: int):
+        """Per-leaf batch-axis index of the lane cache (-1 batch-free),
+        discovered structurally: the axis whose extent follows batch."""
+        a = jax.eval_shape(lambda: self.init_cache(2, max_seq))
+        b = jax.eval_shape(lambda: self.init_cache(3, max_seq))
+
+        def ax(x, y):
+            for i, (m, n) in enumerate(zip(x.shape, y.shape)):
+                if m != n:
+                    return i
+            return -1
+
+        return jax.tree.map(ax, a, b)
+
+    def cache_to_page_rows(self, cache, page_size: int, max_seq: int):
+        """Dense lane cache -> per-row page rows: each KV leaf
+        (..., B, S, KV, hd) becomes (..., B, ceil(S/ps), ps, KV, hd);
+        "pos" and other leaves pass through.  Pure reshape — the dense
+        prefill stays the source of truth (bit-identity with the dense
+        oracle) and this is the layout step before the pool scatter."""
+        axes = self.cache_batch_axes_tree(max_seq)
+
+        def f(leaf, ab):
+            if ab < 0 or getattr(leaf, "ndim", 0) < 3:
+                return leaf
+            return _to_pages(leaf, ab + 1, page_size)
+
+        return jax.tree.map(f, cache, axes)
+
+    def _ring_local_len(self, max_seq: int) -> int:
+        """Window extent of ring/local cache leaves (0 when every leaf
+        is full-length)."""
+        kind, *_ = self._layout()
+        if kind == "grouped" and self.ring_cache and \
+                self.cfg.attn_type in ("sliding", "mixed"):
+            w = min(max_seq, self.cfg.sliding_window)
+            if w < max_seq:
+                return w
+        return 0
+
+    def build_prefix(self, params, tokens, lora=None, gates=None):
+        """Prefill a shared preamble ONCE (B=1) -> attention history.
+
+        tokens: (1, pre_len).  Returns a tree shaped like the prefill
+        cache whose KV leaves stay LINEAR over all pre_len positions,
+        each stack kind annotated with "hpos" (per-layer absolute slot
+        positions) — the ``history`` argument of ``prefill_suffix``.
+        Causality makes these values bitwise what a full-prompt prefill
+        computes at the same positions, independent of any suffix."""
+        x = self._embed_inputs(params, {"tokens": tokens}, "prefill")
+        pre = x.shape[1]
+        x, pc, _ = self._run_stack(params, x, positions=jnp.arange(pre),
+                                   mode="prefill", cache=None, lora=lora,
+                                   gates=gates)
+
+        def annotate(sub):
+            lead = sub["k"].shape[:-4]
+            return dict(sub, hpos=jnp.broadcast_to(jnp.arange(pre),
+                                                   lead + (pre,)))
+
+        if "k" in pc:
+            return annotate(pc)
+        return {k: annotate(v) for k, v in pc.items()}
+
+    def prefill_suffix(self, params, batch_d, lengths, history,
+                       pre_len: int, lora=None, gates=None):
+        """Packed ragged-batch prefill of prompt SUFFIXES sharing one
+        prefix history (``build_prefix`` output).
+
+        batch_d["tokens"]: (B, s_pad) right-padded suffixes; lengths:
+        (B,) valid suffix token counts.  Queries run at absolute
+        positions pre_len + [0, s_pad) against [history; fresh KV], so
+        row b's last-token logits and its suffix KV match a full-prompt
+        packed prefill bitwise.  Returns (last_logits (B,1,V),
+        suffix_cache) — suffix_cache covers only the fresh positions."""
+        cfg = self.cfg
+        if cfg.family in ("audio", "vlm", "ssm", "hybrid"):
+            raise NotImplementedError(
+                f"suffix prefill: attention families only (got {cfg.family})")
+        x = self._embed_inputs(params, batch_d, "prefill")
+        s = x.shape[1]
+        positions = pre_len + jnp.arange(s)
+        x, pc, _ = self._run_stack(params, x, positions=positions,
+                                   mode="prefill", cache=history, lora=lora,
+                                   gates=gates)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        idx = jnp.clip(lengths - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)
+        last = L.norm(cfg, params["ln_f"], last)
+        return L.unembed(cfg, params["embed"], last), pc
+
+    def prefix_page_rows(self, history, share_len: int, page_size: int,
+                         max_seq: int):
+        """Shared COW page content: the first ``share_len`` (page-
+        aligned) positions of each full-length history leaf as
+        (lead..., n_shared, ps, KV, hd), batch squeezed — written to
+        the pool once and block-mapped into every sharing row.  Ring/
+        local leaves are never shared (each row's ring depends on its
+        own total depth) and come back with zero pages."""
+        local_len = self._ring_local_len(max_seq)
+
+        def f(h, is_local):
+            hh = h[..., 0, :share_len, :, :]
+            if is_local:
+                return jnp.zeros(hh.shape[:-3] + (0, page_size)
+                                 + hh.shape[-2:], h.dtype)
+            return _to_pages(hh, hh.ndim - 3, page_size)
+
+        if "k" in history:
+            return {k: f(history[k], False) for k in ("k", "v")}
+        return {kn: {k: f(history[kn][k],
+                          kn in ("inner", "tail") and local_len > 0)
+                     for k in ("k", "v")}
+                for kn in history}
+
+    def suffix_page_rows(self, history, suffix_cache, lengths,
+                         pre_len: int, share_len: int, page_size: int,
+                         max_seq: int):
+        """Per-row PRIVATE page content after a suffix prefill.
+
+        Full-length leaves: pages covering absolute positions
+        [share_len, pre_len + s_pad) — the re-materialized partial tail
+        of the prefix plus the fresh suffix (share_len is page-aligned,
+        so these pages start exactly after the shared COW pages and
+        never alias them).  Ring/local leaves: each row's window ring
+        at its own total depth, the same ``ring_kv_positions`` gather
+        as the dense ``_pad_cache`` placement.  Returns a tree shaped
+        like the cache kinds plus "pos" = pre_len + lengths."""
+        local_len = self._ring_local_len(max_seq)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        full_pos = pre_len + lengths
+
+        def full_pages(h, sfx):
+            rem = h[..., share_len:, :, :]
+            rem = jnp.broadcast_to(rem, sfx.shape[:-3] + rem.shape[-3:])
+            cat = jnp.concatenate([rem, sfx], axis=-3)
+            return _to_pages(cat, cat.ndim - 3, page_size)
+
+        def local_pages(h, sfx):
+            hh = jnp.broadcast_to(h, sfx.shape[:-3] + h.shape[-3:])
+            src = jnp.concatenate([hh, sfx], axis=-3)
+            p = ATT.ring_kv_positions(full_pos - 1, local_len)   # (B, W)
+            idx = jnp.clip(p, 0, src.shape[-3] - 1)
+            shape = [1] * src.ndim
+            shape[-4] = idx.shape[0]
+            shape[-3] = local_len
+            ring = jnp.take_along_axis(src, idx.reshape(shape),
+                                       axis=src.ndim - 3)
+            return _to_pages(ring, ring.ndim - 3, page_size)
+
+        def kind_pages(hsub, ssub, is_local):
+            fn = local_pages if is_local else full_pages
+            return {k: fn(hsub[k], ssub[k]) for k in ("k", "v")}
+
+        if "k" in suffix_cache:
+            out = kind_pages(history, suffix_cache, False)
+        else:
+            out = {kn: kind_pages(history[kn], suffix_cache[kn],
+                                  kn in ("inner", "tail") and local_len > 0)
+                   for kn in suffix_cache}
+        out["pos"] = full_pos
+        return out
+
     def decode_step(self, params, cache, tokens, lora=None, gates=None,
                     absorb=False):
         """One-token decode.  tokens: (B,1).  Returns (logits, new_cache).
@@ -768,9 +964,16 @@ class LM:
         x = L.embed(cfg, params["embed"], tokens)
         if cfg.family == "audio":
             x = x + sinusoidal_at(pos, cfg.d_model, x.dtype)[None, None, :]
+        pages = None
+        if "block" in cache:
+            # paged lane cache: KV leaves are page pools, "block"/"local"
+            # are the per-row block tables (serving/paging.py)
+            pages = {"block": cache["block"]}
+            if "local" in cache:
+                pages["local"] = cache["local"]
         x, nc, _ = self._run_stack(params, x, positions=pos, mode="decode",
                                    cache=cache, lora=lora, gates=gates,
-                                   absorb=absorb)
+                                   absorb=absorb, pages=pages)
         x = L.norm(cfg, params["ln_f"], x)
         logits = L.unembed(cfg, params["embed"], x)
         new_cache = dict(nc) if nc is not None else {}

@@ -46,6 +46,7 @@ from repro.data import tokenizer as TOK
 from repro.kernels.logit_fusion import ops as OPS
 from repro.launch import sharding as SH
 from repro.models import attention as ATT
+from repro.serving import paging as PAG
 from repro.serving.latency import LatencyModel
 
 
@@ -92,8 +93,16 @@ class ServingDeployment:
                  latency: Optional[LatencyModel] = None,
                  timeout_ms: float = 200.0, max_seq: int = 96,
                  sample_seed: int = 0, mesh: Optional[Mesh] = None,
-                 rules="inference", block_b: int = 4):
+                 rules="inference", block_b: int = 4,
+                 page_size: int = 16):
         assert slm is not None, "a deployment needs at least one model"
+        # paged lanes gather exactly table_width * page_size slots back
+        # into the dense rowwise layout; requiring page-aligned max_seq
+        # makes that extent EQUAL to the dense cache's, so the paged
+        # attention reduction is the bitwise-same computation
+        assert max_seq % page_size == 0, \
+            f"max_seq={max_seq} must be a multiple of page_size={page_size}"
+        self.page_size = page_size
         self.slm, self.llm = slm, llm
         self.bank = expert_bank
         self.latency = latency or LatencyModel()
@@ -125,6 +134,16 @@ class ServingDeployment:
         # ---- lane-cache layout (structural batch-axis discovery)
         self.slm_axes = cache_batch_axes(slm, max_seq)
         self.llm_axes = cache_batch_axes(llm, max_seq) if llm else None
+        # paged lane layout: pool leaves keep the dense leaf's batch-
+        # axis index (now the page axis, sharded over ("pod","data")
+        # with KV width over "model" by the same lane_leaf_spec rules);
+        # block tables and per-row pos are replicated.  Attention (GQA)
+        # cache layouts only.
+        self.slm_paged_axes = (self._paged_axes(slm, self.slm_axes)
+                               if self._pageable(slm) else None)
+        self.llm_paged_axes = (self._paged_axes(llm, self.llm_axes)
+                               if llm is not None and self._pageable(llm)
+                               else None)
 
         # ---- compiled entry points (shared by every engine built on
         # this deployment).  The macro-step reads the fusion/latency/
@@ -154,11 +173,27 @@ class ServingDeployment:
             4, psh_s, out=(rep, None) if mesh is not None else None)
         self.slm_decode = jit(
             lambda p, c, t, lora, g: self._lane_out(
-                slm.decode_step(p, c, t, lora, g), self.slm_axes),
+                slm.decode_step(p, c, t, lora, g),
+                self._axes_like(c, "slm")),
             4, psh_s, out=(rep, None) if mesh is not None else None)
         self.insert_slm = self._make_insert(self.slm_axes)
         self.insert_row = jax.jit(
             lambda full, rows, src, dst: full.at[dst].set(rows[src]))
+        if self._pageable(slm):
+            self.slm_page_rows = jax.jit(
+                lambda c: slm.cache_to_page_rows(c, page_size, max_seq))
+            self.insert_slm_paged = self._make_insert_paged(slm)
+            self.insert_slm_prefix = self._make_insert_prefix(slm)
+            self.slm_build_prefix = jit(
+                lambda p, toks, lora, g: slm.build_prefix(
+                    p, toks, lora=lora, gates=g),
+                3, psh_s)
+            self.slm_prefill_suffix = jit(
+                lambda p, toks, lens, hist, lora, g, pre, share:
+                    self._suffix_out(slm, p, toks, lens, hist, lora, g,
+                                     pre, share),
+                5, psh_s, static_argnums=(6, 7))
+        self.free_paged_rows = jax.jit(self._free_paged_rows_impl)
         if llm is not None:
             self.llm_prefill = jit(
                 lambda p, toks: llm.prefill(p, {"tokens": toks}, max_seq),
@@ -170,9 +205,22 @@ class ServingDeployment:
                 2, psh_l, out=(rep, None) if mesh is not None else None)
             self.llm_decode = jit(
                 lambda p, c, t: self._lane_out(
-                    llm.decode_step(p, c, t), self.llm_axes),
+                    llm.decode_step(p, c, t), self._axes_like(c, "llm")),
                 2, psh_l, out=(rep, None) if mesh is not None else None)
             self.insert_llm = self._make_insert(self.llm_axes)
+            if self._pageable(llm):
+                self.llm_page_rows = jax.jit(
+                    lambda c: llm.cache_to_page_rows(c, page_size,
+                                                     max_seq))
+                self.insert_llm_paged = self._make_insert_paged(llm)
+                self.insert_llm_prefix = self._make_insert_prefix(llm)
+                self.llm_build_prefix = jit(
+                    lambda p, toks: llm.build_prefix(p, toks), 1, psh_l)
+                self.llm_prefill_suffix = jit(
+                    lambda p, toks, lens, hist, pre, share:
+                        self._suffix_out(llm, p, toks, lens, hist, None,
+                                         None, pre, share),
+                    3, psh_l, static_argnums=(4, 5))
 
         if alignment_mlp is not None:
             self.fuse = jax.jit(
@@ -371,10 +419,11 @@ class ServingDeployment:
                 if dep.mesh is None:
                     return carry
                 s_c, l_c, sl_c, ll_c, st, dn = carry
-                s_c = dep.constrain_lane(s_c, dep.slm_axes)
+                s_c = dep.constrain_lane(s_c, dep._axes_like(s_c, "slm"))
                 sl_c = dep.replicated(sl_c)
                 if use_cloud:
-                    l_c = dep.constrain_lane(l_c, dep.llm_axes)
+                    l_c = dep.constrain_lane(l_c,
+                                             dep._axes_like(l_c, "llm"))
                     ll_c = dep.replicated(ll_c)
                 return (s_c, l_c, sl_c, ll_c, st, dn)
 
@@ -470,4 +519,214 @@ class ServingDeployment:
                     res = sharded(f, r, ax, src, dst, spec)
                 out.append(res)
             return jax.tree.unflatten(fdef, out)
+        return jax.jit(impl)
+
+    # ------------------------------------------------------ paged layout
+    # Paged lane caches keep the dense leaf tree with each (batch, seq)
+    # prefix rewritten to (num_pages, page_size) plus replicated int32
+    # "block" (B, nb) / "local" (B, nl) tables and per-row "pos".  The
+    # pool's page axis sits at the dense batch-axis index, so the
+    # launch/sharding lane_leaf_spec rules shard pages over
+    # ("pod", "data") and the KV width over "model" unchanged.
+
+    def _pageable(self, lm) -> bool:
+        # GQA attention caches only: paging addresses (B, S, KV, hd)
+        # leaves; SSM/hybrid/MLA state stays on the dense path
+        return lm is not None and lm.cfg.family == "dense"
+
+    def _paged_axes(self, lm, axes):
+        abs_c = jax.eval_shape(lambda: lm.init_cache(1, self.max_seq))
+        return PAG.paged_axes(abs_c, axes, self.max_seq)
+
+    def paged_axes_for(self, lm):
+        return (self.slm_paged_axes if lm is self.slm
+                else self.llm_paged_axes)
+
+    def _axes_like(self, cache, which: str):
+        """The axis tree matching a live cache's structure — paged
+        carries ("block" present) pick the paged tree, so one decode /
+        macro jit serves both layouts by retrace."""
+        if "block" in cache:
+            return (self.slm_paged_axes if which == "slm"
+                    else self.llm_paged_axes)
+        return self.slm_axes if which == "slm" else self.llm_axes
+
+    def paged_geometry(self, lm) -> Dict[str, int]:
+        """Static page geometry of ``lm``'s cache: table widths and the
+        bytes one page id costs across the whole leaf tree (pages span
+        every layer, vLLM-style shared tables)."""
+        abs_c = jax.eval_shape(lambda: lm.init_cache(1, self.max_seq))
+        axes = self.axes_for(lm)
+        ps, ms = self.page_size, self.max_seq
+        local_len = PAG.local_seq_len(abs_c, axes, ms)
+        return dict(
+            nb=PAG.pages_for(ms, ps),
+            local_len=local_len,
+            nl=PAG.pages_for(local_len, ps),
+            page_bytes_full=PAG.page_bytes(abs_c, axes, ms, ps,
+                                           local=False),
+            page_bytes_local=PAG.page_bytes(abs_c, axes, ms, ps,
+                                            local=True))
+
+    def _paged_struct(self, lm, batch: int, pages: int,
+                      local_pages: int):
+        abs_c = jax.eval_shape(lambda: lm.init_cache(batch, self.max_seq))
+        st = dict(PAG.pool_struct(abs_c, self.axes_for(lm), self.max_seq,
+                                  self.page_size, pages, local_pages))
+        geo = self.paged_geometry(lm)
+        st["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        st["block"] = jax.ShapeDtypeStruct((batch, geo["nb"]), jnp.int32)
+        if geo["nl"]:
+            st["local"] = jax.ShapeDtypeStruct((batch, geo["nl"]),
+                                               jnp.int32)
+        return st
+
+    def paged_lane_shardings(self, lm, batch: int, pages: int,
+                             local_pages: int) -> Any:
+        if self.mesh is None:
+            return None
+        st = self._paged_struct(lm, batch, pages, local_pages)
+        return SH.lane_cache_shardings(st, self.paged_axes_for(lm),
+                                       self.mesh, self.rules)
+
+    def init_paged_lane_cache(self, lm, batch: int, pages: int,
+                              local_pages: int) -> Any:
+        """A fresh paged lane cache: zeroed pools, per-row pos, block /
+        local tables filled with NO_PAGE (writes drop, gathers clamp
+        onto masked garbage), placed per the lane sharding rules."""
+        st = self._paged_struct(lm, batch, pages, local_pages)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), st)
+        cache["block"] = jnp.full(st["block"].shape, PAG.NO_PAGE,
+                                  jnp.int32)
+        if "local" in st:
+            cache["local"] = jnp.full(st["local"].shape, PAG.NO_PAGE,
+                                      jnp.int32)
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, SH.lane_cache_shardings(
+            st, self.paged_axes_for(lm), self.mesh, self.rules))
+
+    def _free_paged_rows_impl(self, cache, idx):
+        """Park drained rows AND unmap their pages: pos to FREED_POS,
+        table rows to NO_PAGE, so subsequent in-scan writes drop and the
+        freed page ids can be re-issued to a new admission without the
+        old row ever touching them.  idx: (n,) int32 row slots."""
+        out = dict(cache)
+        out["pos"] = cache["pos"].at[idx].set(ATT.FREED_POS, mode="drop")
+        out["block"] = cache["block"].at[idx].set(PAG.NO_PAGE,
+                                                  mode="drop")
+        if "local" in cache:
+            out["local"] = cache["local"].at[idx].set(PAG.NO_PAGE,
+                                                      mode="drop")
+        return out
+
+    def _suffix_out(self, lm, p, toks, lens, hist, lora, g,
+                    pre_len: int, share_len: int):
+        """Suffix prefill against a shared prefix history -> replicated
+        last-token logits + per-row private page content (the
+        insert_*_paged payload)."""
+        logits, pc = lm.prefill_suffix(p, {"tokens": toks}, lens, hist,
+                                       pre_len, lora=lora, gates=g)
+        rows = lm.suffix_page_rows(hist, pc, lens, pre_len, share_len,
+                                   self.page_size, self.max_seq)
+        if self.mesh is not None:
+            logits = self.replicated(logits)
+        return logits, rows
+
+    def _make_insert_paged(self, lm):
+        """Jitted paged admission scatter.
+
+        (full, rows, src, dst, dpf, dpl, block_rows, local_rows):
+        ``rows`` is per-row PAGE content — ``cache_to_page_rows`` of a
+        dense prefill (leaves (..., B, np, ps, KV, hd)) or a
+        ``suffix_page_rows`` tree — with "pos" rows; ``src`` picks the
+        admitted rows out of it and ``dst`` their lane slots.  ``dpf`` /
+        ``dpl`` are (n, np) destination PAGE ids per admitted row
+        (NO_PAGE-padded columns drop), ``block_rows`` / ``local_rows``
+        the (n, nb) / (n, nl) table rows written at ``dst``.  Pool
+        leaves rely on the trailing (..., B|P, np|ps, ...) layout, so
+        one impl serves plain and grouped caches and both admission
+        flavours (full-width nb vs suffix-width content) by retrace."""
+        mesh, rules = self.mesh, self.rules
+        ms = self.max_seq
+        abs_c = jax.eval_shape(lambda: lm.init_cache(1, ms))
+        abs_flat = jax.tree.leaves(dict(abs_c))
+
+        def impl(full, rows, src, dst, dpf, dpl, block_rows, local_rows):
+            core = {k: v for k, v in full.items()
+                    if k not in ("block", "local")}
+            ff, fdef = jax.tree.flatten(core)
+            rr, _ = jax.tree.flatten(rows)
+            out = []
+            for f, r, ab in zip(ff, rr, abs_flat):
+                if f.ndim == 1:          # per-row pos
+                    out.append(f.at[dst].set(
+                        jnp.reshape(r, (-1,))[src].astype(f.dtype)))
+                    continue
+                is_local = ab.shape[ab.ndim - 3] != ms
+                dp = dpl if is_local else dpf
+                # rows: (..., B, np, ps, KV, hd); pool: (..., P, ps, ...)
+                taken = jnp.take(r, src, axis=r.ndim - 5).astype(f.dtype)
+                tm = jnp.moveaxis(taken, (taken.ndim - 5, taken.ndim - 4),
+                                  (0, 1))
+                # explicit shape: zero-size leaves (empty group kinds)
+                # make a -1 here ambiguous
+                tm = tm.reshape((tm.shape[0] * tm.shape[1],)
+                                + tm.shape[2:])
+                pm = jnp.moveaxis(f, f.ndim - 4, 0)
+                pm = pm.at[dp.reshape(-1)].set(tm, mode="drop")
+                res = jnp.moveaxis(pm, 0, f.ndim - 4)
+                if mesh is not None:
+                    spec = SH.lane_leaf_spec(res.shape, res.ndim - 4,
+                                             mesh, rules)
+                    res = jax.lax.with_sharding_constraint(
+                        res, NamedSharding(mesh, spec))
+                out.append(res)
+            new = dict(jax.tree.unflatten(fdef, out))
+            rep = (lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P()))) if mesh is not None \
+                else (lambda x: x)
+            new["block"] = rep(full["block"].at[dst].set(
+                block_rows, mode="drop"))
+            if "local" in full:
+                new["local"] = rep(full["local"].at[dst].set(
+                    local_rows, mode="drop"))
+            return new
+        return jax.jit(impl)
+
+    def _make_insert_prefix(self, lm):
+        """Jitted COW prefix-page write: (full, content, pids) scatters
+        ``prefix_page_rows`` content (leaves (..., np, ps, KV, hd),
+        batch squeezed) into pool pages ``pids`` (np,) — executed ONCE
+        per registered prefix, then every sharing row just block-maps
+        those pages.  Zero-page local leaves (rings are never shared)
+        pass through."""
+        mesh, rules = self.mesh, self.rules
+
+        def scat(pool, rows, pids):
+            if rows.shape[rows.ndim - 4] == 0:
+                return pool
+            rm = jnp.moveaxis(rows, rows.ndim - 4, 0).astype(pool.dtype)
+            pm = jnp.moveaxis(pool, pool.ndim - 4, 0)
+            pm = pm.at[pids].set(rm, mode="drop")
+            res = jnp.moveaxis(pm, 0, pool.ndim - 4)
+            if mesh is not None:
+                spec = SH.lane_leaf_spec(res.shape, res.ndim - 4,
+                                         mesh, rules)
+                res = jax.lax.with_sharding_constraint(
+                    res, NamedSharding(mesh, spec))
+            return res
+
+        def impl(full, content, pids):
+            out = dict(full)
+            if "k" in content:
+                for n in ("k", "v"):
+                    out[n] = scat(full[n], content[n], pids)
+            else:
+                for kind, kv in content.items():
+                    out[kind] = dict(
+                        full[kind],
+                        **{n: scat(full[kind][n], kv[n], pids)
+                           for n in ("k", "v")})
+            return out
         return jax.jit(impl)

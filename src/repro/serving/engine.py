@@ -30,6 +30,7 @@ from repro.core.privacy import PrivacyDetector
 from repro.core.router import Router
 from repro.data import tokenizer as TOK
 from repro.models import attention as ATT
+from repro.serving import paging as PAG
 from repro.serving.deployment import ServingDeployment
 from repro.serving.latency import LatencyModel
 
@@ -206,6 +207,24 @@ class _Slot:
     key_id: Optional[int] = None     # per-request sampling seed override
 
 
+@dataclass
+class _PagedJob:
+    """One paged admission: tokenization and page reservation happen at
+    ``add_requests`` time (the admission gate needs the page demand), so
+    the job carries them to the lane's prefill + scatter."""
+    slot: int
+    prompt: str                      # FULL text (prefix + user prompt)
+    max_new: int
+    greedy: bool
+    rid: int
+    private: bool
+    key_id: Optional[int]
+    ids: List[int]                   # full token ids (already truncated)
+    rows_s: Any                      # RowPages in the lane's SLM pager
+    rows_l: Any                      # RowPages in the LLM pager (cloud)
+    entry: Any                       # shared-prefix registry entry or None
+
+
 class _Lane:
     """One decode batch: stacked SLM (+ optionally LLM) caches with a
     free-slot list.  The cloud lane fuses SLM+LLM logits per row; the
@@ -223,6 +242,15 @@ class _Lane:
         self.ll = None               # (B, V) current LLM logits
         self.gates = None            # (B, E) router weights or None
         self._inflight = None        # dispatched macro awaiting replay
+        # paged lanes: host-side page bookkeeping per model + the COW
+        # shared-prefix registry (prefix str -> entry dict, or None for
+        # structurally unshareable prefixes)
+        self.pager_s = self.pager_l = None
+        self._prefixes: Dict[str, Any] = {}
+        if getattr(engine, "paged", False):
+            self.pager_s = engine._make_pager(engine.dep.slm, batch)
+            if use_cloud:
+                self.pager_l = engine._make_pager(engine.dep.llm, batch)
 
     # ----------------------------------------------------------- helpers
     def free_slot(self) -> Optional[int]:
@@ -241,9 +269,23 @@ class _Lane:
     def _alloc(self, vocab: int, n_experts: Optional[int]):
         dep = self.eng.dep
         b = self.batch
-        self.s_cache = dep.init_lane_cache(dep.slm, b)
+
+        def pool_pages(pager):
+            lp = (pager.local_alloc.num_pages
+                  if pager.local_alloc is not None else 0)
+            return pager.alloc.num_pages, lp
+
+        if self.pager_s is not None:
+            self.s_cache = dep.init_paged_lane_cache(
+                dep.slm, b, *pool_pages(self.pager_s))
+        else:
+            self.s_cache = dep.init_lane_cache(dep.slm, b)
         if self.use_cloud:
-            self.l_cache = dep.init_lane_cache(dep.llm, b)
+            if self.pager_l is not None:
+                self.l_cache = dep.init_paged_lane_cache(
+                    dep.llm, b, *pool_pages(self.pager_l))
+            else:
+                self.l_cache = dep.init_lane_cache(dep.llm, b)
             self.ll = dep.commit_replicated(
                 jnp.zeros((b, vocab), jnp.float32))
         self.sl = dep.commit_replicated(jnp.zeros((b, vocab), jnp.float32))
@@ -269,6 +311,9 @@ class _Lane:
         eng = self.eng
         dep = eng.dep
         if not jobs:
+            return
+        if eng.paged:
+            self._admit_paged(jobs)
             return
         if not eng.packed_prefill:
             for j in jobs:
@@ -347,6 +392,216 @@ class _Lane:
             self.gates = dep.insert_row(self.gates, gates_row, src, dst)
         self.slots[slot] = _Slot(rid, max_new, greedy,
                                  GenStats(private=private), key_id=key_id)
+
+    # ----------------------------------------------------- paged admission
+    def ensure_prefix(self, prefix: str):
+        """The lane's COW registry entry for ``prefix`` — built lazily,
+        and the expensive part (B=1 preamble prefill + pool page write)
+        runs exactly ONCE per (lane, prefix): later admissions only fork
+        the shared page ids into their block tables.
+
+        Returns None when the prefix is structurally unshareable (under
+        one page — cached) or when the pools can't currently hold its
+        pages (not cached; retried on a later admission)."""
+        eng = self.eng
+        dep = eng.dep
+        if prefix in self._prefixes:
+            return self._prefixes[prefix]
+        ps = dep.page_size
+        pre_ids = TOK.encode(prefix)
+        share_np = len(pre_ids) // ps       # whole pages only (COW unit)
+        # structurally unshareable: under one page, or no room left in
+        # the context for any suffix + decode (admission truncates ids
+        # to max_seq - max_new - 1, so such a prefix can never pass the
+        # prefix-boundary compat check — allocating its pages here
+        # would just leak them into the registry)
+        if share_np == 0 or len(pre_ids) >= eng.max_seq - 2:
+            self._prefixes[prefix] = None
+            return None
+        share_len = share_np * ps
+        if self.s_cache is None:
+            self._alloc(eng.slm.cfg.vocab_size, None)
+        pids_s = self.pager_s.alloc.alloc(share_np)
+        if pids_s is None:
+            return None
+        pids_l = None
+        if self.use_cloud:
+            pids_l = self.pager_l.alloc.alloc(share_np)
+            if pids_l is None:
+                self.pager_s.alloc.release(pids_s)
+                return None
+        toks = jnp.asarray([pre_ids], jnp.int32)
+        hist_s = dep.slm_build_prefix(eng.slm_params, toks, eng.lora, None)
+        content = eng.slm.prefix_page_rows(hist_s, share_len, ps,
+                                           eng.max_seq)
+        self.s_cache = dep.insert_slm_prefix(
+            self.s_cache, content, jnp.asarray(pids_s, jnp.int32))
+        hist_l = None
+        if self.use_cloud:
+            hist_l = dep.llm_build_prefix(eng.llm_params, toks)
+            content_l = eng.llm.prefix_page_rows(hist_l, share_len, ps,
+                                                 eng.max_seq)
+            self.l_cache = dep.insert_llm_prefix(
+                self.l_cache, content_l, jnp.asarray(pids_l, jnp.int32))
+        entry = dict(pre_ids=list(pre_ids), pre_len=len(pre_ids),
+                     share_np=share_np, share_len=share_len,
+                     hist_s=hist_s, hist_l=hist_l,
+                     pids_s=pids_s, pids_l=pids_l)
+        self._prefixes[prefix] = entry
+        return entry
+
+    def _admit_paged(self, jobs: List[_PagedJob]):
+        """Route a paged admission burst: jobs sharing a prefix entry go
+        through ONE suffix prefill over the shared history; the rest
+        share one packed full prefill.  ``packed_prefill=False`` keeps
+        the one-prefill-per-request cadence for benchmarks."""
+        if not self.eng.packed_prefill:
+            groups = [[j] for j in jobs]
+        else:
+            by_key: Dict[Any, List[_PagedJob]] = {}
+            for j in jobs:
+                key = None if j.entry is None else id(j.entry)
+                by_key.setdefault(key, []).append(j)
+            groups = list(by_key.values())
+        for group in groups:
+            if group[0].entry is None:
+                self._admit_paged_full(group)
+            else:
+                self._admit_paged_suffix(group, group[0].entry)
+
+    def _pad_group(self, ids: List[List[int]], width_cap: int):
+        """Shared right-padding for an admission group: chunk-rounded
+        length (bounded retraces), power-of-two batch, dummy pad rows of
+        length 1 — the same padding discipline as the dense packed
+        prefill, so paged admission stays bit-identical to it."""
+        eng = self.eng
+        n = len(ids)
+        lens = np.asarray([len(seq) for seq in ids], np.int32)
+        chunk = eng.prefill_chunk
+        lpad = min(-(-int(lens.max()) // chunk) * chunk, width_cap)
+        bp = 1 << (n - 1).bit_length()
+        toks = np.zeros((bp, lpad), np.int32)
+        for j, seq in enumerate(ids):
+            toks[j, :len(seq)] = seq
+        lens_p = np.ones((bp,), np.int32)
+        lens_p[:n] = lens
+        return jnp.asarray(toks), jnp.asarray(lens_p)
+
+    def _paged_tables(self, jobs: List[_PagedJob], pager, rows_of):
+        """(dpf, dpl, block, local) host arrays for an admission group:
+        full block-table rows double as the destination-page rows for a
+        full prefill (content pages line up with the table)."""
+        block = np.stack([np.asarray(pager.table_row(rows_of(j)))
+                          for j in jobs])
+        if pager.nl:
+            local = np.stack([np.asarray(pager.local_row(rows_of(j)))
+                              for j in jobs])
+        else:
+            local = np.zeros((len(jobs), 0), np.int32)
+        return (jnp.asarray(block), jnp.asarray(local))
+
+    def _admit_paged_full(self, jobs: List[_PagedJob]):
+        """Unshared paged admission: the DENSE packed prefill stays the
+        source of truth (bit-identity with the dense oracle), reshaped
+        to page rows and scattered into the pools at the reserved page
+        ids."""
+        eng = self.eng
+        dep = eng.dep
+        n = len(jobs)
+        gates_rows = None
+        if eng.router is not None and eng.bank is not None:
+            gates_rows = np.stack(
+                [np.asarray(eng.router.gate_weights(j.prompt))
+                 for j in jobs])
+        toks_j, lens_j = self._pad_group([j.ids for j in jobs],
+                                         eng.max_seq)
+        g = None
+        if gates_rows is not None:
+            g = np.zeros((toks_j.shape[0], gates_rows.shape[1]),
+                         gates_rows.dtype)
+            g[:n] = gates_rows
+            g = jnp.asarray(g)
+        s_logits, s_cache = dep.slm_prefill_packed(
+            eng.slm_params, toks_j, lens_j, eng.lora, g)
+        if self.s_cache is None:
+            self._alloc(s_logits.shape[-1],
+                        None if g is None else g.shape[-1])
+        src = jnp.arange(n)
+        dst = jnp.asarray([j.slot for j in jobs], jnp.int32)
+        rows_s = dep.slm_page_rows(s_cache)
+        block, local = self._paged_tables(jobs, self.pager_s,
+                                          lambda j: j.rows_s)
+        self.s_cache = dep.insert_slm_paged(
+            self.s_cache, rows_s, src, dst, block, local, block, local)
+        self.sl = dep.insert_row(self.sl, s_logits[:, 0], src, dst)
+        if self.use_cloud:
+            l_logits, l_cache = dep.llm_prefill_packed(
+                eng.llm_params, toks_j, lens_j)
+            rows_l = dep.llm_page_rows(l_cache)
+            blk_l, loc_l = self._paged_tables(jobs, self.pager_l,
+                                              lambda j: j.rows_l)
+            self.l_cache = dep.insert_llm_paged(
+                self.l_cache, rows_l, src, dst, blk_l, loc_l, blk_l,
+                loc_l)
+            self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
+        if g is not None:
+            self.gates = dep.insert_row(self.gates, g, src, dst)
+        for j in jobs:
+            self.slots[j.slot] = _Slot(j.rid, j.max_new, j.greedy,
+                                       GenStats(private=j.private),
+                                       key_id=j.key_id)
+
+    def _admit_paged_suffix(self, jobs: List[_PagedJob], entry):
+        """COW admission against a registered prefix: ONE packed suffix
+        prefill over the shared history (the preamble itself is never
+        recomputed), private page content scattered at each row's owned
+        page ids, shared pages only block-mapped."""
+        eng = self.eng
+        dep = eng.dep
+        ps = dep.page_size
+        n = len(jobs)
+        pre_len, share_len = entry["pre_len"], entry["share_len"]
+        toks_j, lens_j = self._pad_group(
+            [j.ids[pre_len:] for j in jobs], eng.max_seq - pre_len)
+        s_logits, rows_s = dep.slm_prefill_suffix(
+            eng.slm_params, toks_j, lens_j, entry["hist_s"], eng.lora,
+            None, pre_len, share_len)
+        if self.s_cache is None:          # pragma: no cover (ensure_prefix)
+            self._alloc(s_logits.shape[-1], None)
+        src = jnp.arange(n)
+        dst = jnp.asarray([j.slot for j in jobs], jnp.int32)
+        np_content = PAG.pages_for(pre_len - share_len + toks_j.shape[1],
+                                   ps)
+
+        def owned_pages(pager, rows_of):
+            dpf = np.full((n, np_content), PAG.NO_PAGE, np.int32)
+            for i, j in enumerate(jobs):
+                own = rows_of(j).owned
+                m = min(len(own), np_content)
+                dpf[i, :m] = own[:m]
+            return jnp.asarray(dpf)
+
+        dpf = owned_pages(self.pager_s, lambda j: j.rows_s)
+        block, local = self._paged_tables(jobs, self.pager_s,
+                                          lambda j: j.rows_s)
+        self.s_cache = dep.insert_slm_paged(
+            self.s_cache, rows_s, src, dst, dpf, local, block, local)
+        self.sl = dep.insert_row(self.sl, s_logits[:, 0], src, dst)
+        if self.use_cloud:
+            l_logits, rows_l = dep.llm_prefill_suffix(
+                eng.llm_params, toks_j, lens_j, entry["hist_l"],
+                pre_len, share_len)
+            dpf_l = owned_pages(self.pager_l, lambda j: j.rows_l)
+            blk_l, loc_l = self._paged_tables(jobs, self.pager_l,
+                                              lambda j: j.rows_l)
+            self.l_cache = dep.insert_llm_paged(
+                self.l_cache, rows_l, src, dst, dpf_l, loc_l, blk_l,
+                loc_l)
+            self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
+        for j in jobs:
+            self.slots[j.slot] = _Slot(j.rid, j.max_new, j.greedy,
+                                       GenStats(private=j.private),
+                                       key_id=j.key_id)
 
     # ------------------------------------------------------------- decode
     def step(self) -> List[Tuple[int, str, GenStats]]:
@@ -445,6 +700,9 @@ class _Lane:
         position stops advancing (models/model.py freezes pos at the
         sentinel).  Re-admission scatters a whole fresh row cache, so
         parity with an unparked engine is unchanged."""
+        if self.eng.paged:
+            self._release_rows(freed)
+            return
         idx = jnp.asarray(freed, jnp.int32)
         self.s_cache = dict(
             self.s_cache,
@@ -453,6 +711,23 @@ class _Lane:
             self.l_cache = dict(
                 self.l_cache,
                 pos=self.l_cache["pos"].at[idx].set(ATT.FREED_POS))
+
+    def _release_rows(self, freed: List[int]):
+        """Paged parking releases memory for real: pos to FREED_POS AND
+        block/local table rows to NO_PAGE on device (writes drop,
+        gathers clamp onto masked garbage), then the pages go back to
+        the host free lists for the next admission.  Safe against the
+        decode still consuming the old buffers — the sentineled tables
+        mean the parked row can never touch a re-issued page."""
+        dep = self.eng.dep
+        idx = jnp.asarray(freed, jnp.int32)
+        self.s_cache = dep.free_paged_rows(self.s_cache, idx)
+        if self.use_cloud:
+            self.l_cache = dep.free_paged_rows(self.l_cache, idx)
+        for i in freed:
+            self.pager_s.release(i)
+            if self.pager_l is not None:
+                self.pager_l.release(i)
 
     # -------------------------------------------------------- macro decode
     def macro_dispatch(self, k: int):
@@ -515,6 +790,7 @@ class _Lane:
         toks, arrived, lat, w, emit = eng.dep.fetch_traces(traces)
 
         out_done: List[Tuple[int, str, GenStats]] = []
+        freed: List[int] = []
         for t in range(k):
             for i, s in enumerate(self.slots):
                 if s is None or not emit[t, i]:
@@ -534,6 +810,11 @@ class _Lane:
                 if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
                     out_done.append((s.rid, TOK.decode(s.out_ids), st))
                     self.slots[i] = None    # freed: refill next boundary
+                    freed.append(i)
+        if freed and eng.paged:
+            # drained rows were parked in-scan; now return their pages
+            # (dense rows stay parked-but-resident until re-admission)
+            self._release_rows(freed)
         return out_done
 
     def macro_step(self, k: int) -> List[Tuple[int, str, GenStats]]:
@@ -594,6 +875,8 @@ class BatchedHybridEngine(HybridEngine):
                  edge_batch_size: Optional[int] = None, block_b: int = 4,
                  packed_prefill: bool = True, prefill_chunk: int = 16,
                  mesh=None, rules="inference", macro_k: int = 8,
+                 paged: bool = True, pool_pages: Optional[int] = None,
+                 local_pool_pages: Optional[int] = None,
                  deployment: Optional[ServingDeployment] = None):
         if deployment is None:
             deployment = ServingDeployment(
@@ -629,9 +912,33 @@ class BatchedHybridEngine(HybridEngine):
         self.macro_k = macro_k
         self.mesh = deployment.mesh
         self.rules = deployment.rules
+        # paged lane KV (the default): page-pool + block-table caches,
+        # page-gated admission and page release at EOS.  paged=False
+        # keeps the dense stacked caches as the bit-exact parity oracle.
+        self.paged = paged
+        self.pool_pages = pool_pages
+        self.local_pool_pages = local_pool_pages
+        self._rejected: List[Tuple[int, str]] = []
         self.cloud_lane = _Lane(self, batch_size, use_cloud=True)
         self.edge_lane = _Lane(self, edge_batch_size or batch_size,
                                use_cloud=False)
+
+    def _make_pager(self, lm, batch: int) -> PAG.LanePager:
+        """Host page bookkeeping for one (lane, model).  Default pool
+        budgets are the dense equivalent (batch x full table width), so
+        a default paged engine can always admit what the dense engine
+        could; ``pool_pages``/``local_pool_pages`` shrink the pools to
+        serve MORE concurrent mixed-length rows in the same bytes (the
+        capacity-sweep benchmark's knob)."""
+        geo = self.dep.paged_geometry(lm)
+        pages = (self.pool_pages if self.pool_pages is not None
+                 else batch * geo["nb"])
+        lp = (self.local_pool_pages if self.local_pool_pages is not None
+              else batch * geo["nl"])
+        pager = PAG.LanePager(batch, self.max_seq, self.dep.page_size,
+                              pages, geo["local_len"], lp)
+        pager.geo = geo
+        return pager
 
     # ------------------------------------------------------------- public
     def has_capacity(self, private: bool) -> bool:
@@ -640,33 +947,170 @@ class BatchedHybridEngine(HybridEngine):
 
     def add_request(self, prompt: str, max_new_tokens: int = 16,
                     greedy: bool = True, rid: int = 0,
-                    seed: Optional[int] = None) -> bool:
-        """Admit a request into its lane; False if the lane is full."""
+                    seed: Optional[int] = None,
+                    prefix: Optional[str] = None) -> bool:
+        """Admit a request into its lane; False if it couldn't be
+        admitted (lane full, or — paged — not enough free pages; a page
+        demand beyond total pool capacity is a HARD reject surfaced via
+        ``pop_rejected`` and never retried)."""
         return self.add_requests([(prompt, max_new_tokens, greedy,
-                                   rid, seed)])[0]
+                                   rid, seed, prefix)])[0]
 
     def add_requests(self, reqs: List[Tuple]) -> List[bool]:
-        """Admit a burst of (prompt, max_new_tokens, greedy, rid[, seed])
-        requests (seed, optional, overrides rid in the sampling-key
-        derivation).  Requests landing in the same lane share ONE packed
+        """Admit a burst of (prompt, max_new_tokens, greedy, rid[, seed
+        [, prefix]]) requests (seed overrides rid in the sampling-key
+        derivation; prefix is a shared preamble, COW page-shared on the
+        paged path).  Requests landing in the same lane share ONE packed
         B>1 prefill (the per-request prefill loop dominated burst
         admission wall time).  Returns per-request admitted flags;
-        rejected requests (lane full) should be resubmitted later."""
+        soft-refused requests (lane full / free pages short) should be
+        resubmitted later, hard rejects land in ``pop_rejected``."""
+        if self.paged:
+            return self._add_requests_paged(reqs)
         flags = [False] * len(reqs)
         jobs = {True: [], False: []}
         free = {True: self.edge_lane.free_slots(),
                 False: self.cloud_lane.free_slots()}
         for i, (prompt, max_new, greedy, rid, *rest) in enumerate(reqs):
-            private = self.detector.detect(prompt)
+            prefix = rest[1] if len(rest) > 1 else None
+            full = (prefix or "") + prompt
+            private = self.detector.detect(full)
             if free[private]:
                 slot = free[private].pop(0)
-                jobs[private].append((slot, prompt, max_new, greedy,
+                jobs[private].append((slot, full, max_new, greedy,
                                       rid, private,
                                       rest[0] if rest else None))
                 flags[i] = True
         self.edge_lane.admit_many(jobs[True])
         self.cloud_lane.admit_many(jobs[False])
         return flags
+
+    def _add_requests_paged(self, reqs: List[Tuple]) -> List[bool]:
+        """Paged admission gate: free SLOT and free PAGES, per lane and
+        per model.  Tokenization happens here (the gate needs each
+        request's worst-case page demand ceil(min(len + max_new,
+        max_seq) / page_size)), and so does the page reservation — the
+        prefill can then never run out of pool mid-burst.  A request
+        whose demand exceeds TOTAL pool capacity is hard-rejected into
+        ``pop_rejected`` (it could never be admitted); one that merely
+        exceeds the current free lists is left for resubmission."""
+        flags = [False] * len(reqs)
+        jobs = {True: [], False: []}
+        free = {True: self.edge_lane.free_slots(),
+                False: self.cloud_lane.free_slots()}
+        for i, (prompt, max_new, greedy, rid, *rest) in enumerate(reqs):
+            seed = rest[0] if rest else None
+            prefix = rest[1] if len(rest) > 1 else None
+            full = (prefix or "") + prompt
+            private = self.detector.detect(full)
+            lane = self.edge_lane if private else self.cloud_lane
+            ids = TOK.encode(full + " ")[: self.max_seq - max_new - 1]
+            alloc_len = min(len(ids) + max_new, self.max_seq)
+            entry = None
+            if prefix and self.router is None:
+                # COW sharing needs the tokenization to split cleanly at
+                # the prefix boundary (and an actual suffix to prefill);
+                # router-gated requests merge per-request LoRA into the
+                # prefix KV, so they never share
+                entry = lane.ensure_prefix(prefix)
+                if entry is not None and not (
+                        len(ids) > entry["pre_len"]
+                        and ids[:entry["pre_len"]] == entry["pre_ids"]):
+                    entry = None
+            share_np = entry["share_np"] if entry else 0
+            nf_s, nl_s = lane.pager_s.demand(alloc_len, share_np)
+            hard = not lane.pager_s.fits_pool(nf_s, nl_s)
+            nf_l = nl_l = 0
+            if lane.use_cloud:
+                nf_l, nl_l = lane.pager_l.demand(alloc_len, share_np)
+                hard = hard or not lane.pager_l.fits_pool(nf_l, nl_l)
+            if hard:
+                self._rejected.append((rid, (
+                    f"page demand {nf_s} exceeds pool capacity "
+                    f"{lane.pager_s.alloc.num_pages} pages")))
+                continue
+            if not free[private]:
+                continue
+            if not lane.pager_s.fits_free(nf_s, nl_s) or (
+                    lane.use_cloud
+                    and not lane.pager_l.fits_free(nf_l, nl_l)):
+                continue                   # soft: retry when pages free
+            slot = free[private].pop(0)
+            rows_s = lane.pager_s.admit(
+                slot, nf_s, shared=entry["pids_s"] if entry else ())
+            rows_l = None
+            if rows_s is not None and lane.use_cloud:
+                rows_l = lane.pager_l.admit(
+                    slot, nf_l, shared=entry["pids_l"] if entry else ())
+                if rows_l is None:         # pragma: no cover (fits_free)
+                    lane.pager_s.release(slot)
+            if rows_s is None or (lane.use_cloud and rows_l is None):
+                free[private].insert(0, slot)  # pragma: no cover
+                continue
+            jobs[private].append(_PagedJob(
+                slot, full, max_new, greedy, rid, private, seed, ids,
+                rows_s, rows_l, entry))
+            flags[i] = True
+        self.edge_lane.admit_many(jobs[True])
+        self.cloud_lane.admit_many(jobs[False])
+        return flags
+
+    def pop_rejected(self) -> List[Tuple[int, str]]:
+        """Drain the hard-reject log: (rid, reason) for requests whose
+        page demand can NEVER fit the pools (schedulers must error them
+        out instead of retrying forever)."""
+        out, self._rejected = self._rejected, []
+        return out
+
+    def resident_kv_bytes(self) -> int:
+        """Bytes of KV state currently LIVE: allocated pages on the
+        paged path (drops as rows drain and grows with actual lengths,
+        with shared prefix pages counted once), the full allocated lane
+        caches on the dense path (residency is B x max_seq regardless
+        of occupancy — the tentpole's comparison point)."""
+        total = 0
+        for lane in (self.cloud_lane, self.edge_lane):
+            if self.paged:
+                for pager in (lane.pager_s, lane.pager_l):
+                    if pager is not None:
+                        total += pager.live_bytes(
+                            pager.geo["page_bytes_full"],
+                            pager.geo["page_bytes_local"])
+            else:
+                for c in (lane.s_cache, lane.l_cache):
+                    if c is None:
+                        continue
+                    total += sum(
+                        leaf.size * leaf.dtype.itemsize
+                        for k, v in c.items() if k != "pos"
+                        for leaf in jax.tree.leaves(v))
+        return total
+
+    def kv_pool_bytes(self) -> int:
+        """Total KV capacity in bytes: pool pages on the paged path,
+        the would-be dense lane allocation otherwise (computed from
+        abstract shapes, so it's meaningful before first admission)."""
+        total = 0
+        for lane in (self.cloud_lane, self.edge_lane):
+            models = [self.slm] + ([self.llm] if lane.use_cloud else [])
+            if self.paged:
+                for pager in (lane.pager_s, lane.pager_l):
+                    if pager is not None:
+                        total += (pager.alloc.num_pages
+                                  * pager.geo["page_bytes_full"])
+                        if pager.local_alloc is not None:
+                            total += (pager.local_alloc.num_pages
+                                      * pager.geo["page_bytes_local"])
+            else:
+                for lm in models:
+                    abs_c = jax.eval_shape(
+                        lambda lm=lm: lm.init_cache(lane.batch,
+                                                    self.max_seq))
+                    total += sum(
+                        leaf.size * jnp.dtype(leaf.dtype).itemsize
+                        for leaf in jax.tree.leaves(abs_c)
+                        if leaf.ndim >= 3)
+        return total
 
     def active_count(self) -> int:
         return self.cloud_lane.active + self.edge_lane.active

@@ -1,0 +1,327 @@
+"""Paged lane KV state: page pool, block tables, COW prefix sharing.
+
+The dense continuous-decode lanes allocate every batch row a full
+``max_seq``-padded KV cache, so lane residency is ``B x max_seq``
+whatever the requests actually use.  This module is the host side of
+the paged replacement (the ISSUE 6 tentpole):
+
+  * the KV pool keeps the SAME leaf tree as the dense lane cache with
+    each ``(batch, seq)`` prefix rewritten to ``(num_pages,
+    page_size)`` — position ``p`` of a row lives at page
+    ``table[row, p // page_size]``, offset ``p % page_size``;
+  * ``PageAllocator`` is a refcounted free-list over page ids.  A row
+    reserves its worst-case demand (``ceil(min(len + max_new, max_seq)
+    / page_size)`` pages) at admission — no mid-macro growth — and
+    returns every page at collect time when it drains;
+  * shared prefixes are COW at page granularity: a preamble is
+    prefilled ONCE, its whole pages are written into the pool once and
+    mapped into every user row's block table with a refcount bump
+    (``fork``).  Rows never write inside the shared range (their write
+    positions start at their own prompt length), so no in-place copy is
+    ever needed; the partial tail of the prefix (``pre_len %
+    page_size`` tokens) is re-materialized into each row's first
+    private page at admission — that write IS the copy of
+    copy-on-write.
+
+Device-side layout transforms (gather/scatter, ring addressing) live in
+``models/attention.py``; the Pallas TPU kernel under
+``kernels/paged_attention`` implements the same gather-paged decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Block-table sentinel for an unmapped page slot.  Far beyond any real
+# pool (pools are O(batch * max_seq / page_size) pages) so the flat
+# index ``NO_PAGE * page_size + off`` falls outside the pool: decode
+# scatters drop (mode="drop") and gathers clamp onto real-but-masked
+# garbage.  Small enough that int32 ``NO_PAGE * page_size`` never
+# overflows for any sane page size.
+NO_PAGE = 1 << 20
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` positions."""
+    return -(-int(n_tokens) // page_size) if n_tokens > 0 else 0
+
+
+class PageAllocator:
+    """Refcounted free-list allocator over ``num_pages`` page ids.
+
+    Host-side and deterministic: pages are handed out in ascending id
+    order, so the same admission sequence always produces the same
+    block tables (the paged-vs-dense parity tests rely on runs being
+    reproducible, not on any particular ids).
+
+    ``alloc`` is atomic — it either returns ``n`` fresh pages (each at
+    refcount 1) or ``None`` without side effects.  ``fork`` is the COW
+    entry point: it bumps refcounts so a shared page dies only when its
+    last reader releases it.  Double-free and use-after-free raise —
+    the hypothesis suite in tests/test_property.py drives random
+    alloc/fork/release interleavings against these invariants."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 0 and page_size > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # pop() from the tail -> ascending allocation order
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._ref: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ state
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return len(self._ref)
+
+    def refcount(self, pid: int) -> int:
+        return self._ref.get(pid, 0)
+
+    def check(self) -> None:
+        """Internal consistency: every page is exactly live or free."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert not (free & set(self._ref)), "page both live and free"
+        assert len(free) + len(self._ref) == self.num_pages, "leaked pages"
+        assert all(r > 0 for r in self._ref.values())
+
+    # ------------------------------------------------------- operations
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` fresh pages at refcount 1, or None (no side effects)."""
+        if n > len(self._free):
+            return None
+        pids = [self._free.pop() for _ in range(n)]
+        for p in pids:
+            self._ref[p] = 1
+        return pids
+
+    def fork(self, pids: Sequence[int]) -> None:
+        """COW-share live pages: one more reader per page."""
+        for p in pids:
+            if p not in self._ref:
+                raise ValueError(f"fork of dead page {p}")
+        for p in pids:
+            self._ref[p] += 1
+
+    def release(self, pids: Sequence[int]) -> None:
+        """Drop one reference per page; frees a page at refcount 0."""
+        for p in pids:
+            if p not in self._ref:
+                raise ValueError(f"double free of page {p}")
+        for p in pids:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+
+
+class RowPages:
+    """One lane row's page mappings: ``shared`` prefix pages (forked,
+    never written by this row) followed by ``owned`` private pages."""
+
+    def __init__(self, shared: Sequence[int], owned: Sequence[int],
+                 local: Sequence[int]):
+        self.shared = list(shared)
+        self.owned = list(owned)
+        self.local = list(local)
+
+    @property
+    def full(self) -> List[int]:
+        return self.shared + self.owned
+
+
+class LanePager:
+    """Page bookkeeping for one lane-model cache: a full-sequence pool
+    allocator, an optional local/ring pool allocator (window-sized
+    leaves of grouped layouts), and the per-slot row mappings."""
+
+    def __init__(self, batch: int, max_seq: int, page_size: int,
+                 pages: int, local_len: int = 0,
+                 local_pages: int = 0):
+        self.page_size = page_size
+        self.nb = pages_for(max_seq, page_size)
+        self.local_len = local_len
+        self.nl = pages_for(local_len, page_size) if local_len else 0
+        self.alloc = PageAllocator(pages, page_size)
+        self.local_alloc = (PageAllocator(local_pages, page_size)
+                            if local_len else None)
+        self.rows: List[Optional[RowPages]] = [None] * batch
+
+    # ------------------------------------------------------- accounting
+    def demand(self, alloc_len: int, shared_pages: int = 0
+               ) -> Tuple[int, int]:
+        """(new full pages, local pages) a row of worst-case depth
+        ``alloc_len`` needs beyond ``shared_pages`` forked ones."""
+        nf = max(pages_for(alloc_len, self.page_size) - shared_pages, 0)
+        return nf, self.nl
+
+    def fits_pool(self, n_full: int, n_local: int) -> bool:
+        """Whether the demand could EVER be satisfied (total capacity,
+        not current free state) — the hard-reject predicate."""
+        ok = n_full <= self.alloc.num_pages
+        if self.local_alloc is not None:
+            ok = ok and n_local <= self.local_alloc.num_pages
+        return ok
+
+    def fits_free(self, n_full: int, n_local: int) -> bool:
+        ok = n_full <= self.alloc.free_pages
+        if self.local_alloc is not None:
+            ok = ok and n_local <= self.local_alloc.free_pages
+        return ok
+
+    def live_bytes(self, page_bytes_full: int, page_bytes_local: int
+                   ) -> int:
+        b = self.alloc.live_pages * page_bytes_full
+        if self.local_alloc is not None:
+            b += self.local_alloc.live_pages * page_bytes_local
+        return b
+
+    # ------------------------------------------------------- row events
+    def admit(self, slot: int, n_full: int,
+              shared: Sequence[int] = ()) -> Optional[RowPages]:
+        """Reserve a row's pages: fork the shared prefix pages, alloc
+        ``n_full`` private ones (+ the fixed local ring).  Atomic —
+        returns None and leaves every allocator untouched when the
+        free lists cannot cover it."""
+        assert self.rows[slot] is None, f"slot {slot} already mapped"
+        if not self.fits_free(n_full, self.nl):
+            return None
+        owned = self.alloc.alloc(n_full)
+        local: List[int] = []
+        if self.local_alloc is not None and self.nl:
+            local = self.local_alloc.alloc(self.nl)
+            if local is None:            # pragma: no cover (fits_free)
+                self.alloc.release(owned)
+                return None
+        self.alloc.fork(shared)
+        row = RowPages(shared, owned, local)
+        self.rows[slot] = row
+        return row
+
+    def release(self, slot: int) -> None:
+        """Return a drained row's pages to the free lists (shared
+        prefix pages drop one reader and survive for their siblings)."""
+        row = self.rows[slot]
+        if row is None:
+            return
+        self.rows[slot] = None
+        self.alloc.release(row.shared)
+        self.alloc.release(row.owned)
+        if self.local_alloc is not None and row.local:
+            self.local_alloc.release(row.local)
+
+    # ---------------------------------------------------- device tables
+    def table_row(self, row: RowPages) -> "jnp.ndarray":
+        """(nb,) int32 block-table row: mapped pages then NO_PAGE."""
+        import numpy as np
+        t = np.full((self.nb,), NO_PAGE, np.int32)
+        full = row.full
+        t[:len(full)] = full
+        return t
+
+    def local_row(self, row: RowPages) -> "jnp.ndarray":
+        import numpy as np
+        t = np.full((self.nl,), NO_PAGE, np.int32)
+        t[:len(row.local)] = row.local
+        return t
+
+
+# ---------------------------------------------------------------------------
+# Layout transforms over the dense lane-cache tree
+# ---------------------------------------------------------------------------
+
+
+def walk_kv(tree: Any, axes: Any, fn, skip=("hpos",)) -> Any:
+    """Recurse matching (cache, batch-axes) dict trees, rewriting each
+    batch-carrying KV leaf via ``fn(leaf, batch_ax)``; extra keys in
+    ``tree`` absent from ``axes`` (e.g. the prefix-history "hpos"
+    vectors and the block tables) and batch-free leaves pass through
+    untouched."""
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            if k in skip or not (isinstance(axes, dict) and k in axes):
+                out[k] = v
+            else:
+                out[k] = walk_kv(v, axes[k], fn, skip)
+        return out
+    if axes is None or (isinstance(axes, int) and axes < 0) \
+            or getattr(tree, "ndim", 0) < 3:
+        return tree
+    return fn(tree, axes)
+
+
+def pool_struct(abs_cache: Any, axes: Any, max_seq: int, page_size: int,
+                pages: int, local_pages: int) -> Any:
+    """Abstract paged pool tree for a dense lane-cache eval_shape tree:
+    every KV leaf's ``(batch, seq)`` prefix at ``(ab, ab+1)`` becomes
+    ``(num_pages, page_size)`` — full-sequence leaves draw from the
+    ``pages`` pool, shorter (window/local) leaves from ``local_pages``.
+    Leaf dtypes and the wide trailing dims are untouched, so the
+    launch/sharding.py ``lane_leaf_spec`` rules apply verbatim (pages
+    over the batch mesh axes, KV width over "model")."""
+
+    def f(leaf, ab):
+        n = pages if leaf.shape[ab + 1] == max_seq else local_pages
+        shape = leaf.shape[:ab] + (n, page_size) + leaf.shape[ab + 2:]
+        return jax.ShapeDtypeStruct(shape, leaf.dtype)
+
+    return walk_kv(abs_cache, axes, f)
+
+
+def local_seq_len(abs_cache: Any, axes: Any, max_seq: int) -> int:
+    """Sequence extent of the window/local leaves (0 when every leaf is
+    full-length): the ring/local page pool's slot count."""
+    found = [0]
+
+    def f(leaf, ab):
+        s = leaf.shape[ab + 1]
+        if s != max_seq:
+            found[0] = s
+        return leaf
+
+    walk_kv(abs_cache, axes, f)
+    return found[0]
+
+
+def page_bytes(abs_cache: Any, axes: Any, max_seq: int, page_size: int,
+               local: bool) -> int:
+    """Bytes ONE page id costs across the whole leaf tree (pages span
+    every layer of every matching leaf, vLLM-style shared tables)."""
+    total = [0]
+
+    def f(leaf, ab):
+        is_local = leaf.shape[ab + 1] != max_seq
+        if is_local == local:
+            n = 1
+            for i, d in enumerate(leaf.shape):
+                if i == ab:          # the page axis itself
+                    continue
+                if i == ab + 1:      # slots within the page
+                    d = page_size
+                n *= d
+            total[0] += n * jnp.dtype(leaf.dtype).itemsize
+        return leaf
+
+    walk_kv(abs_cache, axes, f)
+    return total[0]
+
+
+def paged_axes(abs_cache: Any, axes: Any, max_seq: int) -> Any:
+    """Per-leaf axis tree for the PAGED lane cache: pool leaves keep the
+    dense leaf's batch-axis index (now the page axis — ``lane_leaf_
+    spec`` shards it over the batch mesh axes and still finds the wide
+    KV dims at +2/+3); block tables and per-row pos are host-managed
+    and replicated (-1)."""
+    out = jax.tree.map(lambda ab: ab, axes)
+    out = dict(out) if isinstance(out, dict) else out
+    out["block"] = -1
+    if local_seq_len(abs_cache, axes, max_seq):
+        out["local"] = -1
+    return out

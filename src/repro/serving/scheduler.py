@@ -36,6 +36,7 @@ class Request:
     submitted_at: float = 0.0
     greedy: bool = True
     seed: Optional[int] = None       # sampling-key override (else rid)
+    prefix: Optional[str] = None     # shared preamble (COW-shared paged)
 
 
 @dataclass
@@ -45,6 +46,7 @@ class Response:
     stats: GenStats
     wall_seconds: float              # submit -> finish (incl. queue wait)
     queue_wait_seconds: float = 0.0  # submit -> admission into a lane
+    error: Optional[str] = None      # hard admission reject (never ran)
 
 
 class Scheduler:
@@ -64,26 +66,27 @@ class Scheduler:
         return cls(HybridEngine(deployment=deployment, **engine_kw))
 
     def submit(self, prompt: str, max_new_tokens: int = 16,
-               greedy: bool = True, seed: Optional[int] = None) -> int:
+               greedy: bool = True, seed: Optional[int] = None,
+               prefix: Optional[str] = None) -> int:
         rid = self._next
         self._next += 1
         self.queue.append(Request(rid, prompt, max_new_tokens, time.time(),
-                                  greedy, seed))
+                                  greedy, seed, prefix))
         return rid
 
     def run(self) -> List[Response]:
         private, public = [], []
         for r in self.queue:
-            (private if self.engine.detector.detect(r.prompt)
-             else public).append(r)
+            (private if self.engine.detector.detect(
+                (r.prefix or "") + r.prompt) else public).append(r)
         self.queue = []
         out = []
         # private first: strictly on-device, immune to network state
         for r in private + public:
             t0 = time.time()
-            text, stats = self.engine.generate(r.prompt, r.max_new_tokens,
-                                               greedy=r.greedy, rid=r.rid,
-                                               sample_key_id=r.seed)
+            text, stats = self.engine.generate(
+                (r.prefix or "") + r.prompt, r.max_new_tokens,
+                greedy=r.greedy, rid=r.rid, sample_key_id=r.seed)
             out.append(Response(r.rid, text, stats,
                                 wall_seconds=time.time() - r.submitted_at,
                                 queue_wait_seconds=t0 - r.submitted_at))
@@ -129,11 +132,12 @@ class ContinuousBatchScheduler:
         return cls(BatchedHybridEngine(deployment=deployment, **engine_kw))
 
     def submit(self, prompt: str, max_new_tokens: int = 16,
-               greedy: bool = True, seed: Optional[int] = None) -> int:
+               greedy: bool = True, seed: Optional[int] = None,
+               prefix: Optional[str] = None) -> int:
         rid = self._next
         self._next += 1
         self.queue.append(Request(rid, prompt, max_new_tokens, time.time(),
-                                  greedy, seed))
+                                  greedy, seed, prefix))
         return rid
 
     def run(self) -> List[Response]:
@@ -154,13 +158,23 @@ class ContinuousBatchScheduler:
             # prefill, dispatched while the macro-step is in flight
             if pending:
                 flags = self.engine.add_requests(
-                    [(r.prompt, r.max_new_tokens, r.greedy, r.rid, r.seed)
-                     for r in pending])
+                    [(r.prompt, r.max_new_tokens, r.greedy, r.rid, r.seed,
+                      r.prefix) for r in pending])
                 now = time.time()
+                # hard rejects (paged: page demand beyond pool capacity)
+                # error out instead of spinning in the pending queue
+                rejected = dict(self.engine.pop_rejected()) \
+                    if hasattr(self.engine, "pop_rejected") else {}
                 still: List[Request] = []
                 for r, ok in zip(pending, flags):
                     if ok:
                         admitted_at[r.rid] = now
+                    elif r.rid in rejected:
+                        out.append(Response(
+                            r.rid, "", GenStats(),
+                            wall_seconds=now - r.submitted_at,
+                            queue_wait_seconds=now - r.submitted_at,
+                            error=rejected[r.rid]))
                     else:
                         still.append(r)
                 pending = still

@@ -14,6 +14,8 @@ from repro.kernels.logit_fusion.kernel import fuse_logits
 from repro.kernels.logit_fusion.ref import fuse_logits_ref
 from repro.kernels.moe_lora.kernel import moe_lora_delta
 from repro.kernels.moe_lora.ref import moe_lora_delta_ref
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_ref
 from repro.kernels.ssm_scan.kernel import ssm_scan
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
@@ -55,6 +57,81 @@ def test_flash_attention_block_shape_independence():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------ paged attention
+
+
+def _paged_case(key, b, h, kvh, hd, n_pool, ps, nb, window, dtype):
+    """Random pool + a block table shaped like the allocator would build
+    it: plain rows map exactly the pages their position needs (sentinel
+    past that); ring rows map a full page ring."""
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    pk = jax.random.normal(ks[1], (n_pool, ps, kvh, hd), dtype)
+    pv = jax.random.normal(ks[2], (n_pool, ps, kvh, hd), dtype)
+    rng = np.random.default_rng(int(jax.random.randint(ks[0], (), 0, 1 << 30)))
+    free = list(rng.permutation(n_pool))
+    if window:
+        pos = jnp.asarray(rng.integers(0, 3 * window, (b,)), jnp.int32)
+        table = np.asarray([[free.pop() for _ in range(nb)]
+                            for _ in range(b)], np.int32)
+    else:
+        pos = jnp.asarray(rng.integers(0, nb * ps, (b,)), jnp.int32)
+        table = np.full((b, nb), 1 << 20, np.int32)      # NO_PAGE sentinel
+        for i in range(b):
+            for t in range(int(pos[i]) // ps + 1):
+                table[i, t] = free.pop()
+    return q, pk, pv, jnp.asarray(table), pos
+
+
+@pytest.mark.parametrize("b,h,kvh,hd,n_pool,ps,nb", [
+    (3, 4, 2, 16, 12, 4, 3),
+    (2, 8, 4, 32, 16, 8, 2),
+    (4, 4, 1, 64, 20, 16, 3),     # extreme GQA, serving page size
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(b, h, kvh, hd, n_pool, ps, nb, dtype):
+    q, pk, pv, table, pos = _paged_case(
+        jax.random.key(11), b, h, kvh, hd, n_pool, ps, nb, 0, dtype)
+    out = paged_decode_attention(q, pk, pv, table, pos, interpret=True)
+    ref = paged_decode_ref(q, pk, pv, table, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window,ps,nb", [
+    (12, 4, 3),     # window == nb*ps: exact page ring
+    (10, 4, 3),     # window < nb*ps: tail slots of the ring masked out
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_ring(window, ps, nb, dtype):
+    q, pk, pv, table, pos = _paged_case(
+        jax.random.key(12), 3, 4, 2, 16, 12, ps, nb, window, dtype)
+    out = paged_decode_attention(q, pk, pv, table, pos, window=window,
+                                 interpret=True)
+    ref = paged_decode_ref(q, pk, pv, table, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_attention_matches_dense_gather_path():
+    """Kernel agrees with the model's jnp paged-decode math: gather the
+    pages dense (models.attention.gather_pages) and run the rowwise
+    decode the serving engine uses."""
+    from repro.models import attention as ATT
+    b, h, kvh, hd, n_pool, ps, nb = 3, 4, 2, 16, 12, 4, 3
+    q, pk, pv, table, pos = _paged_case(
+        jax.random.key(13), b, h, kvh, hd, n_pool, ps, nb, 0, jnp.float32)
+    out = paged_decode_attention(q, pk, pv, table, pos, interpret=True)
+    flat = lambda a: a.reshape((n_pool * ps,) + a.shape[2:])
+    gk = ATT.gather_pages(flat(pk), table, nb * ps, ps)
+    gv = ATT.gather_pages(flat(pv), table, nb * ps, ps)
+    ref = ATT.rowwise_decode_attention(q[:, None], gk, gv, pos)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 # -------------------------------------------------------------- moe_lora

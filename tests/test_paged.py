@@ -1,0 +1,328 @@
+"""Paged lane KV caches (ISSUE 6 tentpole): paged-vs-dense bit-identity
+(greedy + seeded, plain and gemma3-ring layouts, per-token and macro),
+page-gated admission (soft refusal vs hard reject), page release and
+re-admission, COW shared-prefix admission, resident-byte accounting,
+and the mesh-sharded paged path (subprocess fallback, like
+test_sharded_lanes)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import fusion as FUS
+from repro.data import tokenizer as TOK
+from repro.models.attention import FREED_POS
+from repro.models.model import LM
+from repro.serving import paging as PAG
+from repro.serving.engine import BatchedHybridEngine
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import ContinuousBatchScheduler
+
+LAT = dict(rtt_ms=10, jitter_ms=0)
+PREFIX = "you are a helpful assistant. "      # >= 1 page of tokens @ 16
+PROMPTS = [
+    "math: compute 12 plus 7 =",
+    "my ssn is 123-45-6789, fill the benefits form",       # private
+    "translate to french: water ->",
+    "sort ascending: 40 12 77 31 ->",
+    "explain how rainbows form",
+    "list three colors",
+]
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    scfg = get_config("floe-slm-2b").reduced()
+    lcfg = get_config("floe-llm-7b").reduced()
+    slm, llm = LM(scfg, remat=False), LM(lcfg, remat=False)
+    sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
+    mlp = FUS.init_alignment(jax.random.key(2), scfg.vocab_size)
+    return slm, sp, llm, lp, mlp
+
+
+@pytest.fixture(scope="module")
+def gemma_engine_parts():
+    scfg = get_config("floe-slm-gemma3").reduced()
+    lcfg = get_config("floe-llm-7b").reduced()
+    slm = LM(scfg, remat=False, ring_cache=True)
+    llm = LM(lcfg, remat=False)
+    sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
+    mlp = FUS.init_alignment(jax.random.key(2), scfg.vocab_size)
+    return slm, sp, llm, lp, mlp
+
+
+def _engine(parts, paged, macro_k=4, **kw):
+    slm, sp, llm, lp, mlp = parts
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("edge_batch_size", 1)
+    return BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
+                               latency=LatencyModel(**LAT),
+                               timeout_ms=200.0, macro_k=macro_k,
+                               paged=paged, **kw)
+
+
+def _run_sched(eng, reqs, n_tokens=5):
+    sched = ContinuousBatchScheduler(eng)
+    for i, (p, prefix) in enumerate(reqs):
+        sched.submit(p, n_tokens, greedy=(i % 2 == 0), seed=i,
+                     prefix=prefix)
+    return sched.run()
+
+
+def _assert_same(r_dense, r_paged, fusion_ulp=0.0):
+    """Bit-identity of the decode streams.  ``fusion_ulp``: on a mesh
+    the fusion-WEIGHT telemetry is float32 reduced under a different
+    partitioning (pool pages vs cache rows), so XLA legitimately
+    reassociates it by an ULP or two; the token/latency streams must
+    stay exact regardless (same contract as test_sharded_lanes, which
+    omits fusion_w from mesh parity entirely)."""
+    assert [r.rid for r in r_paged] == [r.rid for r in r_dense]
+    for a, b in zip(r_dense, r_paged):
+        assert a.text == b.text, (a.rid, a.text, b.text)
+        assert a.stats.private == b.stats.private
+        assert a.stats.tokens == b.stats.tokens
+        assert a.stats.cloud_tokens == b.stats.cloud_tokens
+        assert a.stats.fallback_tokens == b.stats.fallback_tokens
+        assert a.stats.latency_ms == b.stats.latency_ms
+        if fusion_ulp:
+            assert len(a.stats.fusion_w) == len(b.stats.fusion_w)
+            assert all(abs(x - y) <= fusion_ulp * 1.2e-7
+                       for x, y in zip(a.stats.fusion_w,
+                                       b.stats.fusion_w)), a.rid
+        else:
+            assert a.stats.fusion_w == b.stats.fusion_w
+
+
+# ----------------------------------------------------------- bit-identity
+
+
+@pytest.mark.parametrize("macro_k", [0, 4])
+def test_paged_matches_dense(engine_parts, macro_k):
+    """Paged decode must be bit-for-bit the dense engine (the paged=False
+    parity oracle), greedy AND seeded sampling, per-token and macro
+    cadence, private and cloud lanes."""
+    reqs = [(p, None) for p in PROMPTS]
+    r_dense = _run_sched(_engine(engine_parts, False, macro_k), reqs)
+    r_paged = _run_sched(_engine(engine_parts, True, macro_k), reqs)
+    _assert_same(r_dense, r_paged)
+
+
+def test_paged_matches_dense_prefix(engine_parts):
+    """COW shared-prefix admission: same outputs as the dense engine fed
+    the concatenated prompts, the preamble prefilled exactly ONCE per
+    model, and its pages refcount-shared across the sharing rows."""
+    reqs = [(p, PREFIX if i % 2 == 0 else None)
+            for i, p in enumerate(PROMPTS[2:])] + [(PROMPTS[0], PREFIX)]
+    dense = _engine(engine_parts, False)
+    paged = _engine(engine_parts, True)
+    calls = {"slm": 0, "llm": 0}
+    orig_s, orig_l = paged.dep.slm_build_prefix, paged.dep.llm_build_prefix
+    paged.dep.slm_build_prefix = \
+        lambda *a, **k: calls.__setitem__("slm", calls["slm"] + 1) \
+        or orig_s(*a, **k)
+    paged.dep.llm_build_prefix = \
+        lambda *a, **k: calls.__setitem__("llm", calls["llm"] + 1) \
+        or orig_l(*a, **k)
+    r_dense = _run_sched(dense, reqs)
+    r_paged = _run_sched(paged, reqs)
+    paged.dep.slm_build_prefix, paged.dep.llm_build_prefix = orig_s, orig_l
+    _assert_same(r_dense, r_paged)
+    assert calls == {"slm": 1, "llm": 1}, calls
+    lane = paged.cloud_lane
+    entry = lane._prefixes[PREFIX]
+    assert entry is not None and entry["share_np"] >= 1
+    # drained rows dropped their forks; the registry still holds one
+    # reference per shared page, so the preamble pages stay warm
+    for pid in entry["pids_s"]:
+        assert lane.pager_s.alloc.refcount(pid) == 1
+
+
+def test_paged_matches_dense_ring(gemma_engine_parts):
+    """gemma3-style grouped layout: full-length global leaves AND
+    window-sized ring leaves (local page ring) under one block/local
+    table pair; 8 tokens pushes rows past window=16 with the reduced
+    prompt lengths, covering ring wrap on pages."""
+    reqs = [(p, None) for p in PROMPTS]
+    r_dense = _run_sched(_engine(gemma_engine_parts, False), reqs,
+                         n_tokens=8)
+    r_paged = _run_sched(_engine(gemma_engine_parts, True), reqs,
+                         n_tokens=8)
+    _assert_same(r_dense, r_paged)
+
+
+# ------------------------------------------------------ admission gating
+
+
+def _demand(prompt, max_new, max_seq=48, ps=16):
+    ids = TOK.encode(prompt + " ")[: max_seq - max_new - 1]
+    return PAG.pages_for(min(len(ids) + max_new, max_seq), ps)
+
+
+def test_page_gated_admission_refusals(engine_parts):
+    """Satellite: both refusal kinds.  A demand beyond TOTAL pool
+    capacity is a HARD reject (surfaced via pop_rejected, never
+    retried); a demand beyond the current FREE list is a soft refusal
+    (admitted fine after pages free up), bit-identical to a fresh
+    admit.  Plus resident-byte accounting across the row lifecycle."""
+    eng = _engine(engine_parts, True, batch_size=3, pool_pages=2)
+    geo_s = eng.dep.paged_geometry(eng.slm)
+    geo_l = eng.dep.paged_geometry(eng.llm)
+    a, c = "list three colors", "hi"
+    assert _demand(a, 2) == 2 and _demand(c, 2) == 1
+    assert eng.resident_kv_bytes() == 0
+
+    # fresh-admit reference for C (seeded: the sampling keys are
+    # counter-based on (rid, step), so a later re-admit must replay it)
+    assert eng.add_request(c, 2, False, 7, 3)
+    ref = {}
+    while eng.active_count():
+        for rid, text, _ in eng.step():
+            ref[rid] = text
+    assert eng.cloud_lane.pager_s.alloc.free_pages == 2   # all released
+
+    assert eng.add_request(a, 2, True, 0)                 # 2 pages: fits
+    assert eng.resident_kv_bytes() == 2 * (geo_s["page_bytes_full"]
+                                           + geo_l["page_bytes_full"])
+    # soft refusal: free slot exists, free pages don't; NOT a reject
+    assert not eng.add_request(c, 2, False, 7, 3)
+    assert eng.pop_rejected() == []
+    # hard reject: 3-page demand can NEVER fit the 2-page pool
+    assert _demand("what time is it now", 40) == 3
+    assert not eng.add_request("what time is it now", 40, True, 9)
+    rejected = eng.pop_rejected()
+    assert [rid for rid, _ in rejected] == [9]
+    assert "exceeds pool capacity" in rejected[0][1]
+
+    while eng.active_count():                             # drain A
+        eng.step()
+    assert eng.cloud_lane.pager_s.alloc.free_pages == 2
+    assert eng.resident_kv_bytes() == 0
+    # the soft-refused request admits now and replays its fresh-admit
+    # sample stream bit for bit (same rid/seed counters)
+    assert eng.add_request(c, 2, False, 7, 3)
+    got = {}
+    while eng.active_count():
+        for rid, text, _ in eng.step():
+            got[rid] = text
+    assert got == ref
+    # a hard reject is not retried by the scheduler either
+    sched = ContinuousBatchScheduler(eng)
+    sched.submit("what time is it now", 40)
+    res = sched.run()
+    assert len(res) == 1 and res[0].error is not None
+    assert res[0].text == "" and res[0].stats.tokens == 0
+
+
+def test_paged_park_release_readmit(engine_parts):
+    """Satellite: a drained row's pages return to the free list at
+    collect time, its device tables are sentineled (NO_PAGE / FREED_POS
+    parking), the surviving row keeps decoding, and re-admission into
+    the recycled pages is bit-identical to a fresh admit (seeded)."""
+    eng = _engine(engine_parts, True, batch_size=2)
+    p2 = "sort ascending: 40 12 77 31 ->"
+    assert eng.add_request(p2, 4, False, 2, 5)            # fresh-admit ref
+    ref = {}
+    while eng.active_count():
+        for rid, text, _ in eng.step():
+            ref[rid] = text
+    lane = eng.cloud_lane
+    total_free = lane.pager_s.alloc.free_pages
+    assert lane.pager_s.alloc.live_pages == 0
+
+    assert eng.add_request("translate to french: water ->", 2, True, 0)
+    assert eng.add_request("explain how rainbows form", 10, True, 1)
+    slot = next(i for i, s in enumerate(lane.slots) if s and s.rid == 0)
+    done = []
+    while not any(d[0] == 0 for d in done):
+        done += eng.step()
+    # rid 0 drained: pages back on the free list, device row parked
+    assert lane.pager_s.rows[slot] is None
+    assert lane.pager_l.rows[slot] is None
+    assert int(lane.s_cache["pos"][slot]) == FREED_POS
+    assert int(lane.l_cache["pos"][slot]) == FREED_POS
+    assert np.all(np.asarray(lane.s_cache["block"][slot]) == PAG.NO_PAGE)
+    used = lane.pager_s.alloc.live_pages
+    assert lane.pager_s.alloc.free_pages == total_free - used
+    for _ in range(3):                                    # rid 1 decodes on
+        eng.step()
+    while eng.active_count():
+        eng.step()
+    assert lane.pager_s.alloc.live_pages == 0
+    # re-admit the reference request into the recycled pages
+    assert eng.add_request(p2, 4, False, 2, 5)
+    got = {}
+    while eng.active_count():
+        for rid, text, _ in eng.step():
+            got[rid] = text
+    assert got == ref
+
+
+# ------------------------------------------------------------------ mesh
+
+MULTI = len(jax.devices()) >= 4
+
+
+@pytest.mark.skipif(
+    MULTI, reason="mesh paged parity runs in-process on this backend "
+    "via test_sharded_lanes (engines default paged=True)")
+def test_paged_mesh_subprocess():
+    """8-fake-device mesh: the PAGED engine on a sharded deployment must
+    reproduce the DENSE engine on the same deployment bit for bit
+    (pool pages over ("pod","data"), KV width over "model")."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, __file__], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, f"\n--- stdout\n{out.stdout}" \
+                                f"\n--- stderr\n{out.stderr}"
+    assert "PAGED-MESH-OK" in out.stdout
+
+
+def _mesh_main():
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.deployment import ServingDeployment
+    assert len(jax.devices()) >= 4, "set XLA_FLAGS before running"
+    mesh = make_serving_mesh(min(len(jax.devices()), 8))
+    print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+    scfg = get_config("floe-slm-2b").reduced()
+    lcfg = get_config("floe-llm-7b").reduced()
+    slm, llm = LM(scfg, remat=False), LM(lcfg, remat=False)
+    sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
+    mlp = FUS.init_alignment(jax.random.key(2), scfg.vocab_size)
+    dep = ServingDeployment(slm, sp, llm, lp, mlp,
+                            latency=LatencyModel(**LAT), max_seq=48,
+                            mesh=mesh, rules="inference")
+
+    def run(paged):
+        eng = BatchedHybridEngine(deployment=dep, batch_size=4,
+                                  edge_batch_size=1, timeout_ms=200.0,
+                                  macro_k=4, paged=paged)
+        sched = ContinuousBatchScheduler(eng)
+        for i, p in enumerate(PROMPTS):
+            sched.submit(p, 4, greedy=(i % 2 == 0), seed=i)
+        return sched.run(), eng
+
+    r_dense, _ = run(False)
+    r_paged, eng = run(True)
+    _assert_same(r_dense, r_paged, fusion_ulp=4)
+    # pool leaves genuinely span the mesh (pages over the batch axes)
+    lane = eng.cloud_lane
+    assert any(not leaf.sharding.is_fully_replicated
+               for leaf in jax.tree.leaves(lane.s_cache)), \
+        "no paged lane-cache leaf spans the mesh"
+    print("PAGED-MESH-OK")
+
+
+if __name__ == "__main__":
+    _mesh_main()

@@ -3,6 +3,8 @@
 Without hypothesis installed the @given sweeps skip individually and the
 seeded fallback tests still run, so the module is never skipped
 wholesale; CI installs hypothesis and runs the full sweeps."""
+from collections import Counter
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,6 +29,7 @@ except ImportError:                                   # pragma: no cover
         return lambda f: f
 
 from repro.core import dp as DP
+from repro.serving import paging as PAG
 from repro.core import embedding as EMB
 from repro.core import fusion as FUS
 from repro.core import lora as LORA
@@ -215,3 +218,156 @@ def test_rowwise_ring_decode_seeded(seed, b, window):
 ])
 def test_rowwise_decode_seeded(seed, b, s_max, window):
     check_rowwise_decode_rows(seed, b, s_max, window)
+
+
+# --------------------------------------- paged KV bookkeeping (ISSUE 6)
+# The page-pool invariants behind the paged lane caches: no leak, no
+# double-free, no page aliased between rows, and block tables that only
+# ever map live pages — under random alloc/fork/release interleavings.
+
+
+def check_page_allocator(seed: int, num_pages: int, n_ops: int = 40):
+    """Random op soup against a reference model: ``handles`` mirrors
+    every outstanding reference (alloc handed out one per page, fork one
+    per forked page), so at every step refcounts, live/free counts, and
+    ``check()`` must agree with it; draining returns to pristine."""
+    rng = np.random.RandomState(seed)
+    al = PAG.PageAllocator(num_pages, 16)
+    handles = []                  # each: pids holding ONE reference each
+    for _ in range(n_ops):
+        op = rng.randint(3)
+        if op == 0:                                   # alloc (atomic)
+            n = int(rng.randint(0, num_pages + 2))
+            free_before = al.free_pages
+            got = al.alloc(n)
+            if n > free_before:
+                assert got is None and al.free_pages == free_before
+            else:
+                assert got is not None and len(set(got)) == n
+                handles.append(list(got))
+        elif op == 1 and handles:                     # fork (COW share)
+            src = handles[int(rng.randint(len(handles)))]
+            if src:
+                k = int(rng.randint(1, len(src) + 1))
+                pids = [int(p) for p in
+                        rng.choice(src, size=k, replace=False)]
+                al.fork(pids)
+                handles.append(pids)
+        elif op == 2 and handles:                     # drop one reference
+            al.release(handles.pop(int(rng.randint(len(handles)))))
+        al.check()
+        want = Counter(p for h in handles for p in h)
+        assert {p: al.refcount(p) for p in want} == dict(want)
+        assert al.live_pages == len(want)
+        assert al.free_pages == num_pages - len(want)
+    for h in handles:
+        al.release(h)
+    al.check()
+    assert al.free_pages == num_pages and al.live_pages == 0
+
+
+def check_lane_pager(seed: int, n_ops: int = 40):
+    """Random admit/release interleavings (with a COW-shared registry
+    prefix on half the admits) against a LanePager small enough to
+    refuse often: refusals must be atomic, owned pages exclusive per
+    row, shared refcounts exactly 1 + #sharing rows, and tables map
+    live pages then NO_PAGE."""
+    rng = np.random.RandomState(seed)
+    batch, ps, max_seq = 4, 4, 32
+    nb = PAG.pages_for(max_seq, ps)
+    use_local = bool(seed % 2)
+    pager = PAG.LanePager(
+        batch, max_seq, ps, pages=int(rng.randint(4, batch * nb + 1)),
+        local_len=8 if use_local else 0,
+        local_pages=int(rng.randint(2, 9)) if use_local else 0)
+    registry = pager.alloc.alloc(2) or []     # the lane's prefix entry
+    share_np = len(registry)
+    for _ in range(n_ops):
+        slot = int(rng.randint(batch))
+        if pager.rows[slot] is None:
+            sh = registry if (registry and rng.rand() < 0.5) else ()
+            nf, nl = pager.demand(int(rng.randint(1, max_seq + 1)),
+                                  share_np if sh else 0)
+            ff = pager.alloc.free_pages
+            fl = (pager.local_alloc.free_pages
+                  if pager.local_alloc is not None else 0)
+            row = pager.admit(slot, nf, shared=sh)
+            if row is None:                   # refusal: atomic no-op
+                assert not pager.fits_free(nf, nl)
+                assert pager.alloc.free_pages == ff
+                if pager.local_alloc is not None:
+                    assert pager.local_alloc.free_pages == fl
+            else:
+                t = np.asarray(pager.table_row(row))
+                assert list(t[:len(row.full)]) == row.full
+                assert (t[len(row.full):] == PAG.NO_PAGE).all()
+                assert all(pager.alloc.refcount(p) > 0 for p in row.full)
+                if pager.local_alloc is not None:
+                    lt = np.asarray(pager.local_row(row))
+                    assert list(lt[:len(row.local)]) == row.local
+                    assert all(pager.local_alloc.refcount(p) > 0
+                               for p in row.local)
+        else:
+            pager.release(slot)
+        pager.alloc.check()
+        if pager.local_alloc is not None:
+            pager.local_alloc.check()
+        owned = [p for r in pager.rows if r for p in r.owned]
+        assert len(owned) == len(set(owned)), "page aliased between rows"
+        for r in (r for r in pager.rows if r):
+            assert not (set(r.owned) & set(registry))
+            assert set(r.shared) <= set(registry)
+        live = {p for p in range(pager.alloc.num_pages)
+                if pager.alloc.refcount(p)}
+        assert live == set(owned) | set(registry), "leaked/lost pages"
+        for p in registry:
+            sharers = sum(1 for r in pager.rows if r and p in r.shared)
+            assert pager.alloc.refcount(p) == 1 + sharers
+    for s in range(batch):
+        pager.release(s)
+    if registry:
+        pager.alloc.release(registry)
+    pager.alloc.check()
+    assert pager.alloc.free_pages == pager.alloc.num_pages
+    if pager.local_alloc is not None:
+        pager.local_alloc.check()
+        assert (pager.local_alloc.free_pages
+                == pager.local_alloc.num_pages)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12))
+@settings(**SET)
+def test_page_allocator_interleavings(seed, num_pages):
+    check_page_allocator(seed, num_pages)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_lane_pager_interleavings(seed):
+    check_lane_pager(seed)
+
+
+@pytest.mark.parametrize("seed,num_pages", [
+    (0, 1), (1, 3), (2, 6), (3, 8), (4, 12),
+])
+def test_page_allocator_seeded(seed, num_pages):
+    """Seeded fallback of the @given sweep (runs w/o hypothesis)."""
+    check_page_allocator(seed, num_pages)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_lane_pager_seeded(seed):
+    check_lane_pager(seed)
+
+
+def test_page_allocator_raises_on_misuse():
+    """Double-free and fork-of-dead-page must raise, not corrupt."""
+    al = PAG.PageAllocator(4, 16)
+    (a,) = al.alloc(1)
+    al.release([a])
+    with pytest.raises(ValueError):
+        al.release([a])
+    with pytest.raises(ValueError):
+        al.fork([a])
+    al.check()
+    assert al.free_pages == 4

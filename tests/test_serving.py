@@ -351,10 +351,12 @@ def test_freed_rows_parked_not_written(engine_parts):
     from repro.models.attention import FREED_POS
     slm, sp, llm, lp, mlp = engine_parts
     lat = dict(rtt_ms=10, jitter_ms=0)
+    # paged=False: this test inspects dense per-row cache leaves (the
+    # paged twin lives in tests/test_paged.py)
     bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
                               latency=LatencyModel(**lat),
                               timeout_ms=200.0, batch_size=2,
-                              edge_batch_size=1)
+                              edge_batch_size=1, paged=False)
     assert bat.add_request("translate to french: water ->", 2, True, 0)
     assert bat.add_request("explain how rainbows form", 10, True, 1)
     lane = bat.cloud_lane
@@ -397,7 +399,7 @@ def test_freed_rows_parked_ring(gemma_engine_parts):
     bat = BatchedHybridEngine(slm, sp, llm, lp, mlp, max_seq=48,
                               latency=LatencyModel(rtt_ms=10, jitter_ms=0),
                               timeout_ms=200.0, batch_size=2,
-                              edge_batch_size=1)
+                              edge_batch_size=1, paged=False)
     assert bat.add_request("translate to french: water ->", 2, True, 0)
     assert bat.add_request("explain how rainbows form", 24, True, 1)
     lane = bat.cloud_lane

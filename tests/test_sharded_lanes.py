@@ -104,8 +104,17 @@ def _assert_layout(eng):
     expect_batch = (sizes["pod"] * sizes["data"] > 1
                     and lane.batch % (sizes["pod"] * sizes["data"]) == 0)
     expect_wide = sizes["model"] > 1        # head_dim=32 always divides
-    for lm, cache in ((eng.slm, lane.s_cache), (eng.llm, lane.l_cache)):
-        want = eng.dep.lane_shardings(lm, lane.batch)
+    for lm, cache, pager in ((eng.slm, lane.s_cache, lane.pager_s),
+                             (eng.llm, lane.l_cache, lane.pager_l)):
+        if getattr(eng, "paged", False):
+            # paged lanes: pool pages take the batch mesh axes, KV width
+            # keeps "model"; tables/pos are host-managed -> replicated
+            lp = (pager.local_alloc.num_pages
+                  if pager.local_alloc is not None else 0)
+            want = eng.dep.paged_lane_shardings(
+                lm, lane.batch, pager.alloc.num_pages, lp)
+        else:
+            want = eng.dep.lane_shardings(lm, lane.batch)
         spanned = batch_sharded = wide_sharded = False
         for leaf, sh in zip(jax.tree.leaves(cache), jax.tree.leaves(want)):
             assert leaf.sharding.is_equivalent_to(sh, leaf.ndim), \
