@@ -74,14 +74,15 @@ def _build(pair: str = "2b"):
     return slm, sp, llm, lp, mlp
 
 
-def _deployment(parts, mesh=None, rules="inference", max_seq=48):
+def _deployment(parts, mesh=None, rules="inference", max_seq=48, **kw):
     """All engines in a comparison share ONE ServingDeployment: the
     placed params and the compiled entry points are built once, so a
-    sweep over batch sizes / macro_k re-times only the serving path."""
+    sweep over batch sizes / macro_k re-times only the serving path.
+    ``kw`` passes through page_size / max_ctx for the paged sweeps."""
     slm, sp, llm, lp, mlp = parts
     return ServingDeployment(slm, sp, llm, lp, mlp,
                              latency=LatencyModel(**LAT), max_seq=max_seq,
-                             mesh=mesh, rules=rules)
+                             mesh=mesh, rules=rules, **kw)
 
 
 def _timed_run(make_sched, prompts=PROMPTS, max_new=MAX_NEW):
@@ -133,6 +134,8 @@ def run():
     out["gemma3_tokens_per_s"] = run_windowed()
     out.update(run_capacity())
     out.update(run_prefix())
+    out.update(run_reclaimed_gap())
+    out.update(run_long_context())
     out["per_device_param_bytes"] = dep.per_device_param_bytes()
     return out
 
@@ -386,6 +389,90 @@ def run_capacity(dep=None) -> dict:
             "kv_pool_bytes": {"dense": dense_pool, "paged": paged_pool}}
 
 
+def run_reclaimed_gap() -> dict:
+    """Reclaimed reservation gap (ISSUE 7): max concurrent rows under
+    LAZY reservation vs the PR 6 eager worst case, same pool bytes, on
+    a mixed trace — mostly early-finishing short-budget rows with a
+    large-budget long request every 4th (the early-EOS regime: the
+    worst case reserves a future those rows never reach).  Lazy must
+    pack >= 1.5x the eager concurrency, and the whole trace must then
+    SERVE to completion through the tight pool (growth + backpressure
+    never deadlock it)."""
+    dep = _deployment(_micro_pair(), page_size=4)
+    pool = 42
+    n_reqs = 16
+    reqs = [(f"c{i}", 40 if i % 4 == 0 else 4, True, i)
+            for i in range(n_reqs)]
+
+    def concurrency(lazy):
+        eng = BatchedHybridEngine(
+            deployment=dep, batch_size=n_reqs, edge_batch_size=1,
+            paged=True, pool_pages=pool, llm_pool_pages=pool,
+            lazy_pages=lazy)
+        n = 0
+        for r in reqs:
+            if not eng.add_request(*r):
+                break
+            n += 1
+        eng.pop_rejected()
+        return n
+
+    eager_n = concurrency(False)
+    lazy_n = concurrency(True)
+    ratio = lazy_n / max(1, eager_n)
+    assert ratio >= 1.5, (
+        f"lazy reservation packs only {ratio:.2f}x the eager "
+        f"concurrency ({lazy_n} vs {eager_n}) at {pool} pool pages")
+    # the admitted-over-capacity trace must still complete: growth,
+    # park backpressure and eviction resume make the pool a throughput
+    # limit, never a deadlock
+    eng = BatchedHybridEngine(
+        deployment=dep, batch_size=n_reqs, edge_batch_size=1,
+        paged=True, pool_pages=pool, llm_pool_pages=pool, macro_k=4)
+    sched = ContinuousBatchScheduler(eng)
+    for p, mn, greedy, rid in reqs:
+        sched.submit(p, mn, greedy=greedy)
+    res = sched.run()
+    assert len(res) == n_reqs
+    assert all(r.error is None and r.stats.tokens == reqs[r.rid][1]
+               for r in res)
+    st = eng.growth_stats()
+    C.row("throughput/reclaimed_gap", lazy_n,
+          f"lazy rows vs eager {eager_n} ({ratio:.2f}x>=1.5x), trace "
+          f"served: grown={st['grown_pages']} parks={st['parks']} "
+          f"evictions={st['evictions']}")
+    return {"reclaimed_gap_concurrency": {
+        "eager": eager_n, "lazy": lazy_n, "ratio": ratio,
+        "pool_pages": pool, "trace_served": True,
+        "growth_stats": st}}
+
+
+def run_long_context() -> dict:
+    """Long-context smoke (ISSUE 7): one prompt LONGER than the dense
+    lane row (max_seq=48) served untruncated through chunked prefill on
+    a max_ctx=96 deployment — the request the PR 6 engine silently
+    clipped."""
+    dep = _deployment(_micro_pair(), max_ctx=96)
+    prompt = ("sort these numbers ascending please: "
+              "40 12 77 31 55 63 98 2 ->")
+    eng = BatchedHybridEngine(deployment=dep, batch_size=2,
+                              edge_batch_size=1, macro_k=4, paged=True)
+    sched = ContinuousBatchScheduler(eng)
+    sched.submit(prompt, 8, greedy=True)
+    t0 = time.perf_counter()
+    res = sched.run()
+    dt = time.perf_counter() - t0
+    (r,) = res
+    assert r.error is None and not r.truncated and r.stats.tokens == 8, (
+        r.error, r.truncated, r.stats.tokens)
+    C.row("throughput/long_context_smoke", dt * 1e6,
+          f"prompt>max_seq served via chunked prefill, 8 toks, "
+          f"untruncated")
+    return {"long_context": {"served": True, "truncated": False,
+                             "tokens": r.stats.tokens,
+                             "seconds": dt}}
+
+
 def run_prefix(dep=None, n: int = 6) -> dict:
     """Shared-prefix admission: ``n`` requests carrying one preamble
     must prefill it exactly ONCE per model (counted the PR-4 dispatch-
@@ -525,6 +612,11 @@ def run_smoke(mesh_devices: int = 0, rules: str = "inference"):
     # JSON artifact)
     out.update(run_capacity())
     out.update(run_prefix())
+    # ISSUE 7: lazy-vs-eager reclaimed-gap concurrency on a mixed
+    # early-EOS trace + the long-context chunked-prefill smoke, in
+    # BOTH CI matrix entries' JSON artifacts
+    out.update(run_reclaimed_gap())
+    out.update(run_long_context())
     pd = dep.per_device_param_bytes()
     out["per_device_param_bytes"] = pd
     if mesh is not None and dict(mesh.shape).get("model", 1) > 1:

@@ -67,6 +67,20 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="page-pool capacity per lane model (0 = size "
                          "for the dense worst case, batch * max_seq)")
+    ap.add_argument("--no-lazy-pages", action="store_true",
+                    help="reserve every row's worst-case pages at "
+                         "admission (the PR 6 policy) instead of lazy "
+                         "prompt-pages+1 reservation with growth at "
+                         "page boundaries")
+    ap.add_argument("--max-ctx", type=int, default=0,
+                    help="paged context ceiling in tokens (>= max_seq, "
+                         "page-aligned); prompts longer than the dense "
+                         "row stream through chunked prefill up to "
+                         "this length (0 = max_seq, no long prompts)")
+    ap.add_argument("--chunk-width", type=int, default=0,
+                    help="dense-buffer width for chunked long-prompt "
+                         "prefill (page-aligned, <= max_seq; "
+                         "0 = max_seq)")
     ap.add_argument("--sample", action="store_true",
                     help="non-greedy decoding (per-request PRNG keys)")
     ap.add_argument("--sample-seed", type=int, default=0,
@@ -111,16 +125,20 @@ def main():
             slm, sp, llm, lp, mlp,
             latency=LatencyModel(rtt_ms=args.rtt_ms),
             timeout_ms=args.timeout_ms, sample_seed=args.sample_seed,
-            mesh=mesh, rules=args.rules, page_size=args.page_size)
+            mesh=mesh, rules=args.rules, page_size=args.page_size,
+            max_ctx=args.max_ctx or None)
         if mesh is not None:
             pd = dep.per_device_param_bytes()
             print(f"per-device param bytes: {pd['total_bytes']} "
                   f"(replicated would hold {pd['replicated_bytes']})")
         if args.batch > 1:
             kw = dict(batch_size=args.batch, macro_k=args.macro_k,
-                      paged=not args.dense)
+                      paged=not args.dense,
+                      lazy_pages=not args.no_lazy_pages)
             if args.pool_pages:
                 kw["pool_pages"] = args.pool_pages
+            if args.chunk_width:
+                kw["chunk_width"] = args.chunk_width
             sched = ContinuousBatchScheduler.from_deployment(dep, **kw)
             eng = sched.engine
             print(f"lane KV: {'dense' if args.dense else 'paged'}, "

@@ -848,6 +848,33 @@ class LM:
             return annotate(pc)
         return {k: annotate(v) for k, v in pc.items()}
 
+    def extend_history(self, history, suffix_cache):
+        """Append a chunk's fresh KV to a ``build_prefix`` history.
+
+        Chunked long-prompt prefill streams a prompt page-chunk by
+        page-chunk: each middle chunk runs ``prefill_suffix`` against
+        the history so far, then extends it here for the next chunk.
+        The suffix must be EXACT-width (B=1, no padding) so absolute
+        positions stay contiguous — ``hpos`` gains pre + [0, s)."""
+
+        def ext(hsub, ssub):
+            pre = hsub["hpos"].shape[-1]
+            s = ssub["k"].shape[-3]
+            lead = hsub["k"].shape[:-4]
+            out = {k: jnp.concatenate(
+                [hsub[k], jnp.broadcast_to(
+                    ssub[k], hsub[k].shape[:-3] + ssub[k].shape[-3:])],
+                axis=-3) for k in ("k", "v")}
+            out["hpos"] = jnp.concatenate(
+                [hsub["hpos"],
+                 jnp.broadcast_to(pre + jnp.arange(s), lead + (s,))],
+                axis=-1)
+            return out
+
+        if "k" in history:
+            return ext(history, suffix_cache)
+        return {kn: ext(history[kn], suffix_cache[kn]) for kn in history}
+
     def prefill_suffix(self, params, batch_d, lengths, history,
                        pre_len: int, lora=None, gates=None):
         """Packed ragged-batch prefill of prompt SUFFIXES sharing one

@@ -94,7 +94,7 @@ class ServingDeployment:
                  timeout_ms: float = 200.0, max_seq: int = 96,
                  sample_seed: int = 0, mesh: Optional[Mesh] = None,
                  rules="inference", block_b: int = 4,
-                 page_size: int = 16):
+                 page_size: int = 16, max_ctx: Optional[int] = None):
         assert slm is not None, "a deployment needs at least one model"
         # paged lanes gather exactly table_width * page_size slots back
         # into the dense rowwise layout; requiring page-aligned max_seq
@@ -102,6 +102,14 @@ class ServingDeployment:
         # attention reduction is the bitwise-same computation
         assert max_seq % page_size == 0, \
             f"max_seq={max_seq} must be a multiple of page_size={page_size}"
+        # max_ctx > max_seq widens the PAGED context only: block tables
+        # (and the decode gather extent) cover max_ctx positions while
+        # the dense prefill buffer stays max_seq wide — prompts beyond
+        # it stream through chunked prefill.  Default keeps the dense
+        # and paged extents equal (the bit-exactness contract above).
+        self.max_ctx = max_ctx or max_seq
+        assert self.max_ctx % page_size == 0 and self.max_ctx >= max_seq, \
+            f"max_ctx={self.max_ctx} must be a page-aligned >= max_seq"
         self.page_size = page_size
         self.slm, self.llm = slm, llm
         self.bank = expert_bank
@@ -193,7 +201,20 @@ class ServingDeployment:
                     self._suffix_out(slm, p, toks, lens, hist, lora, g,
                                      pre, share),
                 5, psh_s, static_argnums=(6, 7))
+            # chunked long-prompt prefill: one dispatch per middle
+            # chunk — suffix prefill + page freeze + history extension
+            self.slm_prefill_chunk = jit(
+                lambda p, toks, lens, hist, lora, g, pre:
+                    self._chunk_out(slm, p, toks, lens, hist, lora, g,
+                                    pre),
+                5, psh_s, static_argnums=(6,))
         self.free_paged_rows = jax.jit(self._free_paged_rows_impl)
+        # lazy-growth helpers: batched block-table page mapping and
+        # row-pos park/unpark (pos = FREED_POS drops every paged write)
+        self.grow_block_pages = jax.jit(self._grow_block_impl)
+        self.set_row_pos = jax.jit(
+            lambda c, idx, val: dict(
+                c, pos=c["pos"].at[idx].set(val, mode="drop")))
         if llm is not None:
             self.llm_prefill = jit(
                 lambda p, toks: llm.prefill(p, {"tokens": toks}, max_seq),
@@ -221,6 +242,11 @@ class ServingDeployment:
                         self._suffix_out(llm, p, toks, lens, hist, None,
                                          None, pre, share),
                     3, psh_l, static_argnums=(4, 5))
+                self.llm_prefill_chunk = jit(
+                    lambda p, toks, lens, hist, pre:
+                        self._chunk_out(llm, p, toks, lens, hist, None,
+                                        None, pre),
+                    3, psh_l, static_argnums=(4,))
 
         if alignment_mlp is not None:
             self.fuse = jax.jit(
@@ -397,13 +423,18 @@ class ServingDeployment:
                     return dict(c, pos=jnp.where(done_now, ATT.FREED_POS,
                                                  c["pos"]))
 
+                # inactive rows (parked-for-growth live rows, empty
+                # slots, just-finished rows) keep their pending logits:
+                # a parked row resumes from the SAME distribution at a
+                # later boundary, bit-identical to an uninterrupted run
+                keep = (done | done_now)[:, None]
                 s_logits, new_s = dep.slm_decode(
                     slm_params, park(s_cache), feed, lora, gates)
-                new_sl = s_logits[:, 0]
+                new_sl = jnp.where(keep, sl, s_logits[:, 0])
                 if use_cloud:
                     l_logits, new_l = dep.llm_decode(
                         llm_params, park(l_cache), feed)
-                    new_ll = l_logits[:, 0]
+                    new_ll = jnp.where(keep, ll, l_logits[:, 0])
                 else:
                     new_l, new_ll = l_cache, ll
                 new_carry = (new_s, new_l, new_sl, new_ll,
@@ -560,7 +591,7 @@ class ServingDeployment:
         ps, ms = self.page_size, self.max_seq
         local_len = PAG.local_seq_len(abs_c, axes, ms)
         return dict(
-            nb=PAG.pages_for(ms, ps),
+            nb=PAG.pages_for(self.max_ctx, ps),
             local_len=local_len,
             nl=PAG.pages_for(local_len, ps),
             page_bytes_full=PAG.page_bytes(abs_c, axes, ms, ps,
@@ -632,6 +663,32 @@ class ServingDeployment:
         if self.mesh is not None:
             logits = self.replicated(logits)
         return logits, rows
+
+    def _chunk_out(self, lm, p, toks, lens, hist, lora, g, pre_len: int):
+        """One MIDDLE chunk of a chunked long-prompt prefill: suffix
+        prefill against the history so far, page content over exactly
+        this chunk's positions (share_len == pre_len — page-aligned
+        chunk starts, so every page here is the row's own), and the
+        extended history for the next chunk, in a single dispatch.
+        ``toks`` must be exact-width (B=1, no padding)."""
+        logits, pc = lm.prefill_suffix(p, {"tokens": toks}, lens, hist,
+                                       pre_len, lora=lora, gates=g)
+        rows = lm.suffix_page_rows(hist, pc, lens, pre_len, pre_len,
+                                   self.page_size, self.max_seq)
+        new_hist = lm.extend_history(hist, pc)
+        if self.mesh is not None:
+            logits = self.replicated(logits)
+        return logits, rows, new_hist
+
+    def _grow_block_impl(self, cache, rows, cols, pids):
+        """Map freshly grown pages into live rows' block tables:
+        ``block[rows[i], cols[i]] = pids[i]``.  Callers pad the update
+        vectors to a power-of-two length with out-of-range row ids
+        (mode="drop") so retraces stay bounded."""
+        blk = cache["block"].at[rows, cols].set(pids, mode="drop")
+        if self.mesh is not None:
+            blk = self.replicated(blk)
+        return dict(cache, block=blk)
 
     def _make_insert_paged(self, lm):
         """Jitted paged admission scatter.

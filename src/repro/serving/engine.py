@@ -56,6 +56,12 @@ class GenStats:
     private: bool = False
     latency_ms: List[float] = field(default_factory=list)
     fusion_w: List[float] = field(default_factory=list)
+    # the prompt was cut to fit the context budget — surfaced on the
+    # Response instead of silently serving a shorter prompt
+    truncated: bool = False
+    # engine-wide admission sequence number (paged/batched paths):
+    # observable FIFO order for the no-starvation regression tests
+    admit_seq: int = -1
 
     @property
     def mean_latency_ms(self) -> float:
@@ -135,7 +141,10 @@ class HybridEngine:
         sample_key = self._sample_key(
             rid if sample_key_id is None else sample_key_id)
 
-        ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
+        raw = TOK.encode(prompt + " ")
+        cap = self.max_seq - max_new_tokens - 1
+        stats.truncated = len(raw) > cap
+        ids = raw[:cap]
         toks = jnp.asarray([ids], jnp.int32)
         s_logits, s_cache = dep.slm_prefill(self.slm_params, toks,
                                             lora, gates)
@@ -205,6 +214,15 @@ class _Slot:
     stats: GenStats
     out_ids: List[int] = field(default_factory=list)
     key_id: Optional[int] = None     # per-request sampling seed override
+    seq: int = -1                    # admission order (FIFO observable)
+    # lazy-growth bookkeeping (paged lanes): the ORIGINAL prompt length
+    # (write position of token n is always prompt_len + n, eviction and
+    # resume included), the prompt ids for eviction re-prefill, and the
+    # park flag (pos = FREED_POS on device, pending logits preserved)
+    prompt_len: int = 0
+    prompt_ids: List[int] = field(default_factory=list)
+    full_text: str = ""
+    parked: bool = False
 
 
 @dataclass
@@ -223,6 +241,9 @@ class _PagedJob:
     rows_s: Any                      # RowPages in the lane's SLM pager
     rows_l: Any                      # RowPages in the LLM pager (cloud)
     entry: Any                       # shared-prefix registry entry or None
+    seq: int = -1                    # admission order
+    truncated: bool = False
+    resume: Any = None               # evicted _Slot to restore, or None
 
 
 class _Lane:
@@ -247,6 +268,11 @@ class _Lane:
         # structurally unshareable prefixes)
         self.pager_s = self.pager_l = None
         self._prefixes: Dict[str, Any] = {}
+        # lazy growth: requests evicted while parked, awaiting internal
+        # re-admission (oldest first), and forced completions surfaced
+        # at the next collect
+        self._evictq: List[_Slot] = []
+        self._pending_done: List[Tuple[int, str, GenStats]] = []
         if getattr(engine, "paged", False):
             self.pager_s = engine._make_pager(engine.dep.slm, batch)
             if use_cloud:
@@ -324,8 +350,10 @@ class _Lane:
         if eng.router is not None and eng.bank is not None:
             gates_rows = np.stack([np.asarray(eng.router.gate_weights(p))
                                    for _, p, *_ in jobs])
-        ids = [TOK.encode(p + " ")[: eng.max_seq - mn - 1]
-               for _, p, mn, *_ in jobs]
+        raw = [TOK.encode(p + " ") for _, p, *_ in jobs]
+        caps = [eng.max_seq - mn - 1 for _, _, mn, *_ in jobs]
+        trunc = [len(r) > c for r, c in zip(raw, caps)]
+        ids = [r[:c] for r, c in zip(raw, caps)]
         lens = np.asarray([len(seq) for seq in ids], np.int32)
         chunk = eng.prefill_chunk
         lpad = min(-(-int(lens.max()) // chunk) * chunk, eng.max_seq)
@@ -359,10 +387,14 @@ class _Lane:
             self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
         if g is not None:
             self.gates = dep.insert_row(self.gates, g, src, dst)
-        for slot, prompt, max_new, greedy, rid, private, key_id in jobs:
-            self.slots[slot] = _Slot(rid, max_new, greedy,
-                                     GenStats(private=private),
-                                     key_id=key_id)
+        for jdx, (slot, prompt, max_new, greedy, rid, private,
+                  key_id) in enumerate(jobs):
+            seq = eng._next_seq()
+            st = GenStats(private=private, truncated=trunc[jdx],
+                          admit_seq=seq)
+            self.slots[slot] = _Slot(rid, max_new, greedy, st,
+                                     key_id=key_id, seq=seq,
+                                     prompt_len=len(ids[jdx]))
 
     def _admit_one(self, slot: int, prompt: str, max_new: int,
                    greedy: bool, rid: int, private: bool,
@@ -374,7 +406,9 @@ class _Lane:
         gates_row = None
         if eng.router is not None and eng.bank is not None:
             gates_row = jnp.asarray(eng.router.gate_weights(prompt))[None, :]
-        ids = TOK.encode(prompt + " ")[: eng.max_seq - max_new - 1]
+        raw = TOK.encode(prompt + " ")
+        cap = eng.max_seq - max_new - 1
+        ids = raw[:cap]
         toks = jnp.asarray([ids], jnp.int32)
         s_logits, s_cache = dep.slm_prefill(eng.slm_params, toks,
                                             eng.lora, gates_row)
@@ -390,8 +424,13 @@ class _Lane:
             self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
         if gates_row is not None:
             self.gates = dep.insert_row(self.gates, gates_row, src, dst)
+        seq = eng._next_seq()
         self.slots[slot] = _Slot(rid, max_new, greedy,
-                                 GenStats(private=private), key_id=key_id)
+                                 GenStats(private=private,
+                                          truncated=len(raw) > cap,
+                                          admit_seq=seq),
+                                 key_id=key_id, seq=seq,
+                                 prompt_len=len(ids))
 
     # ----------------------------------------------------- paged admission
     def ensure_prefix(self, prefix: str):
@@ -451,10 +490,15 @@ class _Lane:
         return entry
 
     def _admit_paged(self, jobs: List[_PagedJob]):
-        """Route a paged admission burst: jobs sharing a prefix entry go
-        through ONE suffix prefill over the shared history; the rest
-        share one packed full prefill.  ``packed_prefill=False`` keeps
-        the one-prefill-per-request cadence for benchmarks."""
+        """Route a paged admission burst: long prompts (beyond the
+        ``chunk_width`` dense prefill buffer) stream individually
+        through chunked prefill; jobs sharing a prefix entry go through
+        ONE suffix prefill over the shared history; the rest share one
+        packed full prefill.  ``packed_prefill=False`` keeps the
+        one-prefill-per-request cadence for benchmarks."""
+        eng = self.eng
+        wide = [j for j in jobs if len(j.ids) > eng.chunk_width]
+        jobs = [j for j in jobs if len(j.ids) <= eng.chunk_width]
         if not self.eng.packed_prefill:
             groups = [[j] for j in jobs]
         else:
@@ -468,6 +512,27 @@ class _Lane:
                 self._admit_paged_full(group)
             else:
                 self._admit_paged_suffix(group, group[0].entry)
+        for j in wide:
+            self._admit_paged_chunked(j)
+
+    def _finish_admit(self, j: _PagedJob):
+        """Install the slot bookkeeping for an admitted paged job —
+        fresh, or the preserved ``_Slot`` of an evicted request (its
+        stats/out_ids/counters continue; the re-prefill of prompt +
+        tokens-so-far landed it on exactly the distribution it was
+        parked on)."""
+        if j.resume is not None:
+            s = j.resume
+            s.parked = False
+            self.slots[j.slot] = s
+            return
+        s = _Slot(j.rid, j.max_new, j.greedy,
+                  GenStats(private=j.private, truncated=j.truncated,
+                           admit_seq=j.seq),
+                  key_id=j.key_id, seq=j.seq,
+                  prompt_len=len(j.ids), prompt_ids=list(j.ids),
+                  full_text=j.prompt)
+        self.slots[j.slot] = s
 
     def _pad_group(self, ids: List[List[int]], width_cap: int):
         """Shared right-padding for an admission group: chunk-rounded
@@ -547,9 +612,7 @@ class _Lane:
         if g is not None:
             self.gates = dep.insert_row(self.gates, g, src, dst)
         for j in jobs:
-            self.slots[j.slot] = _Slot(j.rid, j.max_new, j.greedy,
-                                       GenStats(private=j.private),
-                                       key_id=j.key_id)
+            self._finish_admit(j)
 
     def _admit_paged_suffix(self, jobs: List[_PagedJob], entry):
         """COW admission against a registered prefix: ONE packed suffix
@@ -599,9 +662,123 @@ class _Lane:
                 loc_l)
             self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
         for j in jobs:
-            self.slots[j.slot] = _Slot(j.rid, j.max_new, j.greedy,
-                                       GenStats(private=j.private),
-                                       key_id=j.key_id)
+            self._finish_admit(j)
+
+    def _admit_paged_chunked(self, j: _PagedJob):
+        """Long-prompt admission: stream the prompt page-chunk by
+        page-chunk through the bounded dense prefill buffer (width
+        ``chunk_width`` <= max_seq), freezing each chunk's KV into the
+        row's reserved pool pages as it goes — prompts beyond the dense
+        row width become servable.  Chunk 0 is a B=1 ``build_prefix``
+        whose whole pages freeze like a COW prefix; every MIDDLE chunk
+        is exactly chunk_width tokens (positions stay contiguous) and
+        suffix-prefills against the history so far, extending it; the
+        final ragged chunk also writes the ring/local window + row pos,
+        and its last-token logits seed decode.  Each chunk's queries
+        attend [history; fresh] at absolute positions, which causality
+        makes bitwise the computation a one-shot prefill would run at
+        those positions."""
+        eng = self.eng
+        dep = eng.dep
+        ps = dep.page_size
+        W = eng.chunk_width
+        ids = j.ids
+        gates_row = None
+        if eng.router is not None and eng.bank is not None:
+            gates_row = jnp.asarray(
+                eng.router.gate_weights(j.prompt))[None, :]
+        # ---- chunk 0: B=1 prefix build, whole-page pool freeze
+        toks0 = jnp.asarray([ids[:W]], jnp.int32)
+        hist_s = dep.slm_build_prefix(eng.slm_params, toks0, eng.lora,
+                                      gates_row)
+        if self.s_cache is None:
+            self._alloc(eng.slm.cfg.vocab_size,
+                        None if gates_row is None
+                        else gates_row.shape[-1])
+        content = eng.slm.prefix_page_rows(hist_s, W, ps, eng.max_seq)
+        self.s_cache = dep.insert_slm_prefix(
+            self.s_cache, content,
+            jnp.asarray(j.rows_s.full[:W // ps], jnp.int32))
+        hist_l = None
+        if self.use_cloud:
+            hist_l = dep.llm_build_prefix(eng.llm_params, toks0)
+            content_l = eng.llm.prefix_page_rows(hist_l, W, ps,
+                                                 eng.max_seq)
+            self.l_cache = dep.insert_llm_prefix(
+                self.l_cache, content_l,
+                jnp.asarray(j.rows_l.full[:W // ps], jnp.int32))
+        # ---- middle chunks: exact width, one dispatch per chunk
+        pre = W
+        while len(ids) - pre > W:
+            toks = jnp.asarray([ids[pre:pre + W]], jnp.int32)
+            lens = jnp.asarray([W], jnp.int32)
+            _, rows_s, hist_s = dep.slm_prefill_chunk(
+                eng.slm_params, toks, lens, hist_s, eng.lora,
+                gates_row, pre)
+            self._insert_chunk("s", rows_s, j.slot, j.rows_s, pre, W)
+            if self.use_cloud:
+                _, rows_l, hist_l = dep.llm_prefill_chunk(
+                    eng.llm_params, toks, lens, hist_l, pre)
+                self._insert_chunk("l", rows_l, j.slot, j.rows_l,
+                                   pre, W)
+            pre += W
+        # ---- final ragged chunk: ring/local + pos + decode logits
+        w = len(ids) - pre
+        wpad = PAG.pages_for(w, ps) * ps
+        toks = np.zeros((1, wpad), np.int32)
+        toks[0, :w] = ids[pre:]
+        toks_j = jnp.asarray(toks)
+        lens = jnp.asarray([w], jnp.int32)
+        s_logits, rows_s = dep.slm_prefill_suffix(
+            eng.slm_params, toks_j, lens, hist_s, eng.lora, gates_row,
+            pre, pre)
+        self._insert_chunk("s", rows_s, j.slot, j.rows_s, pre, wpad,
+                           last=True)
+        src = jnp.zeros((1,), jnp.int32)
+        dst = jnp.asarray([j.slot], jnp.int32)
+        self.sl = dep.insert_row(self.sl, s_logits[:, 0], src, dst)
+        if self.use_cloud:
+            l_logits, rows_l = dep.llm_prefill_suffix(
+                eng.llm_params, toks_j, lens, hist_l, pre, pre)
+            self._insert_chunk("l", rows_l, j.slot, j.rows_l, pre,
+                               wpad, last=True)
+            self.ll = dep.insert_row(self.ll, l_logits[:, 0], src, dst)
+        if gates_row is not None:
+            self.gates = dep.insert_row(self.gates, gates_row, src, dst)
+        self._finish_admit(j)
+
+    def _insert_chunk(self, which: str, rows, slot: int, rowpages,
+                      pre: int, width: int, last: bool = False):
+        """Scatter one chunk's page content at the row's reserved pages
+        [pre/ps, (pre+width)/ps) through the SAME sharded paged-insert
+        entry point as admission (pool pages stay sharded over
+        ("pod","data")).  Middle chunks drop their ring/local pool
+        content (dpl = NO_PAGE — only the final chunk's window is the
+        row's real ring); table rows and pos are rewritten every chunk,
+        idempotently, ending at the full-prompt state."""
+        dep = self.eng.dep
+        ps = dep.page_size
+        pager = self.pager_s if which == "s" else self.pager_l
+        np_c = width // ps
+        dpf = jnp.asarray(
+            [rowpages.full[pre // ps: pre // ps + np_c]], jnp.int32)
+        block = jnp.asarray(np.asarray(pager.table_row(rowpages))[None])
+        if pager.nl:
+            local = jnp.asarray(
+                np.asarray(pager.local_row(rowpages))[None])
+        else:
+            local = jnp.zeros((1, 0), jnp.int32)
+        dpl = local if last else jnp.full_like(local, PAG.NO_PAGE)
+        src = jnp.zeros((1,), jnp.int32)
+        dst = jnp.asarray([slot], jnp.int32)
+        ins = (dep.insert_slm_paged if which == "s"
+               else dep.insert_llm_paged)
+        cache = self.s_cache if which == "s" else self.l_cache
+        cache = ins(cache, rows, src, dst, dpf, dpl, block, local)
+        if which == "s":
+            self.s_cache = cache
+        else:
+            self.l_cache = cache
 
     # ------------------------------------------------------------- decode
     def step(self) -> List[Tuple[int, str, GenStats]]:
@@ -614,15 +791,17 @@ class _Lane:
         dispatch + one sync per K tokens and must stay bit-identical."""
         eng = self.eng
         dep = eng.dep
+        self._readmit_evicted()
+        done0 = self._provision(1)
         if self.active == 0:
-            return []
+            return done0
         b = self.batch
         if self.use_cloud:
             occ = np.zeros((b,), bool)
             rids = np.zeros((b,), np.int32)
             steps = np.zeros((b,), np.int32)
             for i, s in enumerate(self.slots):
-                if s is not None:
+                if s is not None and not s.parked:
                     occ[i], rids[i], steps[i] = True, s.rid, len(s.out_ids)
             # one vectorized counter-based draw for the whole batch —
             # the same threefry weather the macro-step scan draws
@@ -638,7 +817,8 @@ class _Lane:
         nxt_greedy = np.asarray(dep.argmax_batched(probs))
         w_host = np.asarray(w)
         nxt_sampled = None
-        if any(s is not None and not s.greedy for s in self.slots):
+        if any(s is not None and not s.parked and not s.greedy
+               for s in self.slots):
             # on-device vmapped categorical over the fused distribution —
             # one dispatch for the whole batch instead of a per-row host
             # loop; keys fold_in(key_id, step) match the sequential
@@ -647,7 +827,7 @@ class _Lane:
             rids = np.zeros((b,), np.int32)
             steps = np.zeros((b,), np.int32)
             for i, s in enumerate(self.slots):
-                if s is not None:
+                if s is not None and not s.parked:
                     rids[i] = s.rid if s.key_id is None else s.key_id
                     steps[i] = len(s.out_ids)
             nxt_sampled = np.asarray(dep.sample_batched(
@@ -657,7 +837,7 @@ class _Lane:
         freed: List[int] = []
         next_tok = np.zeros((b, 1), np.int32)
         for i, s in enumerate(self.slots):
-            if s is None:
+            if s is None or s.parked:
                 continue
             st = s.stats
             if self.use_cloud:
@@ -681,7 +861,13 @@ class _Lane:
             # park even when the lane fully drains: a later partial
             # admission must not revive stale rows at live positions
             self._park_rows(freed)
-        if any(s is not None for s in self.slots):
+        parked_idx = [i for i, s in enumerate(self.slots)
+                      if s is not None and s.parked]
+        if any(s is not None and not s.parked for s in self.slots):
+            # parked rows ride along (fixed-width batch) with pos at
+            # FREED_POS — writes drop, pos frozen — and get their
+            # pending logits restored after the dispatch
+            old_sl, old_ll = self.sl, self.ll
             toks = jnp.asarray(next_tok)
             s_logits, self.s_cache = dep.slm_decode(
                 eng.slm_params, self.s_cache, toks, eng.lora, self.gates)
@@ -690,7 +876,12 @@ class _Lane:
                 l_logits, self.l_cache = dep.llm_decode(
                     eng.llm_params, self.l_cache, toks)
                 self.ll = l_logits[:, 0]
-        return done
+            if parked_idx:
+                idx = jnp.asarray(parked_idx, jnp.int32)
+                self.sl = dep.insert_row(self.sl, old_sl, idx, idx)
+                if self.use_cloud:
+                    self.ll = dep.insert_row(self.ll, old_ll, idx, idx)
+        return done0 + done
 
     def _park_rows(self, freed: List[int]):
         """Park freed rows at ATT.FREED_POS: the fixed-width batch still
@@ -729,6 +920,187 @@ class _Lane:
             if self.pager_l is not None:
                 self.pager_l.release(i)
 
+    # ------------------------------------------------------- lazy growth
+    def _set_positions(self, updates: List[Tuple[int, int]]):
+        """Batched row-pos park/unpark on both caches: (row, pos)
+        pairs, padded to a power of two with out-of-range rows
+        (mode=\"drop\") so retraces stay bounded."""
+        if not updates:
+            return
+        dep = self.eng.dep
+        n = 1 << (len(updates) - 1).bit_length()
+        idx = np.full((n,), self.batch, np.int32)
+        val = np.zeros((n,), np.int32)
+        for t, (i, v) in enumerate(updates):
+            idx[t], val[t] = i, v
+        idx_j, val_j = jnp.asarray(idx), jnp.asarray(val)
+        self.s_cache = dep.set_row_pos(self.s_cache, idx_j, val_j)
+        if self.use_cloud:
+            self.l_cache = dep.set_row_pos(self.l_cache, idx_j, val_j)
+
+    def _apply_growth(self, which: str, ups: List[Tuple[int, int, int]]):
+        """ONE padded block-table scatter per model per boundary for
+        all rows' freshly grown pages."""
+        if not ups:
+            return
+        dep = self.eng.dep
+        n = 1 << (len(ups) - 1).bit_length()
+        rows = np.full((n,), self.batch, np.int32)
+        cols = np.zeros((n,), np.int32)
+        pids = np.zeros((n,), np.int32)
+        for t, (r, c, p) in enumerate(ups):
+            rows[t], cols[t], pids[t] = r, c, p
+        args = (jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(pids))
+        if which == "s":
+            self.s_cache = dep.grow_block_pages(self.s_cache, *args)
+        else:
+            self.l_cache = dep.grow_block_pages(self.l_cache, *args)
+
+    def _grow_row(self, i: int, s: _Slot, k: int, ups_s, ups_l) -> bool:
+        """Ensure row ``i`` has pages for its next (up to) ``k`` decode
+        writes.  Token n writes at position prompt_len + n and the last
+        selected token is never fed, so a row with <= 1 budget left
+        writes nothing — EOS rows never claim their tail.  Growth is
+        atomic across both pagers (rolled back on a partial success);
+        True means the row can decode this boundary."""
+        ps = self.eng.dep.page_size
+        n = len(s.out_ids)
+        rem = s.max_new - n
+        if rem <= 1:
+            return True
+        hi = s.prompt_len + n + min(k, rem - 1) - 1
+        need = hi // ps + 1
+        g_s = need - len(self.pager_s.rows[i].full)
+        g_l = 0
+        if self.use_cloud:
+            g_l = need - len(self.pager_l.rows[i].full)
+        if g_s <= 0 and g_l <= 0:
+            return True
+        got_s = self.pager_s.grow(i, g_s) if g_s > 0 else []
+        if got_s is None:
+            return False
+        got_l: List[int] = []
+        if g_l > 0:
+            got_l = self.pager_l.grow(i, g_l)
+            if got_l is None:
+                if got_s:
+                    self.pager_s.ungrow(i, got_s)
+                return False
+        for t, pid in enumerate(got_s):
+            ups_s.append((i, need - g_s + t, pid))
+        for t, pid in enumerate(got_l):
+            ups_l.append((i, need - g_l + t, pid))
+        self.eng._stat["grown_pages"] += len(got_s) + len(got_l)
+        return True
+
+    def _provision(self, k: int) -> List[Tuple[int, str, GenStats]]:
+        """Lazy-growth pass at a decode boundary: extend live rows'
+        block tables (oldest admission first — deterministic page
+        handout and no starvation among waiters) before the next k
+        tokens dispatch.  A row whose growth can't be satisfied PARKS:
+        pos -> FREED_POS (its row still spends batch FLOPs but every
+        cache write drops) with its pending logits preserved, so it
+        resumes bit-identically once pages free.  If EVERY live row is
+        parked the lane is wedged and the youngest rows are EVICTED
+        (pages released, request re-admitted internally from prompt +
+        tokens-so-far) until the oldest grows — the hard admission gate
+        bounds each row's worst case by pool capacity, so a lone row
+        always completes and growth can never deadlock a full pool.  A
+        lone row that STILL can't grow (pages pinned outside row
+        accounting, e.g. a prefix registry) is force-completed with the
+        tokens it has rather than spinning forever.  Worst-case mode
+        (lazy_pages=False) reserves everything at admission: this pass
+        issues no device op at all."""
+        eng = self.eng
+        if not eng.paged or not eng.lazy_pages:
+            return []
+        forced: List[Tuple[int, str, GenStats]] = []
+        while True:
+            order = sorted(
+                (i for i, s in enumerate(self.slots) if s is not None),
+                key=lambda i: self.slots[i].seq)
+            if not order:
+                return forced
+            ups_s: List[Tuple[int, int, int]] = []
+            ups_l: List[Tuple[int, int, int]] = []
+            pos_ups: List[Tuple[int, int]] = []
+            any_active = False
+            for i in order:
+                s = self.slots[i]
+                if self._grow_row(i, s, k, ups_s, ups_l):
+                    if s.parked:
+                        s.parked = False
+                        pos_ups.append((i, s.prompt_len
+                                        + len(s.out_ids)))
+                    any_active = True
+                elif not s.parked:
+                    s.parked = True
+                    pos_ups.append((i, ATT.FREED_POS))
+                    eng._stat["parks"] += 1
+            self._apply_growth("s", ups_s)
+            if self.use_cloud:
+                self._apply_growth("l", ups_l)
+            self._set_positions(pos_ups)
+            if any_active:
+                return forced
+            if len(order) > 1:
+                self._evict(order[-1])      # youngest first
+                continue
+            i = order[0]
+            s = self.slots[i]
+            forced.append((s.rid, TOK.decode(s.out_ids), s.stats))
+            self.slots[i] = None
+            self._release_rows([i])
+            eng._stat["forced"] += 1
+
+    def _evict(self, i: int):
+        """Release a parked row's pages and queue its request for
+        internal re-admission: prompt + all selected tokens re-prefill
+        later, landing on exactly the distribution it was parked on
+        (prefill's last-position logits ARE the next selection's)."""
+        s = self.slots[i]
+        self.slots[i] = None
+        self._release_rows([i])
+        self._evictq.append(s)
+        self.eng._stat["evictions"] += 1
+
+    def _readmit_evicted(self):
+        """Re-admit evicted requests, oldest first, into freed slots/
+        pages.  The admission gate refuses external requests while any
+        eviction is pending, so FIFO order survives eviction; a blocked
+        head blocks the rest (no overtake)."""
+        if not self._evictq:
+            return
+        eng = self.eng
+        self._evictq.sort(key=lambda s: s.seq)
+        free = self.free_slots()
+        jobs: List[_PagedJob] = []
+        while self._evictq and free:
+            s = self._evictq[0]
+            ids = list(s.prompt_ids) + list(s.out_ids)
+            alloc_len = min(s.prompt_len + s.max_new, eng.max_ctx)
+            cap = PAG.pages_for(alloc_len, eng.dep.page_size)
+            nf, nl = self.pager_s.demand_lazy(len(ids), alloc_len)
+            ok = self.pager_s.fits_free(nf, nl)
+            if ok and self.use_cloud:
+                nf_l, nl_l = self.pager_l.demand_lazy(len(ids),
+                                                      alloc_len)
+                ok = self.pager_l.fits_free(nf_l, nl_l)
+            if not ok:
+                break
+            slot = free.pop(0)
+            rows_s = self.pager_s.admit(slot, nf, cap_pages=cap)
+            rows_l = None
+            if self.use_cloud:
+                rows_l = self.pager_l.admit(slot, nf_l, cap_pages=cap)
+            jobs.append(_PagedJob(
+                slot, s.full_text, s.max_new, s.greedy, s.rid,
+                s.stats.private, s.key_id, ids, rows_s, rows_l, None,
+                seq=s.seq, resume=s))
+            self._evictq.pop(0)
+        if jobs:
+            self._admit_paged(jobs)
+
     # -------------------------------------------------------- macro decode
     def macro_dispatch(self, k: int):
         """Dispatch a K-token macro-step for every occupied row in ONE
@@ -746,7 +1118,11 @@ class _Lane:
         flight."""
         eng = self.eng
         dep = eng.dep
-        if self.active == 0 or self._inflight is not None:
+        if self._inflight is not None:
+            return
+        self._readmit_evicted()
+        self._pending_done.extend(self._provision(k))
+        if self.active == 0:
             return
         b = self.batch
         rids = np.zeros((b,), np.int32)
@@ -756,7 +1132,10 @@ class _Lane:
         greedy = np.ones((b,), bool)
         done = np.ones((b,), bool)
         for i, s in enumerate(self.slots):
-            if s is None:
+            if s is None or s.parked:
+                # parked-for-growth rows stay done for the whole scan:
+                # trace emit all-False, pending logits preserved by the
+                # macro body's keep mask
                 continue
             done[i] = False
             rids[i] = s.rid
@@ -784,12 +1163,16 @@ class _Lane:
         whole scan (emit mask all-False), so the replay skips them."""
         eng = self.eng
         if self._inflight is None:
-            return []
+            out_done = self._pending_done
+            self._pending_done = []
+            return out_done
         k, traces = self._inflight
         self._inflight = None
         toks, arrived, lat, w, emit = eng.dep.fetch_traces(traces)
 
         out_done: List[Tuple[int, str, GenStats]] = []
+        out_done.extend(self._pending_done)
+        self._pending_done = []
         freed: List[int] = []
         for t in range(k):
             for i, s in enumerate(self.slots):
@@ -877,6 +1260,9 @@ class BatchedHybridEngine(HybridEngine):
                  mesh=None, rules="inference", macro_k: int = 8,
                  paged: bool = True, pool_pages: Optional[int] = None,
                  local_pool_pages: Optional[int] = None,
+                 llm_pool_pages: Optional[int] = None,
+                 lazy_pages: bool = True,
+                 chunk_width: Optional[int] = None,
                  deployment: Optional[ServingDeployment] = None):
         if deployment is None:
             deployment = ServingDeployment(
@@ -918,10 +1304,36 @@ class BatchedHybridEngine(HybridEngine):
         self.paged = paged
         self.pool_pages = pool_pages
         self.local_pool_pages = local_pool_pages
+        self.llm_pool_pages = llm_pool_pages
+        # lazy_pages=False keeps the eager worst-case reservation (the
+        # PR 6 path) as a bit-exact oracle: growth is never needed, so
+        # the provisioning pass is a no-op
+        self.lazy_pages = lazy_pages
+        self.max_ctx = deployment.max_ctx
+        # dense prefill buffer width for chunked long-prompt admission:
+        # prompts beyond it stream page-chunk by page-chunk
+        self.chunk_width = chunk_width or self.max_seq
+        ps = deployment.page_size
+        assert (self.chunk_width % ps == 0
+                and ps <= self.chunk_width <= self.max_seq), \
+            f"chunk_width={self.chunk_width} must be page-aligned in " \
+            f"[{ps}, {self.max_seq}]"
+        self._seq = 0
+        self._stat = dict(grown_pages=0, parks=0, evictions=0, forced=0)
         self._rejected: List[Tuple[int, str]] = []
         self.cloud_lane = _Lane(self, batch_size, use_cloud=True)
         self.edge_lane = _Lane(self, edge_batch_size or batch_size,
                                use_cloud=False)
+
+    def _next_seq(self) -> int:
+        s = self._seq
+        self._seq += 1
+        return s
+
+    def growth_stats(self) -> Dict[str, int]:
+        """Lazy-growth counters: pages grown at boundaries, rows parked
+        for backpressure, evictions, forced completions."""
+        return dict(self._stat)
 
     def _make_pager(self, lm, batch: int) -> PAG.LanePager:
         """Host page bookkeeping for one (lane, model).  Default pool
@@ -933,10 +1345,13 @@ class BatchedHybridEngine(HybridEngine):
         geo = self.dep.paged_geometry(lm)
         pages = (self.pool_pages if self.pool_pages is not None
                  else batch * geo["nb"])
+        if lm is self.dep.llm and self.llm_pool_pages is not None:
+            pages = self.llm_pool_pages
         lp = (self.local_pool_pages if self.local_pool_pages is not None
               else batch * geo["nl"])
         pager = PAG.LanePager(batch, self.max_seq, self.dep.page_size,
-                              pages, geo["local_len"], lp)
+                              pages, geo["local_len"], lp,
+                              max_ctx=self.max_ctx)
         pager.geo = geo
         return pager
 
@@ -987,69 +1402,103 @@ class BatchedHybridEngine(HybridEngine):
 
     def _add_requests_paged(self, reqs: List[Tuple]) -> List[bool]:
         """Paged admission gate: free SLOT and free PAGES, per lane and
-        per model.  Tokenization happens here (the gate needs each
-        request's worst-case page demand ceil(min(len + max_new,
-        max_seq) / page_size)), and so does the page reservation — the
-        prefill can then never run out of pool mid-burst.  A request
-        whose demand exceeds TOTAL pool capacity is hard-rejected into
-        ``pop_rejected`` (it could never be admitted); one that merely
-        exceeds the current free lists is left for resubmission."""
+        per model.  Tokenization happens here (the gate needs page
+        demands) and so does the page reservation — the prefill can
+        then never run out of pool mid-burst.
+
+        The LAZY demand (prompt pages + one decode page, capped at the
+        worst case) is what gets reserved; the HARD-reject predicate
+        stays the worst case ``ceil(min(len + max_new, max_ctx) /
+        page_size)`` against TOTAL pool capacity, so any admitted row
+        can always finish alone (the growth-time deadlock breaker
+        relies on it).  Hard rejects land in ``pop_rejected`` naming
+        the offending (model, demand, capacity); a soft refusal BLOCKS
+        the lane for the rest of the burst — later arrivals must not
+        overtake a waiting request (FIFO, no starvation), and a lane
+        with pending evictions admits nothing external at all."""
         flags = [False] * len(reqs)
         jobs = {True: [], False: []}
         free = {True: self.edge_lane.free_slots(),
                 False: self.cloud_lane.free_slots()}
+        blocked = {True: bool(self.edge_lane._evictq),
+                   False: bool(self.cloud_lane._evictq)}
         for i, (prompt, max_new, greedy, rid, *rest) in enumerate(reqs):
             seed = rest[0] if rest else None
             prefix = rest[1] if len(rest) > 1 else None
             full = (prefix or "") + prompt
             private = self.detector.detect(full)
             lane = self.edge_lane if private else self.cloud_lane
-            ids = TOK.encode(full + " ")[: self.max_seq - max_new - 1]
-            alloc_len = min(len(ids) + max_new, self.max_seq)
+            raw = TOK.encode(full + " ")
+            cap_ids = self.max_ctx - max_new - 1
+            ids = raw[:cap_ids]
+            truncated = len(raw) > cap_ids
+            alloc_len = min(len(ids) + max_new, self.max_ctx)
+            cap_pages = PAG.pages_for(alloc_len, self.dep.page_size)
             entry = None
-            if prefix and self.router is None:
+            if prefix and self.router is None and \
+                    len(ids) <= self.chunk_width:
                 # COW sharing needs the tokenization to split cleanly at
-                # the prefix boundary (and an actual suffix to prefill);
-                # router-gated requests merge per-request LoRA into the
-                # prefix KV, so they never share
+                # the prefix boundary, an actual suffix to prefill, and
+                # a prompt that fits the dense prefill buffer (longer
+                # prompts go chunked, unshared — the chunk freeze owns
+                # every page it writes); router-gated requests merge
+                # per-request LoRA into the prefix KV, so they never
+                # share
                 entry = lane.ensure_prefix(prefix)
                 if entry is not None and not (
                         len(ids) > entry["pre_len"]
                         and ids[:entry["pre_len"]] == entry["pre_ids"]):
                     entry = None
             share_np = entry["share_np"] if entry else 0
-            nf_s, nl_s = lane.pager_s.demand(alloc_len, share_np)
-            hard = not lane.pager_s.fits_pool(nf_s, nl_s)
-            nf_l = nl_l = 0
+            worst_s = lane.pager_s.demand(alloc_len, share_np)
+            worst_l = (0, 0)
             if lane.use_cloud:
-                nf_l, nl_l = lane.pager_l.demand(alloc_len, share_np)
-                hard = hard or not lane.pager_l.fits_pool(nf_l, nl_l)
-            if hard:
+                worst_l = lane.pager_l.demand(alloc_len, share_np)
+            if not lane.pager_s.fits_pool(*worst_s):
                 self._rejected.append((rid, (
-                    f"page demand {nf_s} exceeds pool capacity "
-                    f"{lane.pager_s.alloc.num_pages} pages")))
+                    f"slm page demand {worst_s[0]} exceeds pool "
+                    f"capacity {lane.pager_s.alloc.num_pages} pages")))
                 continue
-            if not free[private]:
+            if lane.use_cloud and not lane.pager_l.fits_pool(*worst_l):
+                self._rejected.append((rid, (
+                    f"llm page demand {worst_l[0]} exceeds pool "
+                    f"capacity {lane.pager_l.alloc.num_pages} pages")))
                 continue
-            if not lane.pager_s.fits_free(nf_s, nl_s) or (
-                    lane.use_cloud
-                    and not lane.pager_l.fits_free(nf_l, nl_l)):
-                continue                   # soft: retry when pages free
+            if blocked[private]:
+                continue                   # FIFO: no overtaking
+            if self.lazy_pages:
+                nf_s, nl_s = lane.pager_s.demand_lazy(
+                    len(ids), alloc_len, share_np)
+                nf_l, nl_l = (lane.pager_l.demand_lazy(
+                    len(ids), alloc_len, share_np)
+                    if lane.use_cloud else (0, 0))
+            else:
+                (nf_s, nl_s), (nf_l, nl_l) = worst_s, worst_l
+            if not free[private] \
+                    or not lane.pager_s.fits_free(nf_s, nl_s) or (
+                        lane.use_cloud
+                        and not lane.pager_l.fits_free(nf_l, nl_l)):
+                blocked[private] = True    # soft: retry when pages free
+                continue
             slot = free[private].pop(0)
             rows_s = lane.pager_s.admit(
-                slot, nf_s, shared=entry["pids_s"] if entry else ())
+                slot, nf_s, shared=entry["pids_s"] if entry else (),
+                cap_pages=cap_pages)
             rows_l = None
             if rows_s is not None and lane.use_cloud:
                 rows_l = lane.pager_l.admit(
-                    slot, nf_l, shared=entry["pids_l"] if entry else ())
+                    slot, nf_l, shared=entry["pids_l"] if entry else (),
+                    cap_pages=cap_pages)
                 if rows_l is None:         # pragma: no cover (fits_free)
                     lane.pager_s.release(slot)
             if rows_s is None or (lane.use_cloud and rows_l is None):
                 free[private].insert(0, slot)  # pragma: no cover
+                blocked[private] = True        # pragma: no cover
                 continue
             jobs[private].append(_PagedJob(
                 slot, full, max_new, greedy, rid, private, seed, ids,
-                rows_s, rows_l, entry))
+                rows_s, rows_l, entry, seq=self._next_seq(),
+                truncated=truncated))
             flags[i] = True
         self.edge_lane.admit_many(jobs[True])
         self.cloud_lane.admit_many(jobs[False])
@@ -1113,7 +1562,10 @@ class BatchedHybridEngine(HybridEngine):
         return total
 
     def active_count(self) -> int:
-        return self.cloud_lane.active + self.edge_lane.active
+        # evicted-but-unfinished requests count as active: they hold no
+        # pages but the lane still owes them a completion
+        return (self.cloud_lane.active + len(self.cloud_lane._evictq)
+                + self.edge_lane.active + len(self.edge_lane._evictq))
 
     def dispatch_step(self):
         """Dispatch both lanes' macro-steps WITHOUT syncing (no-op on
@@ -1163,13 +1615,18 @@ class SoloEngine:
         self.lora = (deployment.lora
                      if router is not None and self.bank is not None
                      else None)
+        # whether the LAST generate() call had to cut its prompt
+        self.last_truncated = False
 
     def generate(self, prompt: str, max_new_tokens: int = 16) -> str:
         dep = self.dep
         gates = None
         if self.router is not None and self.bank is not None:
             gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
-        ids = TOK.encode(prompt + " ")[: self.max_seq - max_new_tokens - 1]
+        raw = TOK.encode(prompt + " ")
+        cap = self.max_seq - max_new_tokens - 1
+        self.last_truncated = len(raw) > cap
+        ids = raw[:cap]
         toks = jnp.asarray([ids], jnp.int32)
         logits, cache = dep.slm_prefill(self.params, toks, self.lora, gates)
         out: List[int] = []

@@ -10,9 +10,12 @@ the paged replacement (the ISSUE 6 tentpole):
     page_size)`` — position ``p`` of a row lives at page
     ``table[row, p // page_size]``, offset ``p % page_size``;
   * ``PageAllocator`` is a refcounted free-list over page ids.  A row
-    reserves its worst-case demand (``ceil(min(len + max_new, max_seq)
-    / page_size)`` pages) at admission — no mid-macro growth — and
-    returns every page at collect time when it drains;
+    reserves only its LAZY demand at admission — prompt pages plus one
+    decode page, never more than the worst case ``ceil(min(len +
+    max_new, max_ctx) / page_size)`` — and ``grow``s page by page at
+    macro boundaries as decode crosses page boundaries, so early-EOS
+    rows never claim the tail of their ``max_new`` budget.  Every page
+    returns at collect time when the row drains;
   * shared prefixes are COW at page granularity: a preamble is
     prefilled ONCE, its whole pages are written into the pool once and
     mapped into every user row's block table with a refcount bump
@@ -123,13 +126,16 @@ class PageAllocator:
 
 class RowPages:
     """One lane row's page mappings: ``shared`` prefix pages (forked,
-    never written by this row) followed by ``owned`` private pages."""
+    never written by this row) followed by ``owned`` private pages.
+    ``cap_pages`` bounds lazy growth at the row's worst-case
+    reservation (``len(full)`` may never exceed it)."""
 
     def __init__(self, shared: Sequence[int], owned: Sequence[int],
-                 local: Sequence[int]):
+                 local: Sequence[int], cap_pages: Optional[int] = None):
         self.shared = list(shared)
         self.owned = list(owned)
         self.local = list(local)
+        self.cap_pages = cap_pages
 
     @property
     def full(self) -> List[int]:
@@ -143,9 +149,10 @@ class LanePager:
 
     def __init__(self, batch: int, max_seq: int, page_size: int,
                  pages: int, local_len: int = 0,
-                 local_pages: int = 0):
+                 local_pages: int = 0, max_ctx: Optional[int] = None):
         self.page_size = page_size
-        self.nb = pages_for(max_seq, page_size)
+        self.max_ctx = max_ctx or max_seq
+        self.nb = pages_for(self.max_ctx, page_size)
         self.local_len = local_len
         self.nl = pages_for(local_len, page_size) if local_len else 0
         self.alloc = PageAllocator(pages, page_size)
@@ -159,6 +166,18 @@ class LanePager:
         """(new full pages, local pages) a row of worst-case depth
         ``alloc_len`` needs beyond ``shared_pages`` forked ones."""
         nf = max(pages_for(alloc_len, self.page_size) - shared_pages, 0)
+        return nf, self.nl
+
+    def demand_lazy(self, prompt_len: int, alloc_len: int,
+                    shared_pages: int = 0) -> Tuple[int, int]:
+        """Lazy reservation: prompt pages + ONE decode page, capped at
+        the worst case (a short ``max_new`` budget never reserves more
+        than it could ever write).  ``alloc_len`` is the row's
+        worst-case depth; further pages arrive via ``grow``."""
+        ps = self.page_size
+        want = min(pages_for(prompt_len, ps) + 1,
+                   pages_for(alloc_len, ps))
+        nf = max(want - shared_pages, 0)
         return nf, self.nl
 
     def fits_pool(self, n_full: int, n_local: int) -> bool:
@@ -184,11 +203,13 @@ class LanePager:
 
     # ------------------------------------------------------- row events
     def admit(self, slot: int, n_full: int,
-              shared: Sequence[int] = ()) -> Optional[RowPages]:
+              shared: Sequence[int] = (),
+              cap_pages: Optional[int] = None) -> Optional[RowPages]:
         """Reserve a row's pages: fork the shared prefix pages, alloc
         ``n_full`` private ones (+ the fixed local ring).  Atomic —
         returns None and leaves every allocator untouched when the
-        free lists cannot cover it."""
+        free lists cannot cover it.  ``cap_pages`` (worst-case full
+        pages incl. shared) bounds later ``grow`` calls."""
         assert self.rows[slot] is None, f"slot {slot} already mapped"
         if not self.fits_free(n_full, self.nl):
             return None
@@ -200,9 +221,34 @@ class LanePager:
                 self.alloc.release(owned)
                 return None
         self.alloc.fork(shared)
-        row = RowPages(shared, owned, local)
+        row = RowPages(shared, owned, local, cap_pages)
         self.rows[slot] = row
         return row
+
+    def grow(self, slot: int, n: int) -> Optional[List[int]]:
+        """Lazily extend a live row by ``n`` full pages.  Atomic like
+        ``admit`` (None on a depleted free list, no side effects) and
+        bounded by the row's worst-case reservation — growth can never
+        claim pages the old eager policy would not have."""
+        row = self.rows[slot]
+        assert row is not None, f"grow of empty slot {slot}"
+        if row.cap_pages is not None:
+            assert len(row.full) + n <= row.cap_pages, \
+                f"growth beyond worst-case reservation ({row.cap_pages})"
+        pids = self.alloc.alloc(n)
+        if pids is None:
+            return None
+        row.owned.extend(pids)
+        return pids
+
+    def ungrow(self, slot: int, pids: Sequence[int]) -> None:
+        """Roll back the most recent ``grow`` (cross-pager atomicity:
+        when the sibling model's pager cannot match the growth)."""
+        row = self.rows[slot]
+        assert row is not None and row.owned[len(row.owned) - len(pids):] \
+            == list(pids)
+        del row.owned[len(row.owned) - len(pids):]
+        self.alloc.release(pids)
 
     def release(self, slot: int) -> None:
         """Return a drained row's pages to the free lists (shared

@@ -47,6 +47,7 @@ class Response:
     wall_seconds: float              # submit -> finish (incl. queue wait)
     queue_wait_seconds: float = 0.0  # submit -> admission into a lane
     error: Optional[str] = None      # hard admission reject (never ran)
+    truncated: bool = False          # prompt clipped to fit a dense row
 
 
 class Scheduler:
@@ -89,7 +90,8 @@ class Scheduler:
                 greedy=r.greedy, rid=r.rid, sample_key_id=r.seed)
             out.append(Response(r.rid, text, stats,
                                 wall_seconds=time.time() - r.submitted_at,
-                                queue_wait_seconds=t0 - r.submitted_at))
+                                queue_wait_seconds=t0 - r.submitted_at,
+                                truncated=stats.truncated))
         return sorted(out, key=lambda x: x.rid)
 
 
@@ -152,7 +154,10 @@ class ContinuousBatchScheduler:
             # so everything between here and there overlaps the decode
             self.engine.dispatch_step()
             # fill freed slots as ONE admission burst per macro boundary
-            # (FIFO per lane; a full lane skips, a later request bound
+            # (FIFO per lane: once a request is soft-refused, later
+            # arrivals bound for the SAME lane are held back too, so a
+            # big request can never be starved by a stream of small
+            # later ones; a full lane skips, a later request bound
             # for the other lane may still be admitted) — all admissions
             # that land in a lane this step share a single packed B>1
             # prefill, dispatched while the macro-step is in flight
@@ -184,7 +189,8 @@ class ContinuousBatchScheduler:
                     rid, text, stats,
                     wall_seconds=now - submitted_at[rid],
                     queue_wait_seconds=(admitted_at[rid]
-                                        - submitted_at[rid])))
+                                        - submitted_at[rid]),
+                    truncated=stats.truncated))
         return sorted(out, key=lambda x: x.rid)
 
 

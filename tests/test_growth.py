@@ -1,0 +1,195 @@
+"""Lazy-growth backpressure (ISSUE 7 tentpole) and its satellites:
+park-until-pages-free bit-identity, wedge eviction + resume, growth
+counters, the ``truncated`` flag on every admission path, and FIFO
+no-starvation among soft refusals.
+
+page_size=4 deployments make boundary crossings and pool exhaustion
+cheap to trigger (a 10-token prompt with a 16-token budget spans 3-7
+pages); the default-pool engine on the SAME deployment is the oracle —
+backpressure may reshuffle WHEN rows decode, never WHAT they decode."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import fusion as FUS
+from repro.data import tokenizer as TOK
+from repro.models.model import LM
+from repro.serving.deployment import ServingDeployment
+from repro.serving.engine import (BatchedHybridEngine, HybridEngine,
+                                  SoloEngine)
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import ContinuousBatchScheduler, Scheduler
+
+LAT = dict(rtt_ms=10, jitter_ms=0)
+SHORT = "hi there"            # 10 tokens: 3 pages @ 4 + 1 decode page
+
+
+@pytest.fixture(scope="module")
+def parts():
+    scfg = get_config("floe-slm-2b").reduced()
+    lcfg = get_config("floe-llm-7b").reduced()
+    slm, llm = LM(scfg, remat=False), LM(lcfg, remat=False)
+    sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
+    mlp = FUS.init_alignment(jax.random.key(2), scfg.vocab_size)
+    return slm, sp, llm, lp, mlp
+
+
+@pytest.fixture(scope="module")
+def dep4(parts):
+    slm, sp, llm, lp, mlp = parts
+    return ServingDeployment(slm, sp, llm, lp, mlp,
+                             latency=LatencyModel(**LAT),
+                             timeout_ms=200.0, max_seq=48, page_size=4)
+
+
+def _run(eng, reqs):
+    sched = ContinuousBatchScheduler(eng)
+    for i, (p, mn) in enumerate(reqs):
+        sched.submit(p, mn, greedy=(i % 2 == 0), seed=i)
+    return sched.run()
+
+
+def _assert_same(ref, got):
+    assert [r.rid for r in got] == [r.rid for r in ref]
+    for a, b in zip(ref, got):
+        assert a.text == b.text, (a.rid, a.text, b.text)
+        assert a.stats.tokens == b.stats.tokens
+        assert a.stats.cloud_tokens == b.stats.cloud_tokens
+        assert a.stats.latency_ms == b.stats.latency_ms
+        assert a.stats.fusion_w == b.stats.fusion_w
+
+
+# ------------------------------------------------- growth backpressure
+
+
+@pytest.mark.parametrize("macro_k", [0, 4])
+def test_park_backpressure_bit_identity(dep4, macro_k):
+    """A pool too small for both rows' growth parks one of them
+    (deterministically, youngest first) until pages free — the parked
+    row's stream must stay bit-identical to the roomy-pool engine."""
+    reqs = [(SHORT, 16), (SHORT + " x", 16)]
+    ref = _run(BatchedHybridEngine(deployment=dep4, batch_size=2,
+                                   edge_batch_size=1, macro_k=macro_k,
+                                   paged=True), reqs)
+    assert any(r.stats.tokens == 16 for r in ref)
+    eng = BatchedHybridEngine(deployment=dep4, batch_size=2,
+                              edge_batch_size=1, macro_k=macro_k,
+                              paged=True, pool_pages=9)
+    got = _run(eng, reqs)
+    _assert_same(ref, got)
+    st = eng.growth_stats()
+    assert st["grown_pages"] > 0 and st["parks"] > 0
+    assert st["forced"] == 0
+
+
+@pytest.mark.parametrize("macro_k", [0, 4])
+def test_wedge_evicts_and_resumes(dep4, macro_k):
+    """Sequential admission under a pool that can hold only one row's
+    full depth: the second request soft-waits or is evicted mid-flight,
+    re-prefills from prompt + tokens-so-far once the first completes,
+    and still produces the roomy-pool stream bit for bit."""
+    reqs = [(SHORT, 16), (SHORT + " x", 16)]
+    ref = _run(BatchedHybridEngine(deployment=dep4, batch_size=2,
+                                   edge_batch_size=1, macro_k=macro_k,
+                                   paged=True), reqs)
+    eng = BatchedHybridEngine(deployment=dep4, batch_size=2,
+                              edge_batch_size=1, macro_k=macro_k,
+                              paged=True, pool_pages=7)
+    got = _run(eng, reqs)
+    _assert_same(ref, got)
+    assert all(r.stats.tokens == 16 for r in got)
+
+
+def test_growth_stats_counters(dep4):
+    """The engine's growth telemetry: grown pages count both models,
+    parks/evictions/forced stay zero when the pool is roomy."""
+    eng = BatchedHybridEngine(deployment=dep4, batch_size=2,
+                              edge_batch_size=1, macro_k=0, paged=True)
+    _run(eng, [(SHORT, 16)])
+    st = eng.growth_stats()
+    # 10-token prompt reserves 3+1 pages, decodes to depth 25: pages
+    # 5..7 arrive via growth, on BOTH the SLM and LLM pagers
+    assert st["grown_pages"] >= 6
+    assert st["parks"] == st["evictions"] == st["forced"] == 0
+
+
+# -------------------------------------------------- truncated flag
+
+
+def test_truncated_flag_all_paths(parts):
+    """ISSUE 7 satellite: over-long prompts are no longer clipped
+    silently.  Dense lanes (sequential + batched) keep the clip but
+    say so on the Response; SoloEngine exposes ``last_truncated``."""
+    slm, sp, llm, lp, mlp = parts
+    dep = ServingDeployment(slm, sp, llm, lp, mlp,
+                            latency=LatencyModel(**LAT),
+                            timeout_ms=200.0, max_seq=48)
+    long_p = "x" * 60
+    assert len(TOK.encode(long_p + " ")) > 48
+
+    sched = Scheduler(HybridEngine(deployment=dep))
+    sched.submit(long_p, 4)
+    sched.submit("short one", 4)
+    res = sched.run()
+    assert res[0].truncated and res[0].stats.truncated
+    assert not res[1].truncated
+
+    for paged in (False, True):
+        eng = BatchedHybridEngine(deployment=dep, batch_size=2,
+                                  edge_batch_size=1, macro_k=0,
+                                  paged=paged)
+        res = _run(eng, [(long_p, 4), ("short one", 4)])
+        assert res[0].truncated and not res[1].truncated, paged
+
+    solo = SoloEngine(deployment=ServingDeployment(slm, sp, max_seq=48))
+    solo.generate(long_p, 4)
+    assert solo.last_truncated
+    solo.generate("short one", 4)
+    assert not solo.last_truncated
+
+
+# ------------------------------------------------- FIFO no-starvation
+
+
+def test_fifo_no_overtake_in_burst(dep4):
+    """Within one admission burst, a soft-refused request blocks later
+    arrivals bound for the same lane — smaller requests must not be
+    slotted into pages the waiting head needs."""
+    eng = BatchedHybridEngine(deployment=dep4, batch_size=4,
+                              paged=True, pool_pages=12)
+    assert eng.add_request(SHORT, 16, True, 0)          # 4 lazy pages
+    # big request: lazy demand 3+1=4 > 12-4... fits; occupy more
+    assert eng.add_request(SHORT + " x", 16, True, 1)   # 4 more
+    # head needs 5 pages (16-token prompt), only 4 free -> soft refusal
+    big = "sixteen toks ->"
+    assert len(TOK.encode(big + " ")) == 17
+    flags = eng.add_requests([(big, 16, True, 2),
+                              (SHORT, 4, True, 3)])     # 3 WOULD fit
+    assert flags == [False, False], \
+        "a later small request overtook the soft-refused head"
+    assert eng.pop_rejected() == []
+
+
+def test_fifo_no_starvation_under_stream(dep4):
+    """Regression for the starvation bug: a big request soft-refused
+    once used to be re-queued behind every later small arrival.  Under
+    a sustained small-request stream the big one must still admit in
+    submission order (admit_seq strictly ordered by rid here — every
+    request lands in the same lane)."""
+    eng = BatchedHybridEngine(deployment=dep4, batch_size=2,
+                              edge_batch_size=1, macro_k=0, paged=True,
+                              pool_pages=12)
+    filler = "please fill all the pool"   # 26 toks: 8 lazy pages of 12
+    big = "sixteen toks ->"               # 17 toks: lazy 6 > 4 free
+    assert len(TOK.encode(filler + " ")) == 26
+    assert len(TOK.encode(big + " ")) == 17
+    sched = ContinuousBatchScheduler(eng)
+    sched.submit(filler, 12, greedy=True)
+    sched.submit(big, 16, greedy=True)
+    for _ in range(6):                    # small stream WOULD fit now
+        sched.submit(SHORT, 2, greedy=True)
+    res = sched.run()
+    assert all(r.error is None for r in res)
+    seqs = [r.stats.admit_seq for r in res]
+    assert seqs == sorted(seqs), f"admission overtook FIFO: {seqs}"
+    assert res[1].stats.tokens == 16

@@ -20,6 +20,7 @@ from repro.data import tokenizer as TOK
 from repro.models.attention import FREED_POS
 from repro.models.model import LM
 from repro.serving import paging as PAG
+from repro.serving.deployment import ServingDeployment
 from repro.serving.engine import BatchedHybridEngine
 from repro.serving.latency import LatencyModel
 from repro.serving.scheduler import ContinuousBatchScheduler
@@ -156,6 +157,117 @@ def test_paged_matches_dense_ring(gemma_engine_parts):
     _assert_same(r_dense, r_paged)
 
 
+# ------------------------------------------------- lazy growth (ISSUE 7)
+
+
+@pytest.mark.parametrize("macro_k", [0, 4])
+def test_lazy_matches_worst_case(engine_parts, macro_k):
+    """ISSUE 7 tentpole: lazy reservation (prompt pages + 1, grown at
+    page boundaries) must be token-bit-identical to the PR 6 eager
+    worst-case reservation, greedy + seeded, per-token and macro.
+    With 5-token budgets no row crosses a page boundary, so this pins
+    the reservation-size difference itself (NO_PAGE table tails vs
+    eagerly mapped ones); boundary crossing is pinned below."""
+    reqs = [(p, None) for p in PROMPTS]
+    r_worst = _run_sched(_engine(engine_parts, True, macro_k,
+                                 lazy_pages=False), reqs)
+    r_lazy = _run_sched(_engine(engine_parts, True, macro_k), reqs)
+    _assert_same(r_worst, r_lazy)
+
+
+@pytest.mark.parametrize("macro_k", [0, 4])
+def test_lazy_growth_crosses_boundary(engine_parts, macro_k):
+    """Rows engineered to decode ACROSS a page boundary (prompt just
+    past one page, budget well past the next): growth fires mid-decode
+    and the streams stay bit-identical to the eager reservation."""
+    prompt = "sum 1 and 2"
+    n = len(TOK.encode(prompt + " "))
+    ps = 16       # _engine page size; lazy reserves pages_for(n)+1 = 2
+    assert PAG.pages_for(n, ps) + 1 < PAG.pages_for(min(n + 20, 48), ps)
+    reqs = [(prompt, None), (prompt + " no", None)]
+    r_worst = _run_sched(_engine(engine_parts, True, macro_k,
+                                 lazy_pages=False), reqs, n_tokens=20)
+    eng = _engine(engine_parts, True, macro_k)      # lazy is the default
+    r_lazy = _run_sched(eng, reqs, n_tokens=20)
+    _assert_same(r_worst, r_lazy)
+    # the default pool is worst-case-sized, so growth always succeeds
+    # in place — backpressure never fires, but pages genuinely grew
+    st = eng.growth_stats()
+    assert st["grown_pages"] > 0
+    assert st["parks"] == st["evictions"] == st["forced"] == 0
+
+
+def test_lazy_matches_worst_case_ring(gemma_engine_parts):
+    """Lazy growth under the grouped gemma3 layout (full + ring local
+    leaves): the local ring is reserved eagerly (fixed size), only the
+    full-sequence tables grow."""
+    reqs = [(p, None) for p in PROMPTS]
+    r_worst = _run_sched(_engine(gemma_engine_parts, True,
+                                 lazy_pages=False), reqs, n_tokens=8)
+    r_lazy = _run_sched(_engine(gemma_engine_parts, True), reqs,
+                        n_tokens=8)
+    _assert_same(r_worst, r_lazy)
+
+
+# ----------------------------------------------- chunked prefill (ISSUE 7)
+
+
+def _long_prompt():
+    p = ("sort these numbers ascending please: "
+         "40 12 77 31 55 63 98 2 ->")
+    n = len(TOK.encode(p + " "))
+    assert 48 < n <= 96 - 6 - 1, n      # beyond max_seq, fits max_ctx
+    return p
+
+
+def test_chunked_matches_oneshot(engine_parts):
+    """Chunked prefill must be bit-identical to one-shot prefill for
+    prompts that fit a dense row: chunk_width=16 forces every prompt
+    through the page-by-page streaming path."""
+    reqs = [(p, None) for p in PROMPTS]
+    r_oneshot = _run_sched(_engine(engine_parts, True), reqs)
+    r_chunked = _run_sched(_engine(engine_parts, True, chunk_width=16),
+                           reqs)
+    _assert_same(r_oneshot, r_chunked)
+
+
+def test_chunked_matches_oneshot_ring(gemma_engine_parts):
+    r_oneshot = _run_sched(_engine(gemma_engine_parts, True),
+                           [(p, None) for p in PROMPTS], n_tokens=8)
+    r_chunked = _run_sched(_engine(gemma_engine_parts, True,
+                                   chunk_width=16),
+                           [(p, None) for p in PROMPTS], n_tokens=8)
+    _assert_same(r_oneshot, r_chunked)
+
+
+def test_long_prompt_served(engine_parts):
+    """A prompt longer than the dense row width (max_seq=48) is served
+    untruncated through chunked prefill when the deployment's paged
+    context (max_ctx=96) covers it.  No dense oracle exists above
+    max_seq, so the cross-checks are per-token vs macro agreement and
+    chunk-width invariance (W=48 vs W=16)."""
+    slm, sp, llm, lp, mlp = engine_parts
+    dep = ServingDeployment(slm, sp, llm, lp, mlp,
+                            latency=LatencyModel(**LAT),
+                            timeout_ms=200.0, max_seq=48, max_ctx=96)
+    prompt = _long_prompt()
+
+    def run(**kw):
+        eng = BatchedHybridEngine(deployment=dep, batch_size=2,
+                                  edge_batch_size=1, paged=True, **kw)
+        return _run_sched(eng, [(prompt, None)], n_tokens=6)
+
+    r_tok = run(macro_k=0)
+    assert not r_tok[0].truncated and r_tok[0].stats.tokens == 6
+    _assert_same(r_tok, run(macro_k=4))
+    _assert_same(r_tok, run(macro_k=0, chunk_width=16))
+    # the same prompt on a max_ctx=max_seq deployment is truncated —
+    # and now SAYS so instead of lying by omission
+    r48 = _run_sched(_engine(engine_parts, True), [(prompt, None)],
+                     n_tokens=6)
+    assert r48[0].truncated
+
+
 # ------------------------------------------------------ admission gating
 
 
@@ -217,6 +329,27 @@ def test_page_gated_admission_refusals(engine_parts):
     res = sched.run()
     assert len(res) == 1 and res[0].error is not None
     assert res[0].text == "" and res[0].stats.tokens == 0
+
+
+def test_hard_reject_names_offending_model(engine_parts):
+    """ISSUE 7 satellite: the hard-reject reason must name the model
+    whose pool actually overflowed — an LLM-pool overflow used to be
+    reported as the SLM's demand/capacity."""
+    # SLM pool is the bottleneck
+    eng = _engine(engine_parts, True, batch_size=3, pool_pages=2,
+                  llm_pool_pages=64)
+    assert not eng.add_request("what time is it now", 40, True, 9)
+    (rid, reason), = eng.pop_rejected()
+    assert rid == 9
+    assert reason.startswith("slm page demand 3")
+    assert "exceeds pool capacity 2 pages" in reason
+    # LLM pool is the bottleneck (SLM pool left at the default size)
+    eng = _engine(engine_parts, True, batch_size=3, llm_pool_pages=2)
+    assert not eng.add_request("what time is it now", 40, True, 11)
+    (rid, reason), = eng.pop_rejected()
+    assert rid == 11
+    assert reason.startswith("llm page demand 3")
+    assert "exceeds pool capacity 2 pages" in reason
 
 
 def test_paged_park_release_readmit(engine_parts):
@@ -300,22 +433,31 @@ def _mesh_main():
     slm, llm = LM(scfg, remat=False), LM(lcfg, remat=False)
     sp, lp = slm.init(jax.random.key(0)), llm.init(jax.random.key(1))
     mlp = FUS.init_alignment(jax.random.key(2), scfg.vocab_size)
+    # page_size=4 with 8-token budgets: every short-prompt row's decode
+    # crosses past its prompt-pages+1 reservation, so the lazy run below
+    # genuinely exercises growth scatters on the mesh
     dep = ServingDeployment(slm, sp, llm, lp, mlp,
                             latency=LatencyModel(**LAT), max_seq=48,
-                            mesh=mesh, rules="inference")
+                            page_size=4, mesh=mesh, rules="inference")
 
-    def run(paged):
+    def run(paged, **kw):
         eng = BatchedHybridEngine(deployment=dep, batch_size=4,
                                   edge_batch_size=1, timeout_ms=200.0,
-                                  macro_k=4, paged=paged)
+                                  macro_k=4, paged=paged, **kw)
         sched = ContinuousBatchScheduler(eng)
         for i, p in enumerate(PROMPTS):
-            sched.submit(p, 4, greedy=(i % 2 == 0), seed=i)
+            sched.submit(p, 8, greedy=(i % 2 == 0), seed=i)
         return sched.run(), eng
 
     r_dense, _ = run(False)
     r_paged, eng = run(True)
     _assert_same(r_dense, r_paged, fusion_ulp=4)
+    # lazy growth (the default above) vs eager worst-case reservation:
+    # the growth scatters go through the sharded admission path, and
+    # the token streams must stay bit-identical on the mesh too
+    r_worst, _ = run(True, lazy_pages=False)
+    _assert_same(r_worst, r_paged)
+    assert eng.growth_stats()["grown_pages"] > 0
     # pool leaves genuinely span the mesh (pages over the batch axes)
     lane = eng.cloud_lane
     assert any(not leaf.sharding.is_fully_replicated

@@ -335,6 +335,69 @@ def check_lane_pager(seed: int, n_ops: int = 40):
                 == pager.local_alloc.num_pages)
 
 
+def check_lazy_growth(seed: int, n_ops: int = 60):
+    """ISSUE 7 satellite: random admit/decode-grow/EOS-release
+    interleavings under LAZY reservation (prompt pages + 1, capped at
+    the worst case) never leak, never double-allocate, and never let a
+    row exceed its old worst-case reservation; grown tables always map
+    live pages, and failed growth is an atomic no-op (with ``ungrow``
+    restoring the pre-grow state exactly)."""
+    rng = np.random.RandomState(seed)
+    batch, ps, max_seq, max_ctx = 4, 4, 16, 32
+    pool = int(rng.randint(3, batch * PAG.pages_for(max_ctx, ps) + 1))
+    pager = PAG.LanePager(batch, max_seq, ps, pages=pool,
+                          max_ctx=max_ctx)
+    for _ in range(n_ops):
+        slot = int(rng.randint(batch))
+        row = pager.rows[slot]
+        if row is None:                               # lazy admit
+            prompt_len = int(rng.randint(1, max_seq))
+            max_new = int(rng.randint(1, max_ctx))
+            alloc_len = min(prompt_len + max_new, max_ctx)
+            cap = PAG.pages_for(alloc_len, ps)
+            nf, _ = pager.demand_lazy(prompt_len, alloc_len)
+            assert nf <= cap, "lazy demand beyond the worst case"
+            ff = pager.alloc.free_pages
+            row = pager.admit(slot, nf, cap_pages=cap)
+            if row is None:                           # atomic refusal
+                assert nf > ff and pager.alloc.free_pages == ff
+        elif rng.rand() < 0.6:                        # boundary growth
+            room = row.cap_pages - len(row.full)
+            if room == 0:
+                # saturated: exactly the eager reservation, no more
+                continue
+            n = int(rng.randint(1, room + 1))
+            ff = pager.alloc.free_pages
+            before = list(row.owned)
+            got = pager.grow(slot, n)
+            if got is None:                           # atomic failure
+                assert n > ff and pager.alloc.free_pages == ff
+                assert row.owned == before
+            elif rng.rand() < 0.3:                    # sibling rollback
+                pager.ungrow(slot, got)
+                assert row.owned == before
+                assert pager.alloc.free_pages == ff
+        else:                                         # EOS release
+            pager.release(slot)
+        pager.alloc.check()
+        owned = [p for r in pager.rows if r for p in r.owned]
+        assert len(owned) == len(set(owned)), "page double-allocated"
+        live = {p for p in range(pool) if pager.alloc.refcount(p)}
+        assert live == set(owned), "leaked/lost pages"
+        for r in (r for r in pager.rows if r):
+            assert len(r.full) <= r.cap_pages, \
+                "grew beyond the old worst-case reservation"
+            t = np.asarray(pager.table_row(r))
+            assert list(t[:len(r.full)]) == r.full
+            assert (t[len(r.full):] == PAG.NO_PAGE).all()
+            assert all(pager.alloc.refcount(p) > 0 for p in r.full), \
+                "table maps a dead page"
+    for s in range(batch):
+        pager.release(s)
+    pager.alloc.check()
+    assert pager.alloc.free_pages == pool and pager.alloc.live_pages == 0
+
+
 @given(st.integers(0, 2**31 - 1), st.integers(1, 12))
 @settings(**SET)
 def test_page_allocator_interleavings(seed, num_pages):
@@ -358,6 +421,17 @@ def test_page_allocator_seeded(seed, num_pages):
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 def test_lane_pager_seeded(seed):
     check_lane_pager(seed)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_lazy_growth_interleavings(seed):
+    check_lazy_growth(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_lazy_growth_seeded(seed):
+    check_lazy_growth(seed)
 
 
 def test_page_allocator_raises_on_misuse():
