@@ -10,7 +10,9 @@ cloud-eligible prompts decode in one lockstep batch through the Pallas
 ``logit_fusion`` kernel while private prompts share an SLM-only batch;
 admissions arriving together share one packed B>1 prefill.
 ``--pair gemma3`` serves the mixed-attention edge SLM with ring-cached
-sliding-window layers.
+sliding-window layers.  ``--adapters N --adapter-slots E`` registers N
+per-user LoRA adapters over an E-slot resident cache and spreads the
+requests across users — E < N exercises eviction and soft refusal.
 """
 import argparse
 
@@ -19,6 +21,7 @@ import jax
 from repro.configs.floe_pair import (FLOE_PAIRS, needs_ring_cache,
                                      pair_configs)
 from repro.core import fusion as FUS
+from repro.core import lora as LORA
 from repro.models.model import LM
 from repro.serving.deployment import ServingDeployment
 from repro.serving.latency import LatencyModel
@@ -45,7 +48,17 @@ def main():
     ap.add_argument("--pair", default="2b", choices=sorted(FLOE_PAIRS),
                     help="SLM/LLM pairing; gemma3 = ring-cached "
                          "mixed-attention edge SLM")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="register N per-user LoRA adapters and spread "
+                         "the prompts over them (0 = no adapters)")
+    ap.add_argument("--adapter-slots", type=int, default=0,
+                    help="resident adapter-cache capacity (default: "
+                         "min(N, 2) when --adapters is set)")
+    ap.add_argument("--adapter-rank", type=int, default=2,
+                    help="LoRA rank of the demo adapters")
     args = ap.parse_args()
+    slots = args.adapter_slots or (min(args.adapters, 2)
+                                   if args.adapters else 0)
 
     slm_cfg, llm_cfg = pair_configs(args.pair)
     slm = LM(slm_cfg, remat=False, ring_cache=needs_ring_cache(slm_cfg))
@@ -59,14 +72,24 @@ def main():
         # the schedulers build their engines through it
         dep = ServingDeployment(slm, sp, llm, lp, mlp,
                                 latency=LatencyModel(rtt_ms=rtt, seed=3),
-                                timeout_ms=args.timeout_ms, max_seq=64)
+                                timeout_ms=args.timeout_ms, max_seq=64,
+                                adapter_slots=slots)
         if args.batch > 1:
             sched = ContinuousBatchScheduler.from_deployment(
                 dep, batch_size=args.batch)
         else:
             sched = Scheduler.from_deployment(dep)
-        for p in PROMPTS:
-            sched.submit(p, max_new_tokens=args.tokens)
+        aid_of = [None] * len(PROMPTS)
+        if args.adapters:
+            for j in range(args.adapters):
+                ad = LORA.init_adapter(slm, jax.random.key(100 + j),
+                                       rank=args.adapter_rank)
+                sched.engine.adapters.register(f"user{j}", ad)
+            # round-robin users over the prompts, one adapter-free row
+            aid_of = [f"user{i % args.adapters}" if i + 1 < len(PROMPTS)
+                      else None for i in range(len(PROMPTS))]
+        for p, aid in zip(PROMPTS, aid_of):
+            sched.submit(p, max_new_tokens=args.tokens, adapter_id=aid)
         responses = sched.run()
         for r in responses:
             tag = "PRIVATE" if r.stats.private else (
@@ -75,6 +98,8 @@ def main():
                   f"cloud={r.stats.cloud_tokens}/{r.stats.tokens} "
                   f"w~{sum(r.stats.fusion_w)/max(1,len(r.stats.fusion_w)):.2f}")
         print(summarize(responses))
+        if args.adapters:
+            print(f"adapter cache: {sched.engine.adapter_stats()}")
 
 
 if __name__ == "__main__":

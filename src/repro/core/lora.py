@@ -83,6 +83,65 @@ def single_expert_bank(adapter: Dict[str, Any]) -> Dict[str, Any]:
     return stack_adapters([adapter])
 
 
+# ---------------------------------------------------------------- slot banks
+# A *slot bank* is a fixed-shape E-slot device bank serving a registry of
+# N >> E adapters (serving/adapters.py AdapterCache): slots are written /
+# overwritten at runtime, so pjit specialises once on (E, r_max) and never
+# again.  An empty slot is an exact no-op adapter — A and B both zero, so
+# Δy = Σ_j ω_j B_j A_j x contributes exactly 0.0 for any gate — and a row
+# selects its slot with a one-hot gate vector (``slot_gates``), riding the
+# same per-row gates plumbing the router path uses.
+
+
+def empty_bank(model, num_slots: int, r_max: Optional[int] = None,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    """All-zero bank with ``num_slots`` slots (stack_adapters layout:
+    A (*dims, E, r_max, din), B (*dims, E, dout, r_max), "_ranks" (E,))."""
+    r_max = r_max or model.cfg.lora_rank_max
+    layout = model.lora_layout()
+    out: Dict[str, Any] = {"_ranks": jnp.zeros((num_slots,), jnp.int32)}
+    for stack, (dims, targets) in sorted(layout.items()):
+        st = {}
+        for tgt, (din, dout) in sorted(targets.items()):
+            st[tgt] = {"A": jnp.zeros(dims + (num_slots, r_max, din),
+                                      dtype),
+                       "B": jnp.zeros(dims + (num_slots, dout, r_max),
+                                      dtype)}
+        out[stack] = st
+    return out
+
+
+def write_slot(bank: Dict[str, Any], adapter: Dict[str, Any],
+               slot) -> Dict[str, Any]:
+    """Functionally write one adapter (init_adapter tree, no expert axis)
+    into slot ``slot`` of a bank.  ``slot`` may be a traced int32 so a
+    jitted (donating) wrapper compiles once for every slot."""
+    slot = jnp.asarray(slot, jnp.int32)
+    body = {k: v for k, v in bank.items() if not k.startswith("_")}
+    abody = {k: v for k, v in adapter.items() if k != "_rank"}
+
+    def wr(t, leaf):
+        tm = jnp.moveaxis(t, t.ndim - 3, 0)
+        tm = tm.at[slot].set(leaf.astype(t.dtype))
+        return jnp.moveaxis(tm, 0, t.ndim - 3)
+
+    new = jax.tree.map(wr, body, abody)
+    new["_ranks"] = bank["_ranks"].at[slot].set(
+        jnp.asarray(adapter["_rank"], jnp.int32))
+    return new
+
+
+def slot_gates(slots: Sequence[int], num_slots: int) -> np.ndarray:
+    """(B, E) one-hot gate rows selecting each row's slot; a negative
+    slot (no adapter) yields an all-zero row — with zero-filled empty
+    slots the delta is exactly 0.0, bitwise a no-LoRA row."""
+    rows = np.zeros((len(slots), num_slots), np.float32)
+    for i, s in enumerate(slots):
+        if s is not None and int(s) >= 0:
+            rows[i, int(s)] = 1.0
+    return rows
+
+
 def adapter_vector(adapter: Dict[str, Any], dim: int = 64,
                    seed: int = 0) -> np.ndarray:
     """Fixed random projection of the flattened adapter -> R^dim.

@@ -64,3 +64,50 @@ def moe_lora_delta(x, a, b, gates, *, block_t: int = 128,
         scratch_shapes=[pltpu.VMEM((bt, n), jnp.float32)],
         interpret=interpret,
     )(x, a, b, gates)
+
+
+def _moe_lora_slots_kernel(slots_ref, x_ref, a_ref, b_ref, o_ref):
+    s = slots_ref[pl.program_id(0)]
+    valid = (s >= 0).astype(jnp.float32)           # negative slot -> 0.0
+    x = x_ref[...].astype(jnp.float32)             # (1, k)
+    a = a_ref[0].astype(jnp.float32)               # (r, k)
+    bmat = b_ref[0].astype(jnp.float32)            # (n, r)
+    u = jnp.dot(x, a.T, preferred_element_type=jnp.float32)
+    o_ref[...] = (valid * jnp.dot(
+        u, bmat.T, preferred_element_type=jnp.float32)).astype(o_ref.dtype)
+
+
+def moe_lora_delta_slots(x, a, b, slots, *, interpret: bool = False):
+    """x: (T, k); a: (E, r, k); b: (E, n, r); slots: (T,) int32 -> (T, n).
+
+    Per-row slot-gather variant of ``moe_lora_delta`` for a ONE-HOT gate
+    matrix: row t applies only slot[t]'s adapter, so the dense Σ over E
+    is skipped entirely — the scalar-prefetched slot ids drive the
+    BlockSpec index maps (the adapter analogue of the paged-attention
+    block-table gather), DMA-ing exactly one (r,k)+(n,r) expert per row.
+    Negative slots (adapter-free rows) are clamped onto slot 0 for the
+    fetch and masked to an exact 0.0 in-kernel, matching the all-zero
+    gate row of the dense path bit for bit."""
+    t, k = x.shape
+    e, r, _ = a.shape
+    n = b.shape[1]
+
+    def expert_map(ti, slots_ref):
+        return (jnp.clip(slots_ref[ti], 0, e - 1), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda ti, slots_ref: (ti, 0)),
+            pl.BlockSpec((1, r, k), expert_map),
+            pl.BlockSpec((1, n, r), expert_map),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda ti, slots_ref: (ti, 0)),
+    )
+    return pl.pallas_call(
+        _moe_lora_slots_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), x, a, b)

@@ -6,7 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.moe_lora.kernel import moe_lora_delta
+from repro.kernels.moe_lora.kernel import moe_lora_delta, moe_lora_delta_slots
 
 
 def _on_cpu() -> bool:
@@ -25,4 +25,18 @@ def lora_apply(x, w, a, b, gates, block_t: int = 128):
     base = xf @ w
     delta = moe_lora_delta(xf, a, b, gf, block_t=block_t,
                            interpret=_on_cpu())
+    return (base + delta.astype(base.dtype)).reshape(*lead, w.shape[1])
+
+
+@jax.jit
+def lora_apply_slots(x, w, a, b, slots):
+    """x: (..., k); w: (k, n); a: (E,r,k); b: (E,n,r); slots: (...,)
+    int32 per-row adapter slots (negative = no adapter).  The one-hot
+    fast path of ``lora_apply``: slot-gathered, no dense Σ over E."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xf = x.reshape(-1, k)
+    sf = slots.reshape(-1)
+    base = xf @ w
+    delta = moe_lora_delta_slots(xf, a, b, sf, interpret=_on_cpu())
     return (base + delta.astype(base.dtype)).reshape(*lead, w.shape[1])

@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the merged multi-LoRA delta (Eq. 8)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -10,3 +11,13 @@ def moe_lora_delta_ref(x, a, b, gates):
                    a.astype(jnp.float32))
     u = u * gates.astype(jnp.float32)[:, :, None]
     return jnp.einsum("ter,enr->tn", u, b.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_lora_delta_slots_ref(x, a, b, slots):
+    """Slot-gather oracle: one-hot rows through the DENSE reference
+    (negative slots -> all-zero gate row, an exact 0.0 delta)."""
+    e = a.shape[0]
+    slots = jnp.asarray(slots, jnp.int32)
+    gates = jax.nn.one_hot(slots, e, dtype=jnp.float32)
+    gates = gates * (slots >= 0).astype(jnp.float32)[:, None]
+    return moe_lora_delta_ref(x, a, b, gates)

@@ -85,6 +85,19 @@ def main():
                     help="non-greedy decoding (per-request PRNG keys)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="root seed of the per-request sampling keys")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="with --local: register N per-user LoRA "
+                         "adapters and spread the demo requests over "
+                         "them (requests keep adapter-free rows in the "
+                         "mix); requires --adapter-slots")
+    ap.add_argument("--adapter-slots", type=int, default=0,
+                    help="resident adapter-cache capacity E: the fixed-"
+                         "slot device bank mixed per-row into every "
+                         "decode dispatch (0 = no adapter serving; "
+                         "E < --adapters exercises eviction)")
+    ap.add_argument("--adapter-rank", type=int, default=4,
+                    help="LoRA rank of the demo adapters (bank slots "
+                         "are padded to the model's r_max)")
     from repro.configs.floe_pair import FLOE_PAIRS
     ap.add_argument("--pair", default="2b", choices=sorted(FLOE_PAIRS),
                     help="SLM/LLM pairing; 'gemma3' serves the mixed-"
@@ -96,6 +109,12 @@ def main():
     if args.model_parallel and args.mesh_devices <= 1:
         ap.error("--model-parallel requires --mesh-devices > 1 (it "
                  "overrides the serving mesh's model-axis width)")
+    if args.adapters and not args.adapter_slots:
+        ap.error("--adapters requires --adapter-slots > 0 (the "
+                 "resident device-bank capacity)")
+    if args.adapters and not args.local:
+        ap.error("--adapters requires --local (adapter serving runs "
+                 "on the real engine, not the dry-run lowering)")
 
     if args.local:
         import jax
@@ -126,7 +145,9 @@ def main():
             latency=LatencyModel(rtt_ms=args.rtt_ms),
             timeout_ms=args.timeout_ms, sample_seed=args.sample_seed,
             mesh=mesh, rules=args.rules, page_size=args.page_size,
-            max_ctx=args.max_ctx or None)
+            max_ctx=args.max_ctx or None,
+            adapter_slots=args.adapter_slots,
+            adapter_rank=args.adapter_rank)
         if mesh is not None:
             pd = dep.per_device_param_bytes()
             print(f"per-device param bytes: {pd['total_bytes']} "
@@ -145,14 +166,28 @@ def main():
                   f"pool capacity {eng.kv_pool_bytes()}B")
         else:
             sched = Scheduler.from_deployment(dep)
-        for prompt in [
+        aids = []
+        if args.adapters:
+            from repro.core import lora as LORA
+            for j in range(args.adapters):
+                ad = LORA.init_adapter(slm, jax.random.key(100 + j),
+                                       rank=args.adapter_rank,
+                                       r_max=dep.adapter_rank)
+                sched.engine.adapters.register(f"user{j}", ad)
+            print(f"adapters: {args.adapters} registered over "
+                  f"{args.adapter_slots} resident slots "
+                  f"(rank {args.adapter_rank})")
+            # round-robin user ids, one adapter-free row in the mix
+            aids = [f"user{j % args.adapters}" for j in range(3)] + [None]
+        for i, prompt in enumerate([
             "math: compute 12 plus 7 =",
             "my ssn is 123-45-6789, fill the benefits form",
             "translate to french: water ->",
             "my doctor said my blood pressure is 140 over 90",
-        ]:
+        ]):
             sched.submit(prompt, max_new_tokens=8,
-                         greedy=not args.sample)
+                         greedy=not args.sample,
+                         adapter_id=aids[i] if aids else None)
         res = sched.run()
         for r in res:
             print(f"[{r.rid}] private={r.stats.private} "
@@ -160,6 +195,8 @@ def main():
                   f"lat={r.stats.mean_latency_ms:.0f}ms "
                   f"wait={r.queue_wait_seconds * 1e3:.0f}ms  {r.text!r}")
         print(summarize(res))
+        if args.adapters:
+            print(f"adapter cache: {sched.engine.adapter_stats()}")
         return
 
     from repro.launch.dryrun import run_fusion, run_one

@@ -107,6 +107,37 @@ def bank_shardings(lora_tree: Any, mesh: Mesh,
     return jax.tree.map(f, lora_tree)
 
 
+def slot_bank_shardings(bank_tree: Any, mesh: Mesh,
+                        rules: Optional[Dict[str, Optional[str]]] = None
+                        ) -> Any:
+    """Per-leaf NamedShardings for a fixed-slot adapter bank
+    (core/lora.py ``empty_bank`` / ``write_slot``).
+
+    Unlike the router expert bank (``bank_shardings``), the slot axis
+    must stay REPLICATED: every batch shard's rows gather arbitrary
+    slots per-row through their one-hot gates, so slicing slots over
+    ("pod","data") would strand a row's adapter on another shard.  The
+    wide non-rank dim instead goes over the rule set's tensor axis
+    ("model") when divisible — A's d_in at ndim-1, B's d_out at
+    ndim-2 — matching the weight-stationary decode layout of the base
+    projections the deltas add onto.  Leaves below ndim 3 ("_ranks")
+    and indivisible dims replicate."""
+    rules = rules or RULES_INFERENCE
+    sizes = dict(mesh.shape)
+    ax = rules.get("d_ff", "model")
+
+    def f(path, leaf):
+        spec = [None] * leaf.ndim
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        wide = leaf.ndim - 1 if name == "A" else leaf.ndim - 2
+        if (ax and ax in sizes and sizes[ax] > 1 and leaf.ndim >= 3
+                and leaf.shape[wide] % sizes[ax] == 0):
+            spec[wide] = ax
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, bank_tree)
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Mesh axes used for batch data parallelism."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

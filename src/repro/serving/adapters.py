@@ -1,0 +1,158 @@
+"""Resident adapter cache — per-user LoRA at serving scale.
+
+The paper's federated-personalization claim (Sec. III-B; PrivateLoRA's
+per-client low-rank residuals) means every user brings an adapter, and
+a lane batch must mix arbitrary users in ONE dispatch.  The device side
+is a fixed E-slot bank (core/lora.py ``empty_bank``) whose static
+(E, r_max) shapes keep pjit from ever re-specialising; this module is
+the HOST side: a refcounted registry-to-slot mapping with the same
+residency semantics the KV page pool uses (serving/paging.py):
+
+  * ``register`` puts an adapter (host tree) in the registry — the set
+    of ids ``submit(adapter_id=)`` may name.  Unknown ids are a HARD
+    reject (``UnknownAdapter``), mirroring a page demand beyond pool
+    capacity.
+  * ``acquire`` pins an adapter into a slot: resident -> refcount bump
+    (a hit); else a free or evictable (refcount-0, least-recently-used)
+    slot is written through the deployment's donating
+    ``write_adapter_slot`` entry point (a load, possibly an eviction);
+    no slot available -> None (a SOFT refusal — the admission gate
+    retries when refcounts drop, FIFO like page refusals).
+  * ``release`` drops one pin (EOS collect / eviction resume keeps its
+    pin, so a parked request's slot can never be stolen from under it).
+
+Determinism contract: eviction picks the least-recently-used among
+refcount-0 slots (ties -> lowest slot index), driven only by the
+acquire/release order — so a replayed trace maps adapters to the same
+slots, and the one-hot gate math makes outputs slot-position-invariant
+anyway (every non-selected slot contributes an exact 0.0).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+
+class UnknownAdapter(KeyError):
+    """Raised when an adapter id was never registered — a hard reject
+    (the request can never run), not a retryable refusal."""
+
+
+class AdapterCache:
+    """Host bookkeeping for an E-slot device adapter bank.
+
+    ``bank`` is the placed device bank this cache OWNS (the donating
+    ``write`` consumes and replaces it — engines must read ``bank``
+    through the cache, never hold a stale reference); ``write`` is
+    ``(bank, adapter, slot) -> bank``.  Both may be None for pure
+    bookkeeping (property tests)."""
+
+    def __init__(self, num_slots: int, bank: Any = None,
+                 write: Optional[Callable] = None):
+        assert num_slots >= 0
+        self.num_slots = num_slots
+        self.bank = bank
+        self._write = write
+        self.registry: Dict[Any, Any] = {}
+        self.adapter_in: List[Optional[Any]] = [None] * num_slots
+        self.refs: List[int] = [0] * num_slots
+        self._used: List[int] = [0] * num_slots   # LRU clock per slot
+        self._clock = 0
+        self._stats = dict(hits=0, loads=0, evictions=0, refusals=0)
+
+    # ------------------------------------------------------------ registry
+    def register(self, adapter_id: Any, adapter: Any):
+        """Add (or replace) a registry entry.  Replacing an id whose
+        adapter is resident drops the stale residency so the next
+        acquire reloads the new weights."""
+        if adapter_id in self.registry:
+            slot = self.slot_of(adapter_id)
+            if slot is not None:
+                assert self.refs[slot] == 0, \
+                    f"adapter {adapter_id!r} replaced while pinned"
+                self.adapter_in[slot] = None
+        self.registry[adapter_id] = adapter
+
+    def known(self, adapter_id: Any) -> bool:
+        return adapter_id in self.registry
+
+    def slot_of(self, adapter_id: Any) -> Optional[int]:
+        for s, aid in enumerate(self.adapter_in):
+            if aid == adapter_id:
+                return s
+        return None
+
+    # ----------------------------------------------------------- residency
+    def _touch(self, slot: int):
+        self._clock += 1
+        self._used[slot] = self._clock
+
+    def acquire(self, adapter_id: Any) -> Optional[int]:
+        """Pin ``adapter_id`` into a slot and return it; None = soft
+        refusal (every slot pinned).  Raises UnknownAdapter for ids
+        never registered."""
+        if adapter_id not in self.registry:
+            raise UnknownAdapter(
+                f"unknown adapter id {adapter_id!r}: register it before "
+                f"submitting requests that name it")
+        slot = self.slot_of(adapter_id)
+        if slot is not None:
+            self.refs[slot] += 1
+            self._stats["hits"] += 1
+            self._touch(slot)
+            return slot
+        slot = self._claim_slot()
+        if slot is None:
+            self._stats["refusals"] += 1
+            return None
+        if self.adapter_in[slot] is not None:
+            self._stats["evictions"] += 1
+        self.adapter_in[slot] = adapter_id
+        self.refs[slot] = 1
+        self._stats["loads"] += 1
+        self._touch(slot)
+        if self._write is not None:
+            self.bank = self._write(self.bank,
+                                    self.registry[adapter_id], slot)
+        return slot
+
+    def _claim_slot(self) -> Optional[int]:
+        """A free slot if any, else the least-recently-used refcount-0
+        slot (lowest index on ties); None when every slot is pinned."""
+        for s in range(self.num_slots):
+            if self.adapter_in[s] is None:
+                return s
+        best = None
+        for s in range(self.num_slots):
+            if self.refs[s] == 0 and (best is None
+                                      or self._used[s] < self._used[best]):
+                best = s
+        return best
+
+    def release(self, slot: int):
+        assert 0 <= slot < self.num_slots and self.refs[slot] > 0, \
+            f"release of unpinned slot {slot}"
+        self.refs[slot] -= 1
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        """hits/loads/evictions/refusals counters plus current
+        residency."""
+        out = dict(self._stats)
+        out["resident"] = sum(a is not None for a in self.adapter_in)
+        out["pinned"] = sum(r > 0 for r in self.refs)
+        return out
+
+    def check(self):
+        """Invariants (property-test hook): refcounts non-negative and
+        only on occupied slots, no slot aliasing, resident set within
+        the registry."""
+        assert len(self.adapter_in) == len(self.refs) == self.num_slots
+        seen = set()
+        for s, (aid, r) in enumerate(zip(self.adapter_in, self.refs)):
+            assert r >= 0, (s, r)
+            if aid is None:
+                assert r == 0, f"refs on empty slot {s}"
+            else:
+                assert aid not in seen, f"adapter {aid!r} in two slots"
+                seen.add(aid)
+                assert aid in self.registry, f"resident {aid!r} unknown"

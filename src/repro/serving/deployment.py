@@ -94,7 +94,9 @@ class ServingDeployment:
                  timeout_ms: float = 200.0, max_seq: int = 96,
                  sample_seed: int = 0, mesh: Optional[Mesh] = None,
                  rules="inference", block_b: int = 4,
-                 page_size: int = 16, max_ctx: Optional[int] = None):
+                 page_size: int = 16, max_ctx: Optional[int] = None,
+                 adapter_slots: int = 0,
+                 adapter_rank: Optional[int] = None):
         assert slm is not None, "a deployment needs at least one model"
         # paged lanes gather exactly table_width * page_size slots back
         # into the dense rowwise layout; requiring page-aligned max_seq
@@ -138,6 +140,35 @@ class ServingDeployment:
         self.llm_params = self._place(llm_params, self.llm_param_shardings)
         self.mlp = self._place(alignment_mlp, self.mlp_shardings)
         self.lora = self._place(lora, self.lora_shardings)
+
+        # ---- per-user adapter slot bank: a fixed E-slot device bank
+        # serving a registry of N >> E adapters (serving/adapters.py).
+        # Slots must be REPLICATED across the batch shards (any row
+        # gathers any slot through its one-hot gates) with the wide
+        # projection dims over "model" — slot_bank_shardings, NOT the
+        # expert-parallel bank_shardings above.  write_adapter_slot is
+        # the ONE compiled mutation path: it donates the bank, so the
+        # AdapterCache owning it must replace its reference per write.
+        self.adapter_slots = adapter_slots
+        self.adapter_rank = (adapter_rank or slm.cfg.lora_rank_max) \
+            if adapter_slots else 0
+        self.adapter_bank_shardings = None
+        self.write_adapter_slot = None
+        if adapter_slots:
+            abs_bank = jax.eval_shape(
+                lambda: LORA.empty_bank(slm, adapter_slots,
+                                        self.adapter_rank))
+            if mesh is not None:
+                self.adapter_bank_shardings = SH.slot_bank_shardings(
+                    abs_bank, mesh, self.rules)
+            kw: Dict[str, Any] = {}
+            if self.adapter_bank_shardings is not None:
+                kw = dict(
+                    in_shardings=(self.adapter_bank_shardings, None,
+                                  None),
+                    out_shardings=self.adapter_bank_shardings)
+            self.write_adapter_slot = jax.jit(
+                LORA.write_slot, donate_argnums=(0,), **kw)
 
         # ---- lane-cache layout (structural batch-axis discovery)
         self.slm_axes = cache_batch_axes(slm, max_seq)
@@ -316,6 +347,24 @@ class ServingDeployment:
         out["total_bytes"] = total
         out["replicated_bytes"] = rep
         return out
+
+    # ------------------------------------------------------ adapter bank
+    def init_adapter_bank(self):
+        """A fresh all-zero slot bank, placed per the slot-bank rules.
+        Every AdapterCache gets its OWN bank (``write_adapter_slot``
+        donates its input, so two caches can never share a buffer)."""
+        assert self.adapter_slots, \
+            "deployment built without adapter_slots"
+        bank = LORA.empty_bank(self.slm, self.adapter_slots,
+                               self.adapter_rank)
+        return self._place(bank, self.adapter_bank_shardings)
+
+    def make_adapter_cache(self):
+        """Host-side refcounted residency manager over a fresh slot
+        bank, wired to the donating compiled write path."""
+        from repro.serving.adapters import AdapterCache
+        return AdapterCache(self.adapter_slots, self.init_adapter_bank(),
+                            self.write_adapter_slot)
 
     # ------------------------------------------------------- lane layout
     def axes_for(self, lm):

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import lora as LORA
 from repro.core.privacy import PrivacyDetector
 from repro.core.router import Router
 from repro.data import tokenizer as TOK
@@ -33,6 +34,38 @@ from repro.models import attention as ATT
 from repro.serving import paging as PAG
 from repro.serving.deployment import ServingDeployment
 from repro.serving.latency import LatencyModel
+
+_BANK_NEEDS_GATING = (
+    "expert_bank is set but nothing gates it — the bank would be "
+    "silently dropped.  Pass router= to serve router-gated experts, or "
+    "build the ServingDeployment with adapter_slots= and submit per-user "
+    "requests with adapter_id=")
+
+
+def _admission_gates(eng, items: List[Tuple[str, Optional[int]]],
+                     bp: Optional[int] = None):
+    """One (n, E) gate-row block per admission group — THE single gate
+    constructor for every admission flavour (burst, B=1, packed paged,
+    chunked).  ``items`` is [(prompt, adapter_slot)]; emits one-hot
+    adapter-slot gates on an adapter-serving engine (slot None -> an
+    all-zero row: with zero-filled empty slots the LoRA delta is an
+    exact 0.0) or the legacy router softmax gates, zero-padded to ``bp``
+    rows for packed prefills — the same np.stack + zero-pad discipline
+    the four admission paths each hand-rolled, so the router path stays
+    bit-for-bit.  None when the engine serves no LoRA at all."""
+    if eng.adapters is not None:
+        rows = LORA.slot_gates([a for _, a in items],
+                               eng.adapters.num_slots)
+    elif eng.router is not None and eng.bank is not None:
+        rows = np.stack([np.asarray(eng.router.gate_weights(p))
+                         for p, _ in items])
+    else:
+        return None
+    if bp is not None:
+        g = np.zeros((bp, rows.shape[1]), rows.dtype)
+        g[:rows.shape[0]] = rows
+        rows = g
+    return jnp.asarray(rows)
 
 
 def _reject_deployment_args(**named):
@@ -108,10 +141,46 @@ class HybridEngine:
         self.timeout_ms = deployment.timeout_ms
         self.max_seq = deployment.max_seq
         self.sample_seed = deployment.sample_seed
-        # placed LoRA bank, consumed only when a router gates it
-        self.lora = (deployment.lora
-                     if router is not None and self.bank is not None
-                     else None)
+        # per-user adapter serving: the engine's OWN refcounted slot
+        # cache over a fresh device bank (write_adapter_slot donates,
+        # so caches never share buffers)
+        self.adapters = (deployment.make_adapter_cache()
+                         if deployment.adapter_slots else None)
+        if self.bank is not None and router is None:
+            raise ValueError(_BANK_NEEDS_GATING)
+        if self.bank is not None and self.adapters is not None:
+            raise ValueError(
+                "router-gated expert bank and per-user adapter slots "
+                "are mutually exclusive — one lane gates buffer cannot "
+                "carry both semantics")
+        # placed router-gated LoRA bank (legacy); adapter-serving
+        # engines read the slot bank through the ``lora`` property
+        self._lora = (deployment.lora
+                      if router is not None and self.bank is not None
+                      else None)
+
+    @property
+    def lora(self):
+        """The LoRA tree the compiled entry points consume: the adapter
+        cache's LIVE slot bank (re-read every dispatch — slot writes
+        donate and replace the buffer), the placed router bank, or
+        None.  Never hold this across a ``write_adapter_slot``."""
+        if self.adapters is not None:
+            return LORA.bank_for_model(self.adapters.bank)
+        return self._lora
+
+    def adapter_stats(self) -> Dict[str, int]:
+        """Residency telemetry of the per-user adapter cache: hits,
+        loads, evictions, refusals, plus resident/pinned slot counts.
+        Empty on engines without adapter slots."""
+        return self.adapters.stats() if self.adapters is not None else {}
+
+    def _release_adapter(self, s: "_Slot"):
+        """Drop a finished request's slot pin (EOS collect / forced
+        completion).  Evicted-but-unfinished rows KEEP their pin — the
+        slot must survive until their deterministic resume."""
+        if self.adapters is not None and s.aslot is not None:
+            self.adapters.release(s.aslot)
 
     def _sample_key(self, rid: Optional[int]):
         """Per-request PRNG root; fold_in(step) yields per-token keys, so
@@ -122,20 +191,36 @@ class HybridEngine:
     # ------------------------------------------------------------- public
     def generate(self, prompt: str, max_new_tokens: int = 16,
                  greedy: bool = True, rid: Optional[int] = None,
-                 sample_key_id: Optional[int] = None
+                 sample_key_id: Optional[int] = None,
+                 adapter_id: Optional[Any] = None
                  ) -> Tuple[str, GenStats]:
         """rid, when given, keys both the latency draws and the sampling
         PRNG per (request, token) — order-independent, so batched and
         sequential serving see identical network weather and samples.
         ``sample_key_id`` (a caller-supplied per-request seed, plumbed
         from ``Scheduler.submit``) overrides rid in the sampling key
-        derivation only — latency draws stay keyed by rid."""
+        derivation only — latency draws stay keyed by rid.
+        ``adapter_id`` pins a registered per-user adapter for the whole
+        request (the solo reference the batched per-row path must match
+        bit for bit); unknown ids raise ``adapters.UnknownAdapter``."""
         dep = self.dep
         stats = GenStats()
         stats.private = self.detector.detect(prompt)
         gates = None
         lora = None
-        if self.router is not None and self.bank is not None:
+        aslot = None
+        if adapter_id is not None:
+            if self.adapters is None:
+                raise ValueError(
+                    "adapter_id= needs a deployment built with "
+                    "adapter_slots=")
+            aslot = self.adapters.acquire(adapter_id)
+            if aslot is None:       # pragma: no cover (B=1 releases)
+                raise RuntimeError("no adapter slot free")
+            gates = jnp.asarray(
+                LORA.slot_gates([aslot], self.adapters.num_slots))
+            lora = self.lora
+        elif self.router is not None and self.bank is not None:
             gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
             lora = self.lora
         sample_key = self._sample_key(
@@ -197,6 +282,8 @@ class HybridEngine:
                 l_logits, l_cache = dep.llm_decode(self.llm_params,
                                                    l_cache, t)
                 ll = l_logits[:, 0]
+        if aslot is not None:
+            self.adapters.release(aslot)
         return TOK.decode(out_ids), stats
 
 
@@ -223,6 +310,10 @@ class _Slot:
     prompt_ids: List[int] = field(default_factory=list)
     full_text: str = ""
     parked: bool = False
+    # per-user adapter: the pinned slot in the engine's AdapterCache
+    # (released at completion, NOT at eviction — a parked request's
+    # adapter must stay resident for its bit-identical resume)
+    aslot: Optional[int] = None
 
 
 @dataclass
@@ -244,6 +335,7 @@ class _PagedJob:
     seq: int = -1                    # admission order
     truncated: bool = False
     resume: Any = None               # evicted _Slot to restore, or None
+    aslot: Optional[int] = None      # pinned adapter slot, or None
 
 
 class _Lane:
@@ -295,6 +387,11 @@ class _Lane:
     def _alloc(self, vocab: int, n_experts: Optional[int]):
         dep = self.eng.dep
         b = self.batch
+        if n_experts is None and self.eng.adapters is not None:
+            # adapter-serving lanes always carry a gates buffer: the
+            # first admission may be adapter-free (zero rows) but later
+            # rows scatter their one-hot slot gates into it
+            n_experts = self.eng.adapters.num_slots
 
         def pool_pages(pager):
             lp = (pager.local_alloc.num_pages
@@ -346,10 +443,6 @@ class _Lane:
                 self._admit_one(*j)
             return
         n = len(jobs)
-        gates_rows = None
-        if eng.router is not None and eng.bank is not None:
-            gates_rows = np.stack([np.asarray(eng.router.gate_weights(p))
-                                   for _, p, *_ in jobs])
         raw = [TOK.encode(p + " ") for _, p, *_ in jobs]
         caps = [eng.max_seq - mn - 1 for _, _, mn, *_ in jobs]
         trunc = [len(r) > c for r, c in zip(raw, caps)]
@@ -363,11 +456,7 @@ class _Lane:
             toks[j, :len(seq)] = seq
         lens_p = np.ones((bp,), np.int32)      # pad rows: length-1 dummies
         lens_p[:n] = lens
-        g = None
-        if gates_rows is not None:
-            g = np.zeros((bp, gates_rows.shape[1]), gates_rows.dtype)
-            g[:n] = gates_rows
-            g = jnp.asarray(g)
+        g = _admission_gates(eng, [(j[1], j[7]) for j in jobs], bp=bp)
         toks_j, lens_j = jnp.asarray(toks), jnp.asarray(lens_p)
         s_logits, s_cache = dep.slm_prefill_packed(
             eng.slm_params, toks_j, lens_j, eng.lora, g)
@@ -388,24 +477,24 @@ class _Lane:
         if g is not None:
             self.gates = dep.insert_row(self.gates, g, src, dst)
         for jdx, (slot, prompt, max_new, greedy, rid, private,
-                  key_id) in enumerate(jobs):
+                  key_id, aslot) in enumerate(jobs):
             seq = eng._next_seq()
             st = GenStats(private=private, truncated=trunc[jdx],
                           admit_seq=seq)
             self.slots[slot] = _Slot(rid, max_new, greedy, st,
                                      key_id=key_id, seq=seq,
-                                     prompt_len=len(ids[jdx]))
+                                     prompt_len=len(ids[jdx]),
+                                     aslot=aslot)
 
     def _admit_one(self, slot: int, prompt: str, max_new: int,
                    greedy: bool, rid: int, private: bool,
-                   key_id: Optional[int] = None):
+                   key_id: Optional[int] = None,
+                   aslot: Optional[int] = None):
         """Legacy per-request B=1 prefill (kept as the burst-admission
         benchmark baseline and a bit-exact reference path)."""
         eng = self.eng
         dep = eng.dep
-        gates_row = None
-        if eng.router is not None and eng.bank is not None:
-            gates_row = jnp.asarray(eng.router.gate_weights(prompt))[None, :]
+        gates_row = _admission_gates(eng, [(prompt, aslot)])
         raw = TOK.encode(prompt + " ")
         cap = eng.max_seq - max_new - 1
         ids = raw[:cap]
@@ -430,7 +519,7 @@ class _Lane:
                                           truncated=len(raw) > cap,
                                           admit_seq=seq),
                                  key_id=key_id, seq=seq,
-                                 prompt_len=len(ids))
+                                 prompt_len=len(ids), aslot=aslot)
 
     # ----------------------------------------------------- paged admission
     def ensure_prefix(self, prefix: str):
@@ -470,7 +559,11 @@ class _Lane:
                 self.pager_s.alloc.release(pids_s)
                 return None
         toks = jnp.asarray([pre_ids], jnp.int32)
-        hist_s = dep.slm_build_prefix(eng.slm_params, toks, eng.lora, None)
+        # shared preambles are LoRA-free by construction (the COW gate
+        # requires router is None and adapter_id is None), so never pass
+        # a bank here: with gates=None, lora_delta would apply an
+        # UNGATED sum over every slot
+        hist_s = dep.slm_build_prefix(eng.slm_params, toks, None, None)
         content = eng.slm.prefix_page_rows(hist_s, share_len, ps,
                                            eng.max_seq)
         self.s_cache = dep.insert_slm_prefix(
@@ -531,7 +624,7 @@ class _Lane:
                            admit_seq=j.seq),
                   key_id=j.key_id, seq=j.seq,
                   prompt_len=len(j.ids), prompt_ids=list(j.ids),
-                  full_text=j.prompt)
+                  full_text=j.prompt, aslot=j.aslot)
         self.slots[j.slot] = s
 
     def _pad_group(self, ids: List[List[int]], width_cap: int):
@@ -573,19 +666,10 @@ class _Lane:
         eng = self.eng
         dep = eng.dep
         n = len(jobs)
-        gates_rows = None
-        if eng.router is not None and eng.bank is not None:
-            gates_rows = np.stack(
-                [np.asarray(eng.router.gate_weights(j.prompt))
-                 for j in jobs])
         toks_j, lens_j = self._pad_group([j.ids for j in jobs],
                                          eng.max_seq)
-        g = None
-        if gates_rows is not None:
-            g = np.zeros((toks_j.shape[0], gates_rows.shape[1]),
-                         gates_rows.dtype)
-            g[:n] = gates_rows
-            g = jnp.asarray(g)
+        g = _admission_gates(eng, [(j.prompt, j.aslot) for j in jobs],
+                             bp=int(toks_j.shape[0]))
         s_logits, s_cache = dep.slm_prefill_packed(
             eng.slm_params, toks_j, lens_j, eng.lora, g)
         if self.s_cache is None:
@@ -626,8 +710,11 @@ class _Lane:
         pre_len, share_len = entry["pre_len"], entry["share_len"]
         toks_j, lens_j = self._pad_group(
             [j.ids[pre_len:] for j in jobs], eng.max_seq - pre_len)
+        # suffix (COW) admissions are LoRA-free by construction: the
+        # sharing gate requires router is None AND adapter_id is None,
+        # so pass no bank (gates=None + a bank would un-gate it)
         s_logits, rows_s = dep.slm_prefill_suffix(
-            eng.slm_params, toks_j, lens_j, entry["hist_s"], eng.lora,
+            eng.slm_params, toks_j, lens_j, entry["hist_s"], None,
             None, pre_len, share_len)
         if self.s_cache is None:          # pragma: no cover (ensure_prefix)
             self._alloc(s_logits.shape[-1], None)
@@ -683,10 +770,10 @@ class _Lane:
         ps = dep.page_size
         W = eng.chunk_width
         ids = j.ids
-        gates_row = None
-        if eng.router is not None and eng.bank is not None:
-            gates_row = jnp.asarray(
-                eng.router.gate_weights(j.prompt))[None, :]
+        gates_row = _admission_gates(eng, [(j.prompt, j.aslot)])
+        # gates_row None means the engine serves no LoRA at all, where
+        # eng.lora is None too; every chunk call below passes eng.lora
+        # with THIS gates_row, so the bank is never un-gated
         # ---- chunk 0: B=1 prefix build, whole-page pool freeze
         toks0 = jnp.asarray([ids[:W]], jnp.int32)
         hist_s = dep.slm_build_prefix(eng.slm_params, toks0, eng.lora,
@@ -852,6 +939,7 @@ class _Lane:
             st.tokens += 1
             if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
                 done.append((s.rid, TOK.decode(s.out_ids), st))
+                eng._release_adapter(s)
                 self.slots[i] = None        # freed: admit into this row
                 freed.append(i)
             else:
@@ -1049,6 +1137,7 @@ class _Lane:
             i = order[0]
             s = self.slots[i]
             forced.append((s.rid, TOK.decode(s.out_ids), s.stats))
+            eng._release_adapter(s)
             self.slots[i] = None
             self._release_rows([i])
             eng._stat["forced"] += 1
@@ -1096,7 +1185,7 @@ class _Lane:
             jobs.append(_PagedJob(
                 slot, s.full_text, s.max_new, s.greedy, s.rid,
                 s.stats.private, s.key_id, ids, rows_s, rows_l, None,
-                seq=s.seq, resume=s))
+                seq=s.seq, resume=s, aslot=s.aslot))
             self._evictq.pop(0)
         if jobs:
             self._admit_paged(jobs)
@@ -1192,6 +1281,7 @@ class _Lane:
                 st.tokens += 1
                 if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
                     out_done.append((s.rid, TOK.decode(s.out_ids), st))
+                    eng._release_adapter(s)
                     self.slots[i] = None    # freed: refill next boundary
                     freed.append(i)
         if freed and eng.paged:
@@ -1363,22 +1453,47 @@ class BatchedHybridEngine(HybridEngine):
     def add_request(self, prompt: str, max_new_tokens: int = 16,
                     greedy: bool = True, rid: int = 0,
                     seed: Optional[int] = None,
-                    prefix: Optional[str] = None) -> bool:
+                    prefix: Optional[str] = None,
+                    adapter_id: Optional[Any] = None) -> bool:
         """Admit a request into its lane; False if it couldn't be
-        admitted (lane full, or — paged — not enough free pages; a page
-        demand beyond total pool capacity is a HARD reject surfaced via
-        ``pop_rejected`` and never retried)."""
+        admitted (lane full, or — paged — not enough free pages, or no
+        adapter slot free for ``adapter_id``; a page demand beyond total
+        pool capacity or an UNKNOWN adapter id is a HARD reject surfaced
+        via ``pop_rejected`` and never retried)."""
         return self.add_requests([(prompt, max_new_tokens, greedy,
-                                   rid, seed, prefix)])[0]
+                                   rid, seed, prefix, adapter_id)])[0]
+
+    def _adapter_reject_msg(self, aid) -> str:
+        if self.adapters is None:
+            return (f"adapter_id={aid!r} on an engine without adapter "
+                    "slots — build the ServingDeployment with "
+                    "adapter_slots=")
+        return (f"unknown adapter id {aid!r}: register it on "
+                "engine.adapters before submitting requests that name it")
+
+    def _acquire_or_block(self, aid, blocked, private) -> Tuple:
+        """The admission-side adapter gate, shared by the dense and
+        paged paths: (ok, slot).  A refused acquire BLOCKS the lane for
+        the rest of the burst (FIFO — later arrivals must not overtake a
+        request waiting on a slot), exactly the page-refusal discipline."""
+        if aid is None:
+            return True, None
+        aslot = self.adapters.acquire(aid)
+        if aslot is None:
+            blocked[private] = True
+            return False, None
+        return True, aslot
 
     def add_requests(self, reqs: List[Tuple]) -> List[bool]:
         """Admit a burst of (prompt, max_new_tokens, greedy, rid[, seed
-        [, prefix]]) requests (seed overrides rid in the sampling-key
-        derivation; prefix is a shared preamble, COW page-shared on the
-        paged path).  Requests landing in the same lane share ONE packed
-        B>1 prefill (the per-request prefill loop dominated burst
-        admission wall time).  Returns per-request admitted flags;
-        soft-refused requests (lane full / free pages short) should be
+        [, prefix[, adapter_id]]]) requests (seed overrides rid in the
+        sampling-key derivation; prefix is a shared preamble, COW
+        page-shared on the paged path; adapter_id pins a registered
+        per-user adapter slot for the request's lifetime).  Requests
+        landing in the same lane share ONE packed B>1 prefill (the
+        per-request prefill loop dominated burst admission wall time).
+        Returns per-request admitted flags; soft-refused requests (lane
+        full / free pages short / adapter slots all pinned) should be
         resubmitted later, hard rejects land in ``pop_rejected``."""
         if self.paged:
             return self._add_requests_paged(reqs)
@@ -1386,16 +1501,26 @@ class BatchedHybridEngine(HybridEngine):
         jobs = {True: [], False: []}
         free = {True: self.edge_lane.free_slots(),
                 False: self.cloud_lane.free_slots()}
+        blocked = {True: False, False: False}
         for i, (prompt, max_new, greedy, rid, *rest) in enumerate(reqs):
             prefix = rest[1] if len(rest) > 1 else None
+            aid = rest[2] if len(rest) > 2 else None
             full = (prefix or "") + prompt
             private = self.detector.detect(full)
-            if free[private]:
-                slot = free[private].pop(0)
-                jobs[private].append((slot, full, max_new, greedy,
-                                      rid, private,
-                                      rest[0] if rest else None))
-                flags[i] = True
+            if aid is not None and (self.adapters is None
+                                    or not self.adapters.known(aid)):
+                self._rejected.append((rid, self._adapter_reject_msg(aid)))
+                continue
+            if blocked[private] or not free[private]:
+                continue
+            ok, aslot = self._acquire_or_block(aid, blocked, private)
+            if not ok:
+                continue
+            slot = free[private].pop(0)
+            jobs[private].append((slot, full, max_new, greedy,
+                                  rid, private,
+                                  rest[0] if rest else None, aslot))
+            flags[i] = True
         self.edge_lane.admit_many(jobs[True])
         self.cloud_lane.admit_many(jobs[False])
         return flags
@@ -1425,9 +1550,14 @@ class BatchedHybridEngine(HybridEngine):
         for i, (prompt, max_new, greedy, rid, *rest) in enumerate(reqs):
             seed = rest[0] if rest else None
             prefix = rest[1] if len(rest) > 1 else None
+            aid = rest[2] if len(rest) > 2 else None
             full = (prefix or "") + prompt
             private = self.detector.detect(full)
             lane = self.edge_lane if private else self.cloud_lane
+            if aid is not None and (self.adapters is None
+                                    or not self.adapters.known(aid)):
+                self._rejected.append((rid, self._adapter_reject_msg(aid)))
+                continue
             raw = TOK.encode(full + " ")
             cap_ids = self.max_ctx - max_new - 1
             ids = raw[:cap_ids]
@@ -1435,7 +1565,7 @@ class BatchedHybridEngine(HybridEngine):
             alloc_len = min(len(ids) + max_new, self.max_ctx)
             cap_pages = PAG.pages_for(alloc_len, self.dep.page_size)
             entry = None
-            if prefix and self.router is None and \
+            if prefix and self.router is None and aid is None and \
                     len(ids) <= self.chunk_width:
                 # COW sharing needs the tokenization to split cleanly at
                 # the prefix boundary, an actual suffix to prefill, and
@@ -1480,6 +1610,9 @@ class BatchedHybridEngine(HybridEngine):
                         and not lane.pager_l.fits_free(nf_l, nl_l)):
                 blocked[private] = True    # soft: retry when pages free
                 continue
+            ok, aslot = self._acquire_or_block(aid, blocked, private)
+            if not ok:                     # soft: retry when pins drop
+                continue
             slot = free[private].pop(0)
             rows_s = lane.pager_s.admit(
                 slot, nf_s, shared=entry["pids_s"] if entry else (),
@@ -1494,11 +1627,13 @@ class BatchedHybridEngine(HybridEngine):
             if rows_s is None or (lane.use_cloud and rows_l is None):
                 free[private].insert(0, slot)  # pragma: no cover
                 blocked[private] = True        # pragma: no cover
+                if aslot is not None:          # pragma: no cover
+                    self.adapters.release(aslot)
                 continue
             jobs[private].append(_PagedJob(
                 slot, full, max_new, greedy, rid, private, seed, ids,
                 rows_s, rows_l, entry, seq=self._next_seq(),
-                truncated=truncated))
+                truncated=truncated, aslot=aslot))
             flags[i] = True
         self.edge_lane.admit_many(jobs[True])
         self.cloud_lane.admit_many(jobs[False])
@@ -1612,23 +1747,55 @@ class SoloEngine:
         self.lm, self.params = deployment.slm, deployment.slm_params
         self.bank, self.router = deployment.bank, router
         self.max_seq = deployment.max_seq
-        self.lora = (deployment.lora
-                     if router is not None and self.bank is not None
-                     else None)
+        self.adapters = (deployment.make_adapter_cache()
+                         if deployment.adapter_slots else None)
+        if self.bank is not None and router is None:
+            raise ValueError(_BANK_NEEDS_GATING)
+        if self.bank is not None and self.adapters is not None:
+            raise ValueError(
+                "router-gated expert bank and per-user adapter slots "
+                "are mutually exclusive")
+        self._lora = (deployment.lora
+                      if router is not None and self.bank is not None
+                      else None)
         # whether the LAST generate() call had to cut its prompt
         self.last_truncated = False
 
-    def generate(self, prompt: str, max_new_tokens: int = 16) -> str:
+    @property
+    def lora(self):
+        if self.adapters is not None:
+            return LORA.bank_for_model(self.adapters.bank)
+        return self._lora
+
+    def adapter_stats(self) -> Dict[str, int]:
+        return self.adapters.stats() if self.adapters is not None else {}
+
+    def generate(self, prompt: str, max_new_tokens: int = 16,
+                 adapter_id: Optional[Any] = None) -> str:
         dep = self.dep
         gates = None
-        if self.router is not None and self.bank is not None:
+        lora = None
+        aslot = None
+        if adapter_id is not None:
+            if self.adapters is None:
+                raise ValueError(
+                    "adapter_id= needs a deployment built with "
+                    "adapter_slots=")
+            aslot = self.adapters.acquire(adapter_id)
+            if aslot is None:   # pragma: no cover (B=1 releases)
+                raise RuntimeError("no adapter slot free")
+            gates = jnp.asarray(
+                LORA.slot_gates([aslot], self.adapters.num_slots))
+            lora = self.lora
+        elif self.router is not None and self.bank is not None:
             gates = jnp.asarray(self.router.gate_weights(prompt))[None, :]
+            lora = self.lora
         raw = TOK.encode(prompt + " ")
         cap = self.max_seq - max_new_tokens - 1
         self.last_truncated = len(raw) > cap
         ids = raw[:cap]
         toks = jnp.asarray([ids], jnp.int32)
-        logits, cache = dep.slm_prefill(self.params, toks, self.lora, gates)
+        logits, cache = dep.slm_prefill(self.params, toks, lora, gates)
         out: List[int] = []
         cur = logits[:, 0]
         for _ in range(max_new_tokens):
@@ -1638,6 +1805,8 @@ class SoloEngine:
                 break
             logits, cache = dep.slm_decode(self.params, cache,
                                            jnp.asarray([[nxt]], jnp.int32),
-                                           self.lora, gates)
+                                           lora, gates)
             cur = logits[:, 0]
+        if aslot is not None:
+            self.adapters.release(aslot)
         return TOK.decode(out)

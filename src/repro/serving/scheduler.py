@@ -19,10 +19,11 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.serving.adapters import UnknownAdapter
 from repro.serving.deployment import ServingDeployment
 from repro.serving.engine import (BatchedHybridEngine, GenStats,
                                   HybridEngine)
@@ -37,6 +38,7 @@ class Request:
     greedy: bool = True
     seed: Optional[int] = None       # sampling-key override (else rid)
     prefix: Optional[str] = None     # shared preamble (COW-shared paged)
+    adapter_id: Optional[Any] = None  # per-user adapter (slot-cached)
 
 
 @dataclass
@@ -68,11 +70,12 @@ class Scheduler:
 
     def submit(self, prompt: str, max_new_tokens: int = 16,
                greedy: bool = True, seed: Optional[int] = None,
-               prefix: Optional[str] = None) -> int:
+               prefix: Optional[str] = None,
+               adapter_id: Optional[Any] = None) -> int:
         rid = self._next
         self._next += 1
         self.queue.append(Request(rid, prompt, max_new_tokens, time.time(),
-                                  greedy, seed, prefix))
+                                  greedy, seed, prefix, adapter_id))
         return rid
 
     def run(self) -> List[Response]:
@@ -85,9 +88,20 @@ class Scheduler:
         # private first: strictly on-device, immune to network state
         for r in private + public:
             t0 = time.time()
-            text, stats = self.engine.generate(
-                (r.prefix or "") + r.prompt, r.max_new_tokens,
-                greedy=r.greedy, rid=r.rid, sample_key_id=r.seed)
+            try:
+                text, stats = self.engine.generate(
+                    (r.prefix or "") + r.prompt, r.max_new_tokens,
+                    greedy=r.greedy, rid=r.rid, sample_key_id=r.seed,
+                    adapter_id=r.adapter_id)
+            except UnknownAdapter as e:
+                # hard reject, same surface as the batched scheduler's
+                # pop_rejected path: the request never ran
+                out.append(Response(
+                    r.rid, "", GenStats(),
+                    wall_seconds=time.time() - r.submitted_at,
+                    queue_wait_seconds=t0 - r.submitted_at,
+                    error=str(e)))
+                continue
             out.append(Response(r.rid, text, stats,
                                 wall_seconds=time.time() - r.submitted_at,
                                 queue_wait_seconds=t0 - r.submitted_at,
@@ -135,11 +149,12 @@ class ContinuousBatchScheduler:
 
     def submit(self, prompt: str, max_new_tokens: int = 16,
                greedy: bool = True, seed: Optional[int] = None,
-               prefix: Optional[str] = None) -> int:
+               prefix: Optional[str] = None,
+               adapter_id: Optional[Any] = None) -> int:
         rid = self._next
         self._next += 1
         self.queue.append(Request(rid, prompt, max_new_tokens, time.time(),
-                                  greedy, seed, prefix))
+                                  greedy, seed, prefix, adapter_id))
         return rid
 
     def run(self) -> List[Response]:
@@ -164,7 +179,7 @@ class ContinuousBatchScheduler:
             if pending:
                 flags = self.engine.add_requests(
                     [(r.prompt, r.max_new_tokens, r.greedy, r.rid, r.seed,
-                      r.prefix) for r in pending])
+                      r.prefix, r.adapter_id) for r in pending])
                 now = time.time()
                 # hard rejects (paged: page demand beyond pool capacity)
                 # error out instead of spinning in the pending queue

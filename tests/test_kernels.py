@@ -12,8 +12,10 @@ from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.logit_fusion.kernel import fuse_logits
 from repro.kernels.logit_fusion.ref import fuse_logits_ref
-from repro.kernels.moe_lora.kernel import moe_lora_delta
-from repro.kernels.moe_lora.ref import moe_lora_delta_ref
+from repro.kernels.moe_lora.kernel import (moe_lora_delta,
+                                           moe_lora_delta_slots)
+from repro.kernels.moe_lora.ref import (moe_lora_delta_ref,
+                                        moe_lora_delta_slots_ref)
 from repro.kernels.paged_attention.kernel import paged_decode_attention
 from repro.kernels.paged_attention.ref import paged_decode_ref
 from repro.kernels.ssm_scan.kernel import ssm_scan
@@ -167,6 +169,46 @@ def test_moe_lora_gate_zero_kills_expert():
     only0 = moe_lora_delta_ref(x, a[:1], b[:1], jnp.ones((t, 1)))
     np.testing.assert_allclose(np.asarray(full), np.asarray(only0),
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("t,k,e,r,n", [
+    (8, 16, 2, 4, 32),
+    (16, 64, 4, 8, 48),
+    (32, 32, 8, 16, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_lora_slots_sweep(t, k, e, r, n, dtype):
+    """Slot-gather kernel vs the one-hot dense oracle, adapter-free
+    rows (slot -1) interleaved — must be exactly the one-hot gates
+    result, including the exact-0.0 rows."""
+    ks = jax.random.split(jax.random.key(7), 3)
+    x = jax.random.normal(ks[0], (t, k), dtype)
+    a = (jax.random.normal(ks[1], (e, r, k)) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (e, n, r)) * 0.1).astype(dtype)
+    slots = jnp.asarray([(i % (e + 1)) - 1 for i in range(t)], jnp.int32)
+    out = moe_lora_delta_slots(x, a, b, slots, interpret=True)
+    ref = moe_lora_delta_slots_ref(x, a, b, slots)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype] * 4, rtol=TOL[dtype] * 4)
+    none_rows = np.asarray(slots) < 0
+    assert np.all(np.asarray(out, np.float32)[none_rows] == 0.0)
+
+
+def test_moe_lora_slots_matches_dense_onehot():
+    """The slot kernel is bit-comparable to the DENSE kernel fed the
+    equivalent one-hot gate matrix (the engine's two execution paths)."""
+    ks = jax.random.split(jax.random.key(9), 3)
+    t, k, e, r, n = 32, 16, 4, 4, 16
+    x = jax.random.normal(ks[0], (t, k))
+    a = jax.random.normal(ks[1], (e, r, k))
+    b = jax.random.normal(ks[2], (e, n, r))
+    slots = jnp.asarray(np.arange(t) % e, jnp.int32)
+    g = jax.nn.one_hot(slots, e, dtype=jnp.float32)
+    dense = moe_lora_delta(x, a, b, g, block_t=32, interpret=True)
+    gathered = moe_lora_delta_slots(x, a, b, slots, interpret=True)
+    np.testing.assert_allclose(np.asarray(gathered), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)
 
 
 # -------------------------------------------------------------- ssm_scan

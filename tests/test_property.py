@@ -29,6 +29,7 @@ except ImportError:                                   # pragma: no cover
         return lambda f: f
 
 from repro.core import dp as DP
+from repro.serving import adapters as ADP
 from repro.serving import paging as PAG
 from repro.core import embedding as EMB
 from repro.core import fusion as FUS
@@ -445,3 +446,174 @@ def test_page_allocator_raises_on_misuse():
         al.fork([a])
     al.check()
     assert al.free_pages == 4
+
+
+# ------------------------------------------ adapter residency (ISSUE 8)
+# The slot-cache invariants behind per-user LoRA serving: pinned slots
+# are never stolen, refcounts mirror outstanding pins exactly, the
+# device bank is write-through (every occupied slot holds the LAST
+# value written for its adapter), refusals happen only when every slot
+# is pinned — under random acquire/release interleavings.
+
+
+def check_adapter_cache(seed: int, num_slots: int, n_ids: int,
+                        n_ops: int = 60):
+    """Random acquire/release soup against a reference model: ``pins``
+    mirrors every outstanding acquire, a host list stands in for the
+    device bank so write-through can be checked value-by-value."""
+    rng = np.random.RandomState(seed)
+    bank = [None] * num_slots
+
+    def write(b, adapter, slot):
+        b = list(b)
+        b[slot] = adapter
+        return b
+
+    cache = ADP.AdapterCache(num_slots, bank=bank, write=write)
+    ids = [f"u{i}" for i in range(n_ids)]
+    for i, aid in enumerate(ids):
+        cache.register(aid, ("weights", i))
+    pins = Counter()                    # aid -> outstanding acquires
+    n_acq = 0
+    for _ in range(n_ops):
+        if rng.rand() < 0.6 or not pins:
+            aid = ids[int(rng.randint(n_ids))]
+            slot = cache.acquire(aid)
+            if slot is None:            # refusal ONLY when all pinned
+                assert all(r > 0 for r in cache.refs)
+                assert cache.stats()["refusals"] > 0
+            else:
+                n_acq += 1
+                assert cache.adapter_in[slot] == aid
+                pins[aid] += 1
+        else:
+            aid = rng.choice(sorted(pins))
+            slot = cache.slot_of(aid)
+            assert slot is not None, "pinned adapter lost its slot"
+            cache.release(slot)
+            pins[aid] -= 1
+            if not pins[aid]:
+                del pins[aid]
+        cache.check()
+        # refcounts mirror outstanding pins exactly
+        got = {cache.adapter_in[s]: r
+               for s, r in enumerate(cache.refs) if r > 0}
+        assert got == dict(pins)
+        # write-through: every occupied slot holds its adapter's value
+        for s, aid in enumerate(cache.adapter_in):
+            if aid is not None:
+                assert cache.bank[s] == cache.registry[aid]
+        st_ = cache.stats()
+        assert st_["hits"] + st_["loads"] == n_acq
+        assert st_["resident"] == min(st_["loads"] - st_["evictions"],
+                                      num_slots) == (st_["loads"]
+                                                     - st_["evictions"])
+        assert st_["pinned"] == len(pins)
+    for aid in list(pins):              # drain: every pin released
+        for _ in range(pins[aid]):
+            cache.release(cache.slot_of(aid))
+    cache.check()
+    assert all(r == 0 for r in cache.refs)
+    if num_slots:                       # nothing pinned -> never refuse
+        assert cache.acquire(ids[int(rng.randint(n_ids))]) is not None
+
+
+def check_slot_bank_roundtrip(seed: int, num_slots: int, n_writes: int):
+    """write_slot into random slots: every slot holds exactly the LAST
+    adapter written to it (untouched slots stay zero), and adapter_of
+    reads each one back bit for bit — on a synthetic stack_adapters
+    layout (expert axis at ndim-3), no model needed."""
+    rng = np.random.RandomState(seed)
+    r, k, n = 3, 5, 4
+
+    def mk_adapter(tag):
+        return {"_rank": jnp.asarray(tag % r + 1, jnp.int32),
+                "s": {"t": {"A": jnp.asarray(rng.randn(r, k), jnp.float32),
+                            "B": jnp.asarray(rng.randn(n, r),
+                                             jnp.float32)}}}
+
+    bank = {"_ranks": jnp.zeros((num_slots,), jnp.int32),
+            "s": {"t": {"A": jnp.zeros((num_slots, r, k), jnp.float32),
+                        "B": jnp.zeros((num_slots, n, r), jnp.float32)}}}
+    last = {}
+    for w in range(n_writes):
+        slot = int(rng.randint(num_slots))
+        ad = mk_adapter(w)
+        bank = LORA.write_slot(bank, ad, slot)
+        last[slot] = ad
+    for s in range(num_slots):
+        got = LORA.adapter_of(bank, s)
+        if s in last:
+            want = last[s]
+            np.testing.assert_array_equal(np.asarray(got["s"]["t"]["A"]),
+                                          np.asarray(want["s"]["t"]["A"]))
+            np.testing.assert_array_equal(np.asarray(got["s"]["t"]["B"]),
+                                          np.asarray(want["s"]["t"]["B"]))
+            assert int(got["_rank"]) == int(want["_rank"])
+        else:
+            assert not np.asarray(got["s"]["t"]["A"]).any()
+            assert not np.asarray(got["s"]["t"]["B"]).any()
+            assert int(got["_rank"]) == 0
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 9))
+@settings(**SET)
+def test_adapter_cache_interleavings(seed, num_slots, n_ids):
+    check_adapter_cache(seed, num_slots, n_ids)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(0, 12))
+@settings(**SET)
+def test_slot_bank_roundtrip(seed, num_slots, n_writes):
+    check_slot_bank_roundtrip(seed, num_slots, n_writes)
+
+
+@pytest.mark.parametrize("seed,num_slots,n_ids", [
+    (0, 1, 1), (1, 1, 4), (2, 2, 5), (3, 3, 3), (4, 4, 9), (5, 6, 2),
+])
+def test_adapter_cache_seeded(seed, num_slots, n_ids):
+    """Seeded fallback of the @given sweep (runs w/o hypothesis)."""
+    check_adapter_cache(seed, num_slots, n_ids)
+
+
+@pytest.mark.parametrize("seed,num_slots,n_writes", [
+    (0, 1, 3), (1, 2, 0), (2, 3, 7), (3, 6, 12),
+])
+def test_slot_bank_roundtrip_seeded(seed, num_slots, n_writes):
+    check_slot_bank_roundtrip(seed, num_slots, n_writes)
+
+
+@given(st.lists(st.one_of(st.none(), st.integers(-2, 5)),
+                min_size=0, max_size=8),
+       st.integers(1, 6))
+@settings(**SET)
+def test_slot_gates_one_hot(slots, num_slots):
+    slots = [s if s is None or s < num_slots else s % num_slots
+             for s in slots]
+    g = LORA.slot_gates(slots, num_slots)
+    assert g.shape == (len(slots), num_slots)
+    for row, s in zip(g, slots):
+        if s is None or s < 0:
+            assert not row.any()
+        else:
+            assert row[s] == 1.0 and row.sum() == 1.0
+
+
+def test_slot_gates_seeded():
+    g = LORA.slot_gates([0, None, 2, -1], 3)
+    np.testing.assert_array_equal(
+        g, np.asarray([[1, 0, 0], [0, 0, 0], [0, 0, 1], [0, 0, 0]],
+                      np.float32))
+
+
+def test_adapter_cache_raises_on_misuse():
+    """Unknown-id acquire and unpinned release must raise, not corrupt."""
+    cache = ADP.AdapterCache(2)
+    cache.register("u0", object())
+    with pytest.raises(ADP.UnknownAdapter):
+        cache.acquire("ghost")
+    slot = cache.acquire("u0")
+    cache.release(slot)
+    with pytest.raises(AssertionError):
+        cache.release(slot)
+    cache.check()
