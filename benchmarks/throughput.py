@@ -138,6 +138,7 @@ def run():
     out.update(run_reclaimed_gap())
     out.update(run_long_context())
     out.update(run_multi_tenant())
+    out.update(run_chaos())
     out["per_device_param_bytes"] = dep.per_device_param_bytes()
     return out
 
@@ -588,6 +589,100 @@ def run_multi_tenant(n_adapters: int = 4, slots: int = 2,
             "multi_tenant_stats": multi_st}
 
 
+# ---------------------------------------------------------------- chaos
+
+
+def run_chaos(batch: int = 4, macro_k: int = 4) -> dict:
+    """Fault-injected chaos smoke (ISSUE 9): the smoke trace under a
+    lossy/bursty cloud link — 10% per-token reply loss plus periodic
+    4-step outage windows — vs the same trace on a clean link.
+
+    Every request must TERMINATE (the breaker degrades repeatedly
+    failing rows to SLM-only decode instead of stalling them) and the
+    engine must come back leak-free: no live pages, no pinned adapters,
+    no parked rows.  A second pass submits deadline-bound requests and
+    asserts they come back CANCELLED with partial text and released
+    pages.  The JSON records degraded tokens/sec vs the clean baseline
+    plus the link-health counters (breaker trips must be visible)."""
+    from repro.serving.latency import FaultModel
+    from repro.serving.scheduler import ResponseStatus, summarize
+    parts = _micro_pair()
+    dep_clean = _deployment(parts)
+    dep_chaos = _deployment(parts, fault=FaultModel(
+        loss_rate=0.10, outage_period=12, outage_len=4, seed=7))
+
+    def run_trace(dep):
+        sched = ContinuousBatchScheduler.from_deployment(
+            dep, batch_size=batch, edge_batch_size=1, macro_k=macro_k)
+        res, dt = None, 0.0
+        for _ in range(2):                   # pass 0 warms the jits
+            for p in PROMPTS:
+                sched.submit(p, MAX_NEW)
+            t0 = time.perf_counter()
+            res = sched.run()
+            dt = time.perf_counter() - t0
+        return res, dt, sched.engine
+
+    res_c, dt_c, _ = run_trace(dep_clean)
+    res_f, dt_f, eng = run_trace(dep_chaos)
+    clean_tps = sum(r.stats.tokens for r in res_c) / dt_c
+    chaos_tps = sum(r.stats.tokens for r in res_f) / dt_f
+
+    # every request terminates with its full budget — faults degrade
+    # tokens to SLM-only, they never wedge or shorten a row
+    assert len(res_f) == len(PROMPTS), len(res_f)
+    assert all(r.error is None and not r.cancelled
+               and r.stats.tokens == MAX_NEW for r in res_f)
+    health = eng.health_stats()
+    assert health["breaker_trips"] >= 1, health
+    assert health["degraded_tokens"] >= 1, health
+    summ = summarize(res_f)
+    assert summ["degraded_token_frac"] > 0.0, summ
+
+    # deadline-bound requests under the same weather: cancelled at a
+    # macro boundary with partial text, still counted as terminated
+    sched = ContinuousBatchScheduler.from_deployment(
+        dep_chaos, batch_size=batch, edge_batch_size=1, macro_k=macro_k)
+    edge = dep_chaos.latency.edge_compute_ms
+    for p in PROMPTS[:batch]:
+        sched.submit(p, MAX_NEW, deadline_ms=edge * (MAX_NEW // 2))
+    res_d = sched.run()
+    assert len(res_d) == batch
+    assert all(r.status is ResponseStatus.CANCELLED and r.cancelled
+               and 0 < r.stats.tokens < MAX_NEW for r in res_d), \
+        [(r.status, r.stats.tokens) for r in res_d]
+
+    # leak-free across both engines: nothing active, every page freed,
+    # no pinned adapter slots
+    for e in (eng, sched.engine):
+        assert e.active_count() == 0
+        for lane in (e.cloud_lane, e.edge_lane):
+            for pager in (lane.pager_s, lane.pager_l):
+                if pager is not None:
+                    assert pager.alloc.live_pages == 0, \
+                        pager.alloc.live_pages
+        st = e.adapter_stats()
+        assert st.get("pinned", 0) == 0, st
+
+    ratio = chaos_tps / clean_tps
+    C.row("throughput/chaos_clean", 1e6 / clean_tps,
+          f"tokens_per_s={clean_tps:.1f} (clean link)")
+    C.row("throughput/chaos_faulty", 1e6 / chaos_tps,
+          f"tokens_per_s={chaos_tps:.1f} ({ratio:.2f}x of clean, "
+          f"degraded_frac={summ['degraded_token_frac']:.2f}, "
+          f"trips={health['breaker_trips']}, "
+          f"cancelled={len(res_d)} deadline rows)")
+    return {"chaos": {
+        "clean_tokens_per_s": clean_tps,
+        "faulty_tokens_per_s": chaos_tps,
+        "faulty_vs_clean": ratio,
+        "degraded_token_frac": summ["degraded_token_frac"],
+        "p99_token_latency_ms": summ["p99_token_latency_ms"],
+        "health": health,
+        "deadline_cancelled": len(res_d),
+        "all_terminated": True}}
+
+
 # ------------------------------------------------------------- windowed
 
 
@@ -681,6 +776,10 @@ def run_smoke(mesh_devices: int = 0, rules: str = "inference"):
     out.update(run_long_context())
     # ISSUE 8: N-user adapter turnover over E < N resident slots
     out.update(run_multi_tenant())
+    # ISSUE 9: fault-injected chaos trace — every request terminates
+    # under 10% loss + bursty outages, breaker trips recorded,
+    # deadline rows cancelled leak-free
+    out.update(run_chaos())
     pd = dep.per_device_param_bytes()
     out["per_device_param_bytes"] = pd
     if mesh is not None and dict(mesh.shape).get("model", 1) > 1:

@@ -49,6 +49,28 @@ def fused_probs_masked(slm_logits, llm_logits, w, arrived,
     return out[:b]
 
 
+def cloud_arrival_mask(ok, active, lost=None, outage=None, degraded=None):
+    """The Sec. IV-D fallback mask, extended for the fault-injected
+    link: a row's cloud logits take part in the fusion iff the reply
+    arrived within the timeout AND the row is active AND the reply was
+    not lost AND the link is not in an outage window AND the row's
+    circuit breaker is not holding it in SLM-only degraded mode.
+
+    Pure elementwise boolean algebra — works on numpy arrays (the
+    per-token host path) and on traced jnp arrays (the macro scan)
+    alike, so every path builds the mask with the same expression.
+    ``None`` fault terms are skipped, which keeps the fault-free oracle
+    mask literally ``ok & active``."""
+    m = ok & active
+    if lost is not None:
+        m = m & ~lost
+    if outage is not None:
+        m = m & ~outage
+    if degraded is not None:
+        m = m & ~degraded
+    return m
+
+
 def _categorical_rows(probs, rids, steps, seed: int):
     """Vmapped keyed categorical: row i draws with key
     fold_in(fold_in(key(seed), rids[i]), steps[i])."""

@@ -81,6 +81,21 @@ def main():
                     help="dense-buffer width for chunked long-prompt "
                          "prefill (page-aligned, <= max_seq; "
                          "0 = max_seq)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="with --local: per-token cloud-reply loss "
+                         "probability, drawn counter-based per "
+                         "(rid, step) (0 = fault-free oracle path)")
+    ap.add_argument("--outage", default="",
+                    help="with --local: periodic cloud-link outage "
+                         "windows as PERIOD:LEN in decode steps, e.g. "
+                         "32:8 (empty = no outages)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault weather (loss draws + "
+                         "outage phase)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="with --local: per-request decode deadline in "
+                         "simulated ms; expired requests are cancelled "
+                         "with partial text (0 = no deadline)")
     ap.add_argument("--sample", action="store_true",
                     help="non-greedy decoding (per-request PRNG keys)")
     ap.add_argument("--sample-seed", type=int, default=0,
@@ -122,7 +137,7 @@ def main():
         from repro.core import fusion as FUS
         from repro.models.model import LM
         from repro.serving.deployment import ServingDeployment
-        from repro.serving.latency import LatencyModel
+        from repro.serving.latency import FaultModel, LatencyModel
         from repro.serving.scheduler import (ContinuousBatchScheduler,
                                              Scheduler, summarize)
         slm_cfg, llm_cfg = pair_configs(args.pair)
@@ -138,6 +153,16 @@ def main():
             mesh = make_serving_mesh(args.mesh_devices,
                                      model_parallel=args.model_parallel)
             print(f"serving mesh: {dict(mesh.shape)}")
+        fault = None
+        if args.fault_rate > 0.0 or args.outage:
+            period, olen = 0, 0
+            if args.outage:
+                period, olen = (int(x) for x in args.outage.split(":"))
+            fault = FaultModel(loss_rate=args.fault_rate,
+                               outage_period=period, outage_len=olen,
+                               seed=args.fault_seed)
+            print(f"fault weather: loss_rate={args.fault_rate} "
+                  f"outage={args.outage or 'none'} seed={args.fault_seed}")
         # the deployment owns placement: params are laid out over the
         # mesh here, once, and the engines below only do bookkeeping
         dep = ServingDeployment(
@@ -147,7 +172,7 @@ def main():
             mesh=mesh, rules=args.rules, page_size=args.page_size,
             max_ctx=args.max_ctx or None,
             adapter_slots=args.adapter_slots,
-            adapter_rank=args.adapter_rank)
+            adapter_rank=args.adapter_rank, fault=fault)
         if mesh is not None:
             pd = dep.per_device_param_bytes()
             print(f"per-device param bytes: {pd['total_bytes']} "
@@ -187,14 +212,18 @@ def main():
         ]):
             sched.submit(prompt, max_new_tokens=8,
                          greedy=not args.sample,
-                         adapter_id=aids[i] if aids else None)
+                         adapter_id=aids[i] if aids else None,
+                         deadline_ms=args.deadline_ms or None)
         res = sched.run()
         for r in res:
-            print(f"[{r.rid}] private={r.stats.private} "
+            print(f"[{r.rid}] {r.status.value} private={r.stats.private} "
                   f"cloud={r.stats.cloud_tokens}/{r.stats.tokens} "
+                  f"degraded={r.degraded_tokens} lost={r.cloud_lost} "
                   f"lat={r.stats.mean_latency_ms:.0f}ms "
                   f"wait={r.queue_wait_seconds * 1e3:.0f}ms  {r.text!r}")
         print(summarize(res))
+        if fault is not None or args.deadline_ms:
+            print(f"link health: {sched.engine.health_stats()}")
         if args.adapters:
             print(f"adapter cache: {sched.engine.adapter_stats()}")
         return

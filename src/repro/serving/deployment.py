@@ -47,7 +47,8 @@ from repro.kernels.logit_fusion import ops as OPS
 from repro.launch import sharding as SH
 from repro.models import attention as ATT
 from repro.serving import paging as PAG
-from repro.serving.latency import LatencyModel
+from repro.serving import latency as LAT
+from repro.serving.latency import FaultModel, LatencyModel
 
 
 def cache_batch_axes(lm, max_seq: int):
@@ -96,7 +97,8 @@ class ServingDeployment:
                  rules="inference", block_b: int = 4,
                  page_size: int = 16, max_ctx: Optional[int] = None,
                  adapter_slots: int = 0,
-                 adapter_rank: Optional[int] = None):
+                 adapter_rank: Optional[int] = None,
+                 fault: Optional[FaultModel] = None):
         assert slm is not None, "a deployment needs at least one model"
         # paged lanes gather exactly table_width * page_size slots back
         # into the dense rowwise layout; requiring page-aligned max_seq
@@ -116,6 +118,13 @@ class ServingDeployment:
         self.slm, self.llm = slm, llm
         self.bank = expert_bank
         self.latency = latency or LatencyModel()
+        # fault=None (or an all-zero FaultModel) keeps the deployment on
+        # the fault-free oracle path: no fault draws are traced and the
+        # macro carry's breaker state is a frozen pass-through
+        self.fault = fault
+        if fault is not None and fault.loss_rate <= 0.0 \
+                and (fault.outage_period <= 0 or fault.outage_len <= 0):
+            self.fault = None
         self.timeout_ms = timeout_ms
         self.max_seq = max_seq
         self.sample_seed = sample_seed
@@ -301,6 +310,18 @@ class ServingDeployment:
         self.lat_request = jax.jit(
             lambda rid, steps: self.latency.token_latency_device(
                 self.timeout_ms, jnp.full_like(steps, rid), steps))
+        # counter-based fault weather, same parity discipline: one
+        # vectorized (lost, outage) draw shared bitwise by the per-step
+        # path, the macro scan and the sequential engine's prefetch
+        if self.fault is not None:
+            self.fault_batched = jax.jit(
+                lambda rids, steps: self.fault.faults_device(rids, steps))
+            self.fault_request = jax.jit(
+                lambda rid, steps: self.fault.faults_device(
+                    jnp.full_like(steps, rid), steps))
+        else:
+            self.fault_batched = None
+            self.fault_request = None
         # the macro-step trace fetch — an attribute so dispatch-
         # discipline tests can wrap it and count host syncs
         self.fetch_traces = jax.device_get
@@ -433,26 +454,59 @@ class ServingDeployment:
         overlaps it with the fusion/epilogue of the next iteration and
         the host syncs exactly once per K tokens, on the stacked traces.
 
-        Lane caches and current logits are DONATED (argnums 4-7): the
-        macro-step updates them in place, invalidating any stale
-        references a caller may hold.  ``k`` and ``sample`` (whether any
-        row draws categorically) are static — at most two traces per
-        lane flavour per K.  Param args are pinned to their placed
-        layouts via ``in_shardings`` on a mesh deployment."""
+        Lane caches, current logits and the per-row circuit-breaker
+        state are DONATED (argnums 4-9): the macro-step updates them in
+        place, invalidating any stale references a caller may hold.
+        ``k`` and ``sample`` (whether any row draws categorically) are
+        static — at most two traces per lane flavour per K.  Param args
+        are pinned to their placed layouts via ``in_shardings`` on a
+        mesh deployment.
+
+        With a ``FaultModel`` on a cloud lane the arrived mask extends
+        from "arrived <= timeout" to "arrived AND not lost AND not in
+        outage AND not breaker-degraded": lost/outage tokens fall back
+        to the SLM distribution exactly like timeout tokens (and charge
+        the full fallback latency — we waited for a reply that never
+        came), while breaker-degraded rows decode SLM-only with no
+        cloud wait charged.  The (fails, cooldown) hysteresis lives in
+        the scan carry — never on the host — and the traces additionally
+        record the per-token loss draw so the host mirror can replay the
+        identical breaker recurrence from the trace alone (outages are a
+        pure function of the step index, recomputed host-side)."""
         dep = self
+        fault = self.fault if use_cloud else None
 
         def impl(slm_params, llm_params, lora, gates,
-                 s_cache, l_cache, sl, ll,
+                 s_cache, l_cache, sl, ll, fails, cooldown,
                  rids, key_ids, steps, max_new, greedy, done,
                  k: int, sample: bool):
             b = sl.shape[0]
 
             def body(carry, _):
-                s_cache, l_cache, sl, ll, steps, done = carry
+                s_cache, l_cache, sl, ll, fails, cooldown, steps, done \
+                    = carry
                 active = ~done
+                new_fails, new_cooldown = fails, cooldown
+                lost = jnp.zeros((b,), bool)
                 if use_cloud:
                     lat, ok = dep.lat_batched(rids, steps)
-                    arrived = ok & active
+                    if fault is not None:
+                        lost, outage = dep.fault_batched(rids, steps)
+                        raw = lost | outage
+                        (new_fails, new_cooldown, degraded, _attempt,
+                         fail, _trip, _recover) = \
+                            LAT.breaker_transition_device(
+                                fails, cooldown, active, raw,
+                                fault.breaker_n, fault.breaker_m)
+                        arrived = OPS.cloud_arrival_mask(
+                            ok, active, lost, outage, degraded)
+                        edge = jnp.float32(dep.latency.edge_compute_ms)
+                        lat = jnp.where(
+                            degraded, edge,
+                            jnp.where(fail, jnp.maximum(
+                                edge, jnp.float32(dep.timeout_ms)), lat))
+                    else:
+                        arrived = OPS.cloud_arrival_mask(ok, active)
                     probs, w = dep.fuse_batched(sl, ll, arrived)
                 else:
                     probs = dep.softmax_batched(sl)
@@ -487,9 +541,10 @@ class ServingDeployment:
                 else:
                     new_l, new_ll = l_cache, ll
                 new_carry = (new_s, new_l, new_sl, new_ll,
+                             new_fails, new_cooldown,
                              steps + active.astype(jnp.int32),
                              done | done_now)
-                return new_carry, (nxt, arrived, lat, w, active)
+                return new_carry, (nxt, arrived, lat, w, active, lost)
 
             def pin(carry):
                 # pin the scan carry to the lane layout at BOTH ends:
@@ -498,17 +553,18 @@ class ServingDeployment:
                 # batch axes) and reshard every iteration
                 if dep.mesh is None:
                     return carry
-                s_c, l_c, sl_c, ll_c, st, dn = carry
+                s_c, l_c, sl_c, ll_c, bf, bc, st, dn = carry
                 s_c = dep.constrain_lane(s_c, dep._axes_like(s_c, "slm"))
                 sl_c = dep.replicated(sl_c)
                 if use_cloud:
                     l_c = dep.constrain_lane(l_c,
                                              dep._axes_like(l_c, "llm"))
                     ll_c = dep.replicated(ll_c)
-                return (s_c, l_c, sl_c, ll_c, st, dn)
+                return (s_c, l_c, sl_c, ll_c, bf, bc, st, dn)
 
             carry, traces = jax.lax.scan(
-                body, pin((s_cache, l_cache, sl, ll, steps, done)),
+                body, pin((s_cache, l_cache, sl, ll, fails, cooldown,
+                           steps, done)),
                 None, length=k)
             return pin(carry), traces
 
@@ -516,11 +572,11 @@ class ServingDeployment:
         if self.mesh is not None:
             psh_l = self.llm_param_shardings if use_cloud else None
             kw["in_shardings"] = ((self.slm_param_shardings, psh_l)
-                                  + (None,) * 12)
+                                  + (None,) * 14)
         # k/sample are positional statics: pjit rejects kwargs when
         # in_shardings is given, so the engine passes them by position
-        return jax.jit(impl, static_argnums=(14, 15),
-                       donate_argnums=(4, 5, 6, 7), **kw)
+        return jax.jit(impl, static_argnums=(16, 17),
+                       donate_argnums=(4, 5, 6, 7, 8, 9), **kw)
 
     # ------------------------------------------------- cache row scatter
     def _make_insert(self, axes_tree):

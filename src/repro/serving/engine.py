@@ -31,6 +31,8 @@ from repro.core.privacy import PrivacyDetector
 from repro.core.router import Router
 from repro.data import tokenizer as TOK
 from repro.models import attention as ATT
+from repro.kernels.logit_fusion import ops as OPS
+from repro.serving import latency as LAT
 from repro.serving import paging as PAG
 from repro.serving.deployment import ServingDeployment
 from repro.serving.latency import LatencyModel
@@ -95,10 +97,25 @@ class GenStats:
     # engine-wide admission sequence number (paged/batched paths):
     # observable FIFO order for the no-starvation regression tests
     admit_seq: int = -1
+    # fault-injection telemetry: tokens decoded SLM-only because the
+    # circuit breaker held the row degraded, and cloud attempts whose
+    # reply was injected-lost (loss draw or outage window)
+    degraded_tokens: int = 0
+    cloud_lost: int = 0
+    # the request was cancelled at a decode boundary because its
+    # simulated clock passed its deadline — the text is partial
+    cancelled: bool = False
+    # running simulated decode clock (sum of latency_ms) — what
+    # deadlines compare against, maintained as tokens append
+    clock_ms: float = 0.0
 
     @property
     def mean_latency_ms(self) -> float:
         return float(np.mean(self.latency_ms)) if self.latency_ms else 0.0
+
+    def push_latency(self, lat_ms: float):
+        self.latency_ms.append(lat_ms)
+        self.clock_ms += lat_ms
 
 
 class HybridEngine:
@@ -141,6 +158,12 @@ class HybridEngine:
         self.timeout_ms = deployment.timeout_ms
         self.max_seq = deployment.max_seq
         self.sample_seed = deployment.sample_seed
+        # injected cloud-link faults (None = the fault-free oracle) and
+        # the engine-wide degradation telemetry behind health_stats()
+        self.fault = deployment.fault
+        self._health = dict(losses=0, outage_steps=0, breaker_trips=0,
+                            breaker_recoveries=0, degraded_tokens=0,
+                            cancellations=0)
         # per-user adapter serving: the engine's OWN refcounted slot
         # cache over a fresh device bank (write_adapter_slot donates,
         # so caches never share buffers)
@@ -175,6 +198,48 @@ class HybridEngine:
         Empty on engines without adapter slots."""
         return self.adapters.stats() if self.adapters is not None else {}
 
+    def health_stats(self) -> Dict[str, int]:
+        """Fault/degradation telemetry: injected losses and outage
+        steps seen by cloud attempts, circuit-breaker trips and
+        recoveries, tokens served SLM-only under a tripped breaker, and
+        deadline cancellations.  All zero on a fault-free engine."""
+        return dict(self._health)
+
+    def _fault_f32(self) -> Tuple[float, float]:
+        """(edge, fallback) latencies in the float32 quantization the
+        device fault path charges: degraded tokens cost the edge decode
+        only, failed cloud attempts the full fallback wait."""
+        edge = float(np.float32(self.latency.edge_compute_ms))
+        return edge, max(edge, float(np.float32(self.timeout_ms)))
+
+    def _mirror_breaker(self, slot: "_Slot", lost: bool, step: int):
+        """Advance a slot's HOST breaker mirror by one attempted token
+        and fold the outcome into the health counters.  The mirror runs
+        the same ``breaker_step`` recurrence on the same weather the
+        device carry integrates inside the macro scan, so it stays
+        bit-equal to the device state at every boundary — the device
+        state is authoritative DURING a scan, the mirror between scans
+        (admission resets, eviction checkpoints, telemetry).
+
+        Returns (degraded, raw_fail)."""
+        fault = self.fault
+        outage = fault.outage_at(step)
+        raw = bool(lost) or outage
+        (slot.bfails, slot.bcool, degraded, attempt, _fail, trip,
+         recover) = LAT.breaker_step(slot.bfails, slot.bcool, True, raw,
+                                     fault.breaker_n, fault.breaker_m)
+        h = self._health
+        if attempt:
+            h["losses"] += int(bool(lost))
+            h["outage_steps"] += int(outage)
+        h["breaker_trips"] += int(trip)
+        h["breaker_recoveries"] += int(recover)
+        h["degraded_tokens"] += int(degraded)
+        st = slot.stats
+        st.degraded_tokens += int(degraded)
+        st.cloud_lost += int(attempt and raw)
+        return degraded, raw
+
     def _release_adapter(self, s: "_Slot"):
         """Drop a finished request's slot pin (EOS collect / forced
         completion).  Evicted-but-unfinished rows KEEP their pin — the
@@ -192,7 +257,8 @@ class HybridEngine:
     def generate(self, prompt: str, max_new_tokens: int = 16,
                  greedy: bool = True, rid: Optional[int] = None,
                  sample_key_id: Optional[int] = None,
-                 adapter_id: Optional[Any] = None
+                 adapter_id: Optional[Any] = None,
+                 deadline_ms: Optional[float] = None
                  ) -> Tuple[str, GenStats]:
         """rid, when given, keys both the latency draws and the sampling
         PRNG per (request, token) — order-independent, so batched and
@@ -202,7 +268,13 @@ class HybridEngine:
         derivation only — latency draws stay keyed by rid.
         ``adapter_id`` pins a registered per-user adapter for the whole
         request (the solo reference the batched per-row path must match
-        bit for bit); unknown ids raise ``adapters.UnknownAdapter``."""
+        bit for bit); unknown ids raise ``adapters.UnknownAdapter``.
+        ``deadline_ms`` bounds the simulated decode clock: token t is
+        emitted iff the clock after token t-1 is still under it, then
+        the request is cancelled with the partial text — the same rule
+        the batched engine applies at its decode boundaries.  Fault
+        weather (deployment ``fault=``) rides the rid-keyed path only:
+        the rid-less legacy stream has no counter to key it."""
         dep = self.dep
         stats = GenStats()
         stats.private = self.detector.detect(prompt)
@@ -248,7 +320,19 @@ class HybridEngine:
                 jnp.int32(rid), jnp.arange(max_new_tokens,
                                            dtype=jnp.int32))
             lat_row, ok_row = np.asarray(lat_d), np.asarray(ok_d)
+        lost_row = None
+        if use_cloud and rid is not None and self.fault is not None:
+            lost_d, _out_d = dep.fault_request(
+                jnp.int32(rid), jnp.arange(max_new_tokens,
+                                           dtype=jnp.int32))
+            lost_row = np.asarray(lost_d)
+        slot = _Slot(rid or 0, max_new_tokens, greedy, stats)
+        edge32, fb32 = self._fault_f32()
         for _ in range(max_new_tokens):
+            if deadline_ms is not None and stats.clock_ms >= deadline_ms:
+                stats.cancelled = True
+                self._health["cancellations"] += 1
+                break
             if use_cloud:
                 if lat_row is not None:
                     lat_ms, arrived = (float(lat_row[len(out_ids)]),
@@ -256,6 +340,13 @@ class HybridEngine:
                 else:        # rid-less legacy path: stateful host stream
                     lat_ms, arrived = self.latency.token_latency_ms(
                         self.timeout_ms, rid=rid, step=len(out_ids))
+                if lost_row is not None:
+                    degraded, raw = self._mirror_breaker(
+                        slot, bool(lost_row[len(out_ids)]), len(out_ids))
+                    if degraded:
+                        lat_ms, arrived = edge32, False
+                    elif raw:
+                        lat_ms, arrived = fb32, False
                 p_out, w = dep.fuse(sl, ll, jnp.asarray(arrived))
                 stats.cloud_tokens += int(arrived)
                 stats.fallback_tokens += int(not arrived)
@@ -263,7 +354,7 @@ class HybridEngine:
                 lat_ms, arrived = self.latency.edge_compute_ms, False
                 p_out = jax.nn.softmax(sl.astype(jnp.float32), -1)
                 w = jnp.ones((1,))
-            stats.latency_ms.append(float(lat_ms))
+            stats.push_latency(float(lat_ms))
             stats.fusion_w.append(float(w[0]))
 
             nxt = int(jnp.argmax(p_out[0])) if greedy else int(
@@ -314,6 +405,14 @@ class _Slot:
     # (released at completion, NOT at eviction — a parked request's
     # adapter must stay resident for its bit-identical resume)
     aslot: Optional[int] = None
+    # circuit-breaker HOST MIRROR of the device carry (consecutive
+    # injected failures, remaining degraded steps) — replayed from the
+    # macro traces with the same recurrence, so it equals the device
+    # state at every boundary and survives eviction/resume
+    bfails: int = 0
+    bcool: int = 0
+    # simulated-clock deadline; None = no deadline
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
@@ -336,6 +435,7 @@ class _PagedJob:
     truncated: bool = False
     resume: Any = None               # evicted _Slot to restore, or None
     aslot: Optional[int] = None      # pinned adapter slot, or None
+    deadline_ms: Optional[float] = None
 
 
 class _Lane:
@@ -420,7 +520,8 @@ class _Lane:
     def admit_many(self, jobs: List[Tuple]):
         """Admit a burst of requests in ONE packed B>1 prefill.
 
-        jobs: [(slot, prompt, max_new, greedy, rid, private, key_id)].
+        jobs: [(slot, prompt, max_new, greedy, rid, private, key_id,
+        aslot, deadline_ms)].
         Prompts are right-padded to a shared chunk-rounded length and prefilled
         as a single jitted call with per-row valid lengths masked
         (``LM.prefill_packed``); the batch axis is padded to a power of
@@ -477,19 +578,20 @@ class _Lane:
         if g is not None:
             self.gates = dep.insert_row(self.gates, g, src, dst)
         for jdx, (slot, prompt, max_new, greedy, rid, private,
-                  key_id, aslot) in enumerate(jobs):
+                  key_id, aslot, deadline) in enumerate(jobs):
             seq = eng._next_seq()
             st = GenStats(private=private, truncated=trunc[jdx],
                           admit_seq=seq)
             self.slots[slot] = _Slot(rid, max_new, greedy, st,
                                      key_id=key_id, seq=seq,
                                      prompt_len=len(ids[jdx]),
-                                     aslot=aslot)
+                                     aslot=aslot, deadline_ms=deadline)
 
     def _admit_one(self, slot: int, prompt: str, max_new: int,
                    greedy: bool, rid: int, private: bool,
                    key_id: Optional[int] = None,
-                   aslot: Optional[int] = None):
+                   aslot: Optional[int] = None,
+                   deadline_ms: Optional[float] = None):
         """Legacy per-request B=1 prefill (kept as the burst-admission
         benchmark baseline and a bit-exact reference path)."""
         eng = self.eng
@@ -519,7 +621,8 @@ class _Lane:
                                           truncated=len(raw) > cap,
                                           admit_seq=seq),
                                  key_id=key_id, seq=seq,
-                                 prompt_len=len(ids), aslot=aslot)
+                                 prompt_len=len(ids), aslot=aslot,
+                                 deadline_ms=deadline_ms)
 
     # ----------------------------------------------------- paged admission
     def ensure_prefix(self, prefix: str):
@@ -624,7 +727,8 @@ class _Lane:
                            admit_seq=j.seq),
                   key_id=j.key_id, seq=j.seq,
                   prompt_len=len(j.ids), prompt_ids=list(j.ids),
-                  full_text=j.prompt, aslot=j.aslot)
+                  full_text=j.prompt, aslot=j.aslot,
+                  deadline_ms=j.deadline_ms)
         self.slots[j.slot] = s
 
     def _pad_group(self, ids: List[List[int]], width_cap: int):
@@ -867,6 +971,46 @@ class _Lane:
         else:
             self.l_cache = cache
 
+    # ----------------------------------------------------- deadline cancel
+    def _cancel_row(self, i: int, s: _Slot) -> Tuple[int, str, GenStats]:
+        """Cancel an occupied row whose simulated clock passed its
+        deadline: partial text surfaces with ``cancelled`` set, the
+        adapter pin drops.  The caller parks/releases the device row."""
+        st = s.stats
+        st.cancelled = True
+        self.eng._health["cancellations"] += 1
+        self.eng._release_adapter(s)
+        self.slots[i] = None
+        return (s.rid, TOK.decode(s.out_ids), st)
+
+    def _cancel_expired(self) -> List[Tuple[int, str, GenStats]]:
+        """Boundary sweep: cancel every request past its deadline —
+        occupied rows (pages released / dense rows parked) AND
+        evicted-but-unfinished requests still queued for re-admission
+        (they hold no pages, only a completion debt)."""
+        out: List[Tuple[int, str, GenStats]] = []
+        keep: List[_Slot] = []
+        for s in self._evictq:
+            if s.deadline_ms is not None \
+                    and s.stats.clock_ms >= s.deadline_ms:
+                s.stats.cancelled = True
+                self.eng._health["cancellations"] += 1
+                self.eng._release_adapter(s)
+                out.append((s.rid, TOK.decode(s.out_ids), s.stats))
+            else:
+                keep.append(s)
+        self._evictq = keep
+        freed: List[int] = []
+        for i, s in enumerate(self.slots):
+            if s is None or s.deadline_ms is None:
+                continue
+            if s.stats.clock_ms >= s.deadline_ms:
+                out.append(self._cancel_row(i, s))
+                freed.append(i)
+        if freed:
+            self._park_rows(freed)
+        return out
+
     # ------------------------------------------------------------- decode
     def step(self) -> List[Tuple[int, str, GenStats]]:
         """One fused decode step over every occupied row (the per-step
@@ -878,11 +1022,13 @@ class _Lane:
         dispatch + one sync per K tokens and must stay bit-identical."""
         eng = self.eng
         dep = eng.dep
+        done0 = self._cancel_expired()
         self._readmit_evicted()
-        done0 = self._provision(1)
+        done0 += self._provision(1)
         if self.active == 0:
             return done0
         b = self.batch
+        fault = eng.fault if self.use_cloud else None
         if self.use_cloud:
             occ = np.zeros((b,), bool)
             rids = np.zeros((b,), np.int32)
@@ -894,8 +1040,32 @@ class _Lane:
             # the same threefry weather the macro-step scan draws
             lat_d, ok_d = dep.lat_batched(jnp.asarray(rids),
                                           jnp.asarray(steps))
-            lat = np.asarray(lat_d)
-            arrived = np.asarray(ok_d) & occ
+            lat = np.asarray(lat_d).copy()
+            ok = np.asarray(ok_d)
+            if fault is not None:
+                # identical fault weather to the macro scan, then the
+                # per-row breaker mirror advances on the host (it IS
+                # the authoritative state on this path)
+                lost_d, _ = dep.fault_batched(jnp.asarray(rids),
+                                              jnp.asarray(steps))
+                lost_h = np.asarray(lost_d)
+                degraded = np.zeros((b,), bool)
+                raws = np.zeros((b,), bool)
+                edge32, fb32 = eng._fault_f32()
+                for i, s in enumerate(self.slots):
+                    if s is None or s.parked:
+                        continue
+                    deg, raw = eng._mirror_breaker(
+                        s, bool(lost_h[i]), len(s.out_ids))
+                    degraded[i], raws[i] = deg, raw
+                    if deg:
+                        lat[i] = edge32
+                    elif raw:
+                        lat[i] = fb32
+                arrived = OPS.cloud_arrival_mask(ok, occ, raws,
+                                                 degraded=degraded)
+            else:
+                arrived = OPS.cloud_arrival_mask(ok, occ)
             probs, w = dep.fuse_batched(self.sl, self.ll,
                                         jnp.asarray(arrived))
         else:
@@ -930,9 +1100,9 @@ class _Lane:
             if self.use_cloud:
                 st.cloud_tokens += int(arrived[i])
                 st.fallback_tokens += int(not arrived[i])
-                st.latency_ms.append(float(lat[i]))
+                st.push_latency(float(lat[i]))
             else:
-                st.latency_ms.append(float(eng.latency.edge_compute_ms))
+                st.push_latency(float(eng.latency.edge_compute_ms))
             st.fusion_w.append(float(w_host[i]))
             nxt = int(nxt_greedy[i]) if s.greedy else int(nxt_sampled[i])
             s.out_ids.append(nxt)
@@ -1209,6 +1379,7 @@ class _Lane:
         dep = eng.dep
         if self._inflight is not None:
             return
+        self._pending_done.extend(self._cancel_expired())
         self._readmit_evicted()
         self._pending_done.extend(self._provision(k))
         if self.active == 0:
@@ -1220,6 +1391,12 @@ class _Lane:
         maxn = np.zeros((b,), np.int32)
         greedy = np.ones((b,), bool)
         done = np.ones((b,), bool)
+        # circuit-breaker state enters the scan from the slots' host
+        # mirrors (bit-equal to the carry the last scan returned — the
+        # mirror replays the identical recurrence) so admission resets
+        # and eviction/resume never need a device fetch or scatter
+        bfails = np.zeros((b,), np.int32)
+        bcool = np.zeros((b,), np.int32)
         for i, s in enumerate(self.slots):
             if s is None or s.parked:
                 # parked-for-growth rows stay done for the whole scan:
@@ -1232,12 +1409,14 @@ class _Lane:
             steps[i] = len(s.out_ids)
             maxn[i] = s.max_new
             greedy[i] = s.greedy
+            bfails[i], bcool[i] = s.bfails, s.bcool
         sample = bool((~greedy & ~done).any())
         fn = dep.macro_cloud if self.use_cloud else dep.macro_edge
         carry, traces = fn(
             eng.slm_params, eng.llm_params if self.use_cloud else None,
             eng.lora, self.gates,
             self.s_cache, self.l_cache, self.sl, self.ll,
+            jnp.asarray(bfails), jnp.asarray(bcool),
             jnp.asarray(rids), jnp.asarray(keys), jnp.asarray(steps),
             jnp.asarray(maxn), jnp.asarray(greedy), jnp.asarray(done),
             k, sample)
@@ -1257,24 +1436,42 @@ class _Lane:
             return out_done
         k, traces = self._inflight
         self._inflight = None
-        toks, arrived, lat, w, emit = eng.dep.fetch_traces(traces)
+        toks, arrived, lat, w, emit, lost = eng.dep.fetch_traces(traces)
+        fault = eng.fault if self.use_cloud else None
 
         out_done: List[Tuple[int, str, GenStats]] = []
         out_done.extend(self._pending_done)
         self._pending_done = []
         freed: List[int] = []
+        cancelled: List[int] = []
         for t in range(k):
             for i, s in enumerate(self.slots):
                 if s is None or not emit[t, i]:
                     continue
                 st = s.stats
+                if s.deadline_ms is not None \
+                        and st.clock_ms >= s.deadline_ms:
+                    # the deadline expired mid-macro: token t (and the
+                    # rest of this row's trace) is discarded — the same
+                    # "emit iff the clock after t-1 is under deadline"
+                    # rule the per-token path applies at its step top
+                    out_done.append(self._cancel_row(i, s))
+                    cancelled.append(i)
+                    continue
+                if fault is not None:
+                    # replay the breaker mirror on the traced loss draw
+                    # + host-recomputed outage schedule; emit == the
+                    # scan's active mask, so the mirror sees exactly
+                    # the transitions the device carry integrated
+                    eng._mirror_breaker(s, bool(lost[t, i]),
+                                        len(s.out_ids))
                 if self.use_cloud:
                     st.cloud_tokens += int(arrived[t, i])
                     st.fallback_tokens += int(not arrived[t, i])
-                    st.latency_ms.append(float(lat[t, i]))
+                    st.push_latency(float(lat[t, i]))
                     st.fusion_w.append(float(w[t, i]))
                 else:
-                    st.latency_ms.append(float(eng.latency.edge_compute_ms))
+                    st.push_latency(float(eng.latency.edge_compute_ms))
                     st.fusion_w.append(1.0)
                 nxt = int(toks[t, i])
                 s.out_ids.append(nxt)
@@ -1284,6 +1481,10 @@ class _Lane:
                     eng._release_adapter(s)
                     self.slots[i] = None    # freed: refill next boundary
                     freed.append(i)
+        if cancelled:
+            # cancelled rows were still live on device (the scan knows
+            # no deadlines) — park/release them explicitly
+            self._park_rows(cancelled)
         if freed and eng.paged:
             # drained rows were parked in-scan; now return their pages
             # (dense rows stay parked-but-resident until re-admission)
@@ -1454,14 +1655,18 @@ class BatchedHybridEngine(HybridEngine):
                     greedy: bool = True, rid: int = 0,
                     seed: Optional[int] = None,
                     prefix: Optional[str] = None,
-                    adapter_id: Optional[Any] = None) -> bool:
+                    adapter_id: Optional[Any] = None,
+                    deadline_ms: Optional[float] = None) -> bool:
         """Admit a request into its lane; False if it couldn't be
         admitted (lane full, or — paged — not enough free pages, or no
         adapter slot free for ``adapter_id``; a page demand beyond total
         pool capacity or an UNKNOWN adapter id is a HARD reject surfaced
-        via ``pop_rejected`` and never retried)."""
+        via ``pop_rejected`` and never retried).  ``deadline_ms`` bounds
+        the request's simulated decode clock — passed, it is cancelled
+        at the next decode boundary with its partial text."""
         return self.add_requests([(prompt, max_new_tokens, greedy,
-                                   rid, seed, prefix, adapter_id)])[0]
+                                   rid, seed, prefix, adapter_id,
+                                   deadline_ms)])[0]
 
     def _adapter_reject_msg(self, aid) -> str:
         if self.adapters is None:
@@ -1486,10 +1691,11 @@ class BatchedHybridEngine(HybridEngine):
 
     def add_requests(self, reqs: List[Tuple]) -> List[bool]:
         """Admit a burst of (prompt, max_new_tokens, greedy, rid[, seed
-        [, prefix[, adapter_id]]]) requests (seed overrides rid in the
-        sampling-key derivation; prefix is a shared preamble, COW
-        page-shared on the paged path; adapter_id pins a registered
-        per-user adapter slot for the request's lifetime).  Requests
+        [, prefix[, adapter_id[, deadline_ms]]]]) requests (seed
+        overrides rid in the sampling-key derivation; prefix is a
+        shared preamble, COW page-shared on the paged path; adapter_id
+        pins a registered per-user adapter slot for the request's
+        lifetime; deadline_ms bounds its simulated clock).  Requests
         landing in the same lane share ONE packed B>1 prefill (the
         per-request prefill loop dominated burst admission wall time).
         Returns per-request admitted flags; soft-refused requests (lane
@@ -1505,6 +1711,7 @@ class BatchedHybridEngine(HybridEngine):
         for i, (prompt, max_new, greedy, rid, *rest) in enumerate(reqs):
             prefix = rest[1] if len(rest) > 1 else None
             aid = rest[2] if len(rest) > 2 else None
+            deadline = rest[3] if len(rest) > 3 else None
             full = (prefix or "") + prompt
             private = self.detector.detect(full)
             if aid is not None and (self.adapters is None
@@ -1519,7 +1726,8 @@ class BatchedHybridEngine(HybridEngine):
             slot = free[private].pop(0)
             jobs[private].append((slot, full, max_new, greedy,
                                   rid, private,
-                                  rest[0] if rest else None, aslot))
+                                  rest[0] if rest else None, aslot,
+                                  deadline))
             flags[i] = True
         self.edge_lane.admit_many(jobs[True])
         self.cloud_lane.admit_many(jobs[False])
@@ -1551,6 +1759,7 @@ class BatchedHybridEngine(HybridEngine):
             seed = rest[0] if rest else None
             prefix = rest[1] if len(rest) > 1 else None
             aid = rest[2] if len(rest) > 2 else None
+            deadline = rest[3] if len(rest) > 3 else None
             full = (prefix or "") + prompt
             private = self.detector.detect(full)
             lane = self.edge_lane if private else self.cloud_lane
@@ -1633,7 +1842,7 @@ class BatchedHybridEngine(HybridEngine):
             jobs[private].append(_PagedJob(
                 slot, full, max_new, greedy, rid, private, seed, ids,
                 rows_s, rows_l, entry, seq=self._next_seq(),
-                truncated=truncated, aslot=aslot))
+                truncated=truncated, aslot=aslot, deadline_ms=deadline))
             flags[i] = True
         self.edge_lane.admit_many(jobs[True])
         self.cloud_lane.admit_many(jobs[False])

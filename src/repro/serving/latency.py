@@ -1,4 +1,4 @@
-"""Network / device latency processes for the serving simulation.
+"""Network / device latency + fault processes for the serving simulation.
 
 The paper's Sec. IV-D / Fig. 16 experiment varies RTT 0-500 ms against a
 ~65 ms/token edge decode and a 200 ms fallback budget.  We model per-token
@@ -14,6 +14,19 @@ the exact same device computation: they return the identical float32
 weather, so sequential, per-step-batched and K-token macro-step engines
 all see the same per-(request, token) network state and host-side tests
 can still reason about a single draw at a time.
+
+``FaultModel`` extends the weather from "slow" to "lossy/down" with the
+same discipline: per-token LOSS (the cloud reply is dropped after the
+wait) is a counter-based draw keyed ``(seed, rid, step)``; OUTAGE
+windows (the link is down for a span of steps) are a seeded periodic
+schedule over the step index, shared by every row.  Both are computable
+on device inside the macro scan and by host shims that return the
+identical booleans.  The per-row circuit breaker that degrades a
+repeatedly failing row to SLM-only decode is specified here too —
+``breaker_step`` (pure-Python scalar reference, the host mirror) and
+``breaker_transition_device`` (the vectorized update the macro scan
+carries) implement the same recurrence, locked together by the
+``check_fault_weather`` property tests.
 """
 from __future__ import annotations
 
@@ -105,3 +118,133 @@ class LatencyModel:
         if arrival <= timeout:
             return arrival, True                         # bounded wait
         return max(edge, timeout), False                 # fallback
+
+
+@dataclass
+class FaultModel:
+    """Counter-based cloud-link fault weather + circuit-breaker policy.
+
+    LOSS: token (rid, step) draws uniform u from the threefry key
+    fold_in(fold_in(key(seed), rid), step) — the cloud reply for that
+    token is dropped iff u < loss_rate.  The draw is order-independent
+    and identical no matter which engine path evaluates it.
+
+    OUTAGE: with ``outage_period > 0`` and ``outage_len > 0`` the link is
+    down for every step where ``(step + offset) % period < len``, with a
+    seeded (host-computed, trace-constant) phase offset.  Outages are a
+    pure function of the step index — shared by every row — so host
+    replay can recompute them without the device tracing them.
+
+    BREAKER: ``breaker_n`` consecutive injected failures (lost | outage;
+    *never* plain timeout fallbacks, which belong to the fault-free
+    oracle) flip a row to SLM-only degraded decode for ``breaker_m``
+    steps, then a single probe token re-attempts the cloud: probe
+    failure re-trips immediately, probe success recovers the row.
+    """
+    loss_rate: float = 0.0
+    outage_period: int = 0
+    outage_len: int = 0
+    seed: int = 0
+    breaker_n: int = 3
+    breaker_m: int = 4
+
+    def __post_init__(self):
+        if self.outage_period > 0 and self.outage_len > 0:
+            self._offset = random.Random(self.seed).randrange(
+                self.outage_period)
+        else:
+            self._offset = 0
+
+    @property
+    def offset(self) -> int:
+        return self._offset
+
+    # ------------------------------------------------------------- device
+    def lost_device(self, rids, steps) -> jax.Array:
+        """(B,) bool — per-token loss draws, counter-based like
+        ``LatencyModel.arrival_device`` (same keying discipline, distinct
+        fault seed stream)."""
+        rids = jnp.asarray(rids, jnp.int32)
+        steps = jnp.asarray(steps, jnp.int32)
+        if self.loss_rate <= 0.0:
+            return jnp.zeros(rids.shape, bool)
+        def one(r, s):
+            key = jax.random.fold_in(jax.random.fold_in(
+                jax.random.key(self.seed), r), s)
+            return jax.random.uniform(key)
+        u = jax.vmap(one)(rids, steps)
+        return u < jnp.float32(self.loss_rate)
+
+    def outage_device(self, steps) -> jax.Array:
+        """(B,) bool — True where the step index falls in an outage
+        window.  Pure step arithmetic; rows share the same schedule."""
+        steps = jnp.asarray(steps, jnp.int32)
+        if self.outage_period <= 0 or self.outage_len <= 0:
+            return jnp.zeros(steps.shape, bool)
+        phase = (steps + jnp.int32(self._offset)) % jnp.int32(
+            self.outage_period)
+        return phase < jnp.int32(self.outage_len)
+
+    def faults_device(self, rids, steps) -> tuple[jax.Array, jax.Array]:
+        """(lost (B,) bool, outage (B,) bool) for a batch of tokens."""
+        return self.lost_device(rids, steps), self.outage_device(steps)
+
+    # --------------------------------------------------------------- host
+    def lost_at(self, rid: int, step: int) -> bool:
+        """Host parity shim over ``lost_device`` for a single token."""
+        if self.loss_rate <= 0.0:
+            return False
+        return bool(self.lost_device(jnp.asarray([rid], jnp.int32),
+                                     jnp.asarray([step], jnp.int32))[0])
+
+    def outage_at(self, step: int) -> bool:
+        """Host replay of the outage schedule — no device work."""
+        if self.outage_period <= 0 or self.outage_len <= 0:
+            return False
+        return (step + self._offset) % self.outage_period < self.outage_len
+
+
+def breaker_step(fails: int, cooldown: int, active: bool, raw_fail: bool,
+                 n: int, m: int):
+    """Scalar circuit-breaker recurrence (pure-Python reference).
+
+    State is two ints per row: ``fails`` (consecutive injected-failure
+    count, clamped at n while the breaker is open so the post-backoff
+    probe failure re-trips immediately) and ``cooldown`` (remaining
+    degraded steps; > 0 means SLM-only decode this token).
+
+    Returns (fails', cooldown', degraded, attempt, fail, trip, recover)
+    where ``degraded`` says this token decoded SLM-only, ``attempt``
+    that the cloud was consulted, ``fail``/``trip``/``recover`` the
+    outcome events.  ``raw_fail`` must be the *injected* fault signal
+    (lost | outage) only — never a plain timeout — so a fault-free run
+    never moves the state.  Inactive rows are frozen."""
+    degraded = active and cooldown > 0
+    attempt = active and not degraded
+    fail = attempt and raw_fail
+    succ = attempt and not raw_fail
+    f1 = fails + 1 if fail else (0 if succ else fails)
+    trip = fail and f1 >= n
+    recover = succ and fails >= n
+    new_fails = n if trip else f1
+    new_cooldown = m if trip else (cooldown - 1 if degraded else cooldown)
+    return new_fails, new_cooldown, degraded, attempt, fail, trip, recover
+
+
+def breaker_transition_device(fails, cooldown, active, raw_fail, n: int,
+                              m: int):
+    """Vectorized ``breaker_step`` over (B,) int32/bool arrays — the
+    update the K-token macro scan carries on device.  Must stay
+    term-for-term identical to the scalar reference (pinned by the
+    ``check_fault_weather`` property)."""
+    degraded = active & (cooldown > 0)
+    attempt = active & ~degraded
+    fail = attempt & raw_fail
+    succ = attempt & ~raw_fail
+    f1 = jnp.where(fail, fails + 1, jnp.where(succ, 0, fails))
+    trip = fail & (f1 >= n)
+    recover = succ & (fails >= n)
+    new_fails = jnp.where(trip, jnp.int32(n), f1)
+    new_cooldown = jnp.where(trip, jnp.int32(m),
+                             jnp.where(degraded, cooldown - 1, cooldown))
+    return new_fails, new_cooldown, degraded, attempt, fail, trip, recover

@@ -28,7 +28,8 @@ from repro.serving.deployment import ServingDeployment
 from repro.serving.engine import (BatchedHybridEngine, HybridEngine,
                                   SoloEngine, _admission_gates)
 from repro.serving.latency import LatencyModel
-from repro.serving.scheduler import ContinuousBatchScheduler, Scheduler
+from repro.serving.scheduler import (ContinuousBatchScheduler,
+                                     ResponseStatus, Scheduler)
 
 LAT = dict(rtt_ms=10, jitter_ms=0)
 PROMPTS = [
@@ -292,13 +293,16 @@ def test_unknown_adapter_hard_rejects(engine_parts):
     bad = sched.submit(PROMPTS[2], 4, adapter_id="ghost")
     res = {r.rid: r for r in sched.run()}
     assert res[good].error is None and res[good].stats.tokens > 0
+    assert res[good].status is ResponseStatus.OK
     assert res[bad].error is not None and "ghost" in res[bad].error
+    assert res[bad].status is ResponseStatus.REJECTED
     # sequential scheduler: same surface via UnknownAdapter
     seq = Scheduler(HybridEngine(deployment=dep))
     _register(seq.engine, _mk_adapters(slm, ["u0"]))
     seq.submit(PROMPTS[0], 4, adapter_id="nope")
     (r,) = seq.run()
     assert r.error is not None and "nope" in r.error
+    assert r.status is ResponseStatus.REJECTED
 
 
 # ------------------------------------------------------- coupling errors

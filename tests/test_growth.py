@@ -18,7 +18,8 @@ from repro.serving.deployment import ServingDeployment
 from repro.serving.engine import (BatchedHybridEngine, HybridEngine,
                                   SoloEngine)
 from repro.serving.latency import LatencyModel
-from repro.serving.scheduler import ContinuousBatchScheduler, Scheduler
+from repro.serving.scheduler import (ContinuousBatchScheduler,
+                                     ResponseStatus, Scheduler)
 
 LAT = dict(rtt_ms=10, jitter_ms=0)
 SHORT = "hi there"            # 10 tokens: 3 pages @ 4 + 1 decode page
@@ -132,7 +133,8 @@ def test_truncated_flag_all_paths(parts):
     sched.submit("short one", 4)
     res = sched.run()
     assert res[0].truncated and res[0].stats.truncated
-    assert not res[1].truncated
+    assert res[0].status is ResponseStatus.TRUNCATED
+    assert not res[1].truncated and res[1].status is ResponseStatus.OK
 
     for paged in (False, True):
         eng = BatchedHybridEngine(deployment=dep, batch_size=2,

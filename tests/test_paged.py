@@ -23,7 +23,8 @@ from repro.serving import paging as PAG
 from repro.serving.deployment import ServingDeployment
 from repro.serving.engine import BatchedHybridEngine
 from repro.serving.latency import LatencyModel
-from repro.serving.scheduler import ContinuousBatchScheduler
+from repro.serving.scheduler import (ContinuousBatchScheduler,
+                                     ResponseStatus)
 
 LAT = dict(rtt_ms=10, jitter_ms=0)
 PREFIX = "you are a helpful assistant. "      # >= 1 page of tokens @ 16
@@ -328,6 +329,7 @@ def test_page_gated_admission_refusals(engine_parts):
     sched.submit("what time is it now", 40)
     res = sched.run()
     assert len(res) == 1 and res[0].error is not None
+    assert res[0].status is ResponseStatus.REJECTED
     assert res[0].text == "" and res[0].stats.tokens == 0
 
 

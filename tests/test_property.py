@@ -30,6 +30,7 @@ except ImportError:                                   # pragma: no cover
 
 from repro.core import dp as DP
 from repro.serving import adapters as ADP
+from repro.serving import latency as LAT
 from repro.serving import paging as PAG
 from repro.core import embedding as EMB
 from repro.core import fusion as FUS
@@ -604,6 +605,113 @@ def test_slot_gates_seeded():
     np.testing.assert_array_equal(
         g, np.asarray([[1, 0, 0], [0, 0, 0], [0, 0, 1], [0, 0, 0]],
                       np.float32))
+
+
+# --------------------------------------- fault weather (ISSUE 9)
+# The fault-injection invariants behind the chaos-tolerant engine:
+# loss/outage draws are a pure function of (seed, rid, step) — order-
+# independent and identical between the batched device path (the macro
+# scan's view) and the host shims (the per-token/sequential engines'
+# view) — and the circuit breaker is a pure function of the injected-
+# failure sequence, with the scalar host reference and the vectorized
+# device recurrence in lockstep event for event.
+
+
+def check_fault_weather(seed: int, loss_rate: float, period: int,
+                        olen: int, n: int, m: int, steps: int = 12,
+                        b: int = 2):
+    fm = LAT.FaultModel(loss_rate=loss_rate, outage_period=period,
+                        outage_len=olen, seed=seed,
+                        breaker_n=n, breaker_m=m)
+    rng = np.random.RandomState(seed)
+    rids = rng.randint(0, 10_000, size=(b,))
+    grid = [(int(r), int(s)) for r in rids for s in range(steps)]
+
+    def draw(order):
+        rr = jnp.asarray([grid[i][0] for i in order], jnp.int32)
+        ss = jnp.asarray([grid[i][1] for i in order], jnp.int32)
+        lost, out = fm.faults_device(rr, ss)
+        return ({grid[i]: bool(lost[j]) for j, i in enumerate(order)},
+                {grid[i]: bool(out[j]) for j, i in enumerate(order)})
+
+    # one batched draw in a shuffled order, one in natural order: the
+    # per-(rid, step) weather must be identical (order independence),
+    # and equal to the host shims element by element
+    lost_a, out_a = draw(rng.permutation(len(grid)))
+    lost_b, out_b = draw(range(len(grid)))
+    assert lost_a == lost_b and out_a == out_b
+    for (r, s), v in lost_a.items():
+        assert v == fm.lost_at(r, s)
+        assert out_a[(r, s)] == fm.outage_at(s)
+    if period > 0 and olen > 0:
+        assert all(out_a[(r, s)] == ((s + fm.offset) % period < olen)
+                   for (r, s) in grid)
+    if loss_rate == 0.0:
+        assert not any(lost_a.values())
+
+    # breaker lockstep: scalar host reference vs vectorized device
+    # recurrence over random (active, raw_fail) sequences — states and
+    # events must agree at every step, and the whole trajectory must be
+    # a pure function of the sequence (replay reproduces it exactly)
+    raw = rng.rand(steps, b) < 0.45
+    act = rng.rand(steps, b) < 0.9
+    f_d = jnp.zeros((b,), jnp.int32)
+    c_d = jnp.zeros((b,), jnp.int32)
+
+    def host_trajectory():
+        f_h, c_h = [0] * b, [0] * b
+        evs = []
+        for t in range(steps):
+            step_evs = [LAT.breaker_step(f_h[i], c_h[i], bool(act[t, i]),
+                                         bool(raw[t, i]), n, m)
+                        for i in range(b)]
+            f_h = [e[0] for e in step_evs]
+            c_h = [e[1] for e in step_evs]
+            evs.append(step_evs)
+        return evs
+
+    traj = host_trajectory()
+    assert traj == host_trajectory(), "breaker is not a pure function"
+    for t in range(steps):
+        f_d, c_d, deg, att, fail, trip, rec = \
+            LAT.breaker_transition_device(
+                f_d, c_d, jnp.asarray(act[t]), jnp.asarray(raw[t]), n, m)
+        for i, e in enumerate(traj[t]):
+            assert (int(f_d[i]), int(c_d[i]), bool(deg[i]), bool(att[i]),
+                    bool(fail[i]), bool(trip[i]), bool(rec[i])) == e
+            # structural invariants: degraded and attempt partition the
+            # active rows; a trip always opens a full m-step cooldown;
+            # state is clamped so the post-backoff probe can re-trip
+            assert not (e[2] and e[3])
+            assert bool(act[t, i]) == (e[2] or e[3])
+            if e[5]:
+                assert e[1] == m and e[0] == n
+            assert 0 <= e[0] <= n
+    # a fault-free sequence never moves the state or emits events
+    for i in range(b):
+        f0, c0 = 0, 0
+        for t in range(steps):
+            f0, c0, deg, att, fail, trip, rec = LAT.breaker_step(
+                f0, c0, bool(act[t, i]), False, n, m)
+            assert (f0, c0, deg, fail, trip, rec) == (
+                0, 0, False, False, False, False)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0.0, 0.2, 0.5, 1.0]),
+       st.integers(0, 8), st.integers(0, 4), st.integers(1, 4),
+       st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_fault_weather(seed, loss_rate, period, olen, n, m):
+    check_fault_weather(seed, loss_rate, period, olen, n, m)
+
+
+@pytest.mark.parametrize("seed,loss_rate,period,olen,n,m", [
+    (0, 0.5, 6, 2, 2, 3), (1, 0.0, 0, 0, 3, 4), (2, 1.0, 4, 4, 1, 1),
+    (3, 0.3, 5, 1, 3, 2), (4, 0.2, 0, 0, 2, 5),
+])
+def test_fault_weather_seeded(seed, loss_rate, period, olen, n, m):
+    """Seeded fallback of the @given sweep (runs w/o hypothesis)."""
+    check_fault_weather(seed, loss_rate, period, olen, n, m)
 
 
 def test_adapter_cache_raises_on_misuse():
