@@ -139,6 +139,7 @@ def run():
     out.update(run_long_context())
     out.update(run_multi_tenant())
     out.update(run_chaos())
+    out.update(run_speculative())
     out["per_device_param_bytes"] = dep.per_device_param_bytes()
     return out
 
@@ -683,6 +684,89 @@ def run_chaos(batch: int = 4, macro_k: int = 4) -> dict:
         "all_terminated": True}}
 
 
+# ---------------------------------------------------------- speculative
+
+
+def run_speculative(batch: int = 4, spec_ks=(2, 4),
+                    max_new: int = MAX_NEW) -> dict:
+    """Speculative decode (ISSUE 10) on the dispatch-bound micro pair:
+    the SLM drafts k tokens greedily, ONE batched ``spec_cloud``
+    dispatch verifies the whole window, rejected drafts roll back.
+
+    Counted the PR-4 way (wrap the deployment entry points AFTER a
+    warmup pass so the burst jit's trace-time ``llm_decode`` call is
+    not mistaken for a runtime dispatch): at k=4 the spec path must pay
+    >= 1.5x fewer LLM round-trips than the per-token oracle while
+    emitting the SAME greedy tokens.  The JSON records accept-rate,
+    cloud-calls-per-token and tokens/sec vs spec_k=0."""
+    from repro.serving.scheduler import summarize
+    dep = _deployment(_micro_pair())
+    prompts = PROMPTS[:2 * batch]            # all cloud-eligible
+
+    def timed(k):
+        sched = ContinuousBatchScheduler.from_deployment(
+            dep, batch_size=batch, edge_batch_size=1, macro_k=0,
+            spec_k=k)
+        for p in prompts:                    # warmup pass (compile)
+            sched.submit(p, max_new)
+        sched.run()
+        calls = {"spec": 0, "llm": 0}
+        saved = {n: getattr(dep, n) for n in ("spec_cloud", "llm_decode")}
+
+        def wrap(fn, key):
+            def counting(*a, **kw):
+                calls[key] += 1
+                return fn(*a, **kw)
+            return counting
+
+        dep.spec_cloud = wrap(saved["spec_cloud"], "spec")
+        dep.llm_decode = wrap(saved["llm_decode"], "llm")
+        try:
+            for p in prompts:                # timed + counted pass
+                sched.submit(p, max_new)
+            t0 = time.perf_counter()
+            res = sched.run()
+            dt = time.perf_counter() - t0
+        finally:
+            for n, fn in saved.items():
+                setattr(dep, n, fn)
+        toks = sum(r.stats.tokens for r in res)
+        return toks / dt, res, calls
+
+    base_tps, base_res, base_calls = timed(0)
+    base_disp = base_calls["llm"]
+    assert base_calls["spec"] == 0, base_calls
+    C.row("throughput/spec_k=0", 1e6 / base_tps,
+          f"tokens_per_s={base_tps:.1f} llm_dispatches={base_disp} "
+          f"(per-token oracle)")
+    out = {"spec_baseline_tokens_per_s": base_tps,
+           "spec_baseline_llm_dispatches": base_disp}
+    for k in spec_ks:
+        tps, res, calls = timed(k)
+        assert [r.text for r in res] == [r.text for r in base_res], \
+            f"spec_k={k} diverged from the per-token oracle"
+        # verify bursts are the ONLY cloud entry point on the spec path
+        assert calls["llm"] == 0, calls
+        summ = summarize(res)
+        ratio = base_disp / max(1, calls["spec"])
+        out[f"spec_k={k}_tokens_per_s"] = tps
+        out[f"spec_k={k}_llm_dispatches"] = calls["spec"]
+        out[f"spec_k={k}_accept_rate"] = summ["accept_rate"]
+        out[f"spec_k={k}_cloud_calls_per_token"] = \
+            summ["cloud_calls_per_token"]
+        out[f"spec_k={k}_dispatch_reduction"] = ratio
+        C.row(f"throughput/spec_k={k}", 1e6 / tps,
+              f"tokens_per_s={tps:.1f} vs_oracle={tps / base_tps:.2f}x "
+              f"dispatches={calls['spec']} ({ratio:.2f}x fewer) "
+              f"accept={summ['accept_rate']:.2f} "
+              f"calls/tok={summ['cloud_calls_per_token']:.2f}")
+    red4 = out[f"spec_k={spec_ks[-1]}_dispatch_reduction"]
+    assert red4 >= 1.5, (
+        f"spec_k={spec_ks[-1]} pays only {red4:.2f}x fewer LLM "
+        f"dispatches than the per-token oracle")
+    return out
+
+
 # ------------------------------------------------------------- windowed
 
 
@@ -780,6 +864,9 @@ def run_smoke(mesh_devices: int = 0, rules: str = "inference"):
     # under 10% loss + bursty outages, breaker trips recorded,
     # deadline rows cancelled leak-free
     out.update(run_chaos())
+    # ISSUE 10: speculative decode on the micro pair — accept-rate,
+    # cloud-calls-per-token and the >=1.5x dispatch reduction at k=4
+    out.update(run_speculative())
     pd = dep.per_device_param_bytes()
     out["per_device_param_bytes"] = pd
     if mesh is not None and dict(mesh.shape).get("model", 1) > 1:

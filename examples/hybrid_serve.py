@@ -13,6 +13,11 @@ admissions arriving together share one packed B>1 prefill.
 sliding-window layers.  ``--adapters N --adapter-slots E`` registers N
 per-user LoRA adapters over an E-slot resident cache and spreads the
 requests across users — E < N exercises eviction and soft refusal.
+``--spec-k K`` (with --batch > 1) turns on speculative decode: the SLM
+drafts K tokens greedily and ONE batched LLM dispatch verifies the
+window — same greedy tokens, ~K-fold fewer cloud round-trips (watch
+``cloud_calls_per_token`` and ``accept_rate`` in the summary drop the
+per-token cost while ``cloud=`` stays full).
 """
 import argparse
 
@@ -45,6 +50,10 @@ def main():
     ap.add_argument("--tokens", type=int, default=6)
     ap.add_argument("--batch", type=int, default=0,
                     help="decode-batch width; >1 = continuous batching")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode window (requires --batch "
+                         "> 1): SLM drafts K, one LLM dispatch "
+                         "verifies; 0 = per-token oracle")
     ap.add_argument("--pair", default="2b", choices=sorted(FLOE_PAIRS),
                     help="SLM/LLM pairing; gemma3 = ring-cached "
                          "mixed-attention edge SLM")
@@ -57,6 +66,9 @@ def main():
     ap.add_argument("--adapter-rank", type=int, default=2,
                     help="LoRA rank of the demo adapters")
     args = ap.parse_args()
+    if args.spec_k and args.batch <= 1:
+        ap.error("--spec-k requires --batch > 1 (the draft/verify "
+                 "burst runs on the batched cloud lane)")
     slots = args.adapter_slots or (min(args.adapters, 2)
                                    if args.adapters else 0)
 
@@ -76,7 +88,7 @@ def main():
                                 adapter_slots=slots)
         if args.batch > 1:
             sched = ContinuousBatchScheduler.from_deployment(
-                dep, batch_size=args.batch)
+                dep, batch_size=args.batch, spec_k=args.spec_k)
         else:
             sched = Scheduler.from_deployment(dep)
         aid_of = [None] * len(PROMPTS)

@@ -71,6 +71,49 @@ def cloud_arrival_mask(ok, active, lost=None, outage=None, degraded=None):
     return m
 
 
+def accept_prefix(draft, sel, steps, max_new, active, eos: int):
+    """Fused accept/rollback epilogue of a speculative draft/verify
+    burst (tentpole PR 10): accept the longest draft prefix the fused
+    distribution agrees with, then cap it by EOS and the per-row token
+    budget.
+
+    draft, sel: (k, B) int32 — the SLM's k greedy draft tokens and the
+    fused distribution's per-position choices (greedy argmax or the
+    keyed sample; along the accepted prefix both paths see bitwise the
+    baseline per-token distributions, so agreement there IS baseline
+    equivalence).  steps/max_new: (B,) int32 emitted-so-far / budget;
+    active: (B,) bool.
+
+    Returns (n_emit, c_sel, done_now, correction):
+      n_emit     (B,) tokens emitted this burst (0 for inactive rows;
+                 the emitted tokens are sel[:n_emit]),
+      c_sel      (B,) length of the agreeing prefix (sel == draft),
+      done_now   (B,) row finished (EOS emitted or budget exhausted),
+      correction (B,) row's last emitted token diverged from the draft
+                 (the "+1" bonus token) — its SLM state needs one
+                 post-rollback decode of sel[n_emit-1].
+
+    Invariant: an active row with neither done_now nor correction
+    accepted the full window (n_emit == k <= c_sel).  Pure elementwise
+    jnp — traceable inside the burst jit and checked against
+    ``ref.accept_prefix_ref``."""
+    k = draft.shape[0]
+    match = (sel == draft)
+    c_sel = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=0), axis=0)
+    n_raw = jnp.minimum(c_sel + 1, k)
+    idx = jnp.arange(k, dtype=jnp.int32)[:, None]
+    is_eos = (sel == eos) & (idx < n_raw[None, :])
+    eos_pos = jnp.min(jnp.where(is_eos, idx, k), axis=0)
+    n1 = jnp.minimum(n_raw, eos_pos + 1)
+    rem = max_new - steps
+    n_emit = jnp.maximum(jnp.minimum(n1, rem), 1)
+    last = jnp.take_along_axis(sel, (n_emit - 1)[None, :], axis=0)[0]
+    done_now = active & ((last == eos) | (steps + n_emit >= max_new))
+    correction = active & ~done_now & (n_emit == c_sel + 1)
+    n_emit = jnp.where(active, n_emit, 0)
+    return n_emit, c_sel, done_now, correction
+
+
 def _categorical_rows(probs, rids, steps, seed: int):
     """Vmapped keyed categorical: row i draws with key
     fold_in(fold_in(key(seed), rids[i]), steps[i])."""

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def fuse_logits_ref(slm_logits, llm_logits, w, arrived=None):
@@ -11,3 +12,40 @@ def fuse_logits_ref(slm_logits, llm_logits, w, arrived=None):
     if arrived is not None:
         w = jnp.where(jnp.asarray(arrived, bool), w, 1.0)
     return w[:, None] * p_s + (1.0 - w[:, None]) * p_l
+
+
+def accept_prefix_ref(draft, sel, steps, max_new, active, eos: int):
+    """Sequential host oracle for ``ops.accept_prefix``: walk each
+    row's k positions in order, accepting while the fused choice
+    matches the draft, stopping at EOS / budget / first divergence
+    (which still emits, as the correction token)."""
+    draft = np.asarray(draft)
+    sel = np.asarray(sel)
+    steps = np.asarray(steps)
+    max_new = np.asarray(max_new)
+    active = np.asarray(active, bool)
+    k, b = draft.shape
+    n_emit = np.zeros((b,), np.int32)
+    c_sel = np.zeros((b,), np.int32)
+    done_now = np.zeros((b,), bool)
+    correction = np.zeros((b,), bool)
+    for j in range(b):
+        i = 0
+        while i < k and sel[i, j] == draft[i, j]:
+            i += 1
+        c_sel[j] = i
+        if not active[j]:
+            continue
+        n = 0
+        diverged = False
+        for i in range(k):
+            n += 1
+            if sel[i, j] == eos or steps[j] + n >= max_new[j]:
+                done_now[j] = True
+                break
+            if sel[i, j] != draft[i, j]:
+                diverged = True
+                break
+        n_emit[j] = n
+        correction[j] = diverged and not done_now[j]
+    return n_emit, c_sel, done_now, correction

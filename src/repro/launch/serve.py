@@ -58,6 +58,13 @@ def main():
                     help="tokens decoded per jitted macro-step dispatch "
                          "(1 host sync per K tokens; 0 = legacy "
                          "per-token step path)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode window: the SLM drafts K "
+                         "tokens greedily, one batched LLM dispatch "
+                         "verifies the whole window and rejected "
+                         "drafts roll back (0 = off, the per-token "
+                         "bit-exact oracle; greedy emits the same "
+                         "tokens with ~K-fold fewer LLM round-trips)")
     ap.add_argument("--dense", action="store_true",
                     help="dense stacked lane caches (the paged=False "
                          "bit-exact oracle); default serves paged KV "
@@ -130,6 +137,9 @@ def main():
     if args.adapters and not args.local:
         ap.error("--adapters requires --local (adapter serving runs "
                  "on the real engine, not the dry-run lowering)")
+    if args.spec_k and not (args.local and args.batch > 1):
+        ap.error("--spec-k requires --local and --batch > 1 (the "
+                 "draft/verify burst runs on the batched cloud lane)")
 
     if args.local:
         import jax
@@ -179,7 +189,7 @@ def main():
                   f"(replicated would hold {pd['replicated_bytes']})")
         if args.batch > 1:
             kw = dict(batch_size=args.batch, macro_k=args.macro_k,
-                      paged=not args.dense,
+                      spec_k=args.spec_k, paged=not args.dense,
                       lazy_pages=not args.no_lazy_pages)
             if args.pool_pages:
                 kw["pool_pages"] = args.pool_pages

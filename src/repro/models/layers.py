@@ -148,8 +148,37 @@ def linear(p, x, lora: Optional[Dict[str, jax.Array]] = None,
 
 def lora_delta(lora: Dict[str, jax.Array], x: jax.Array,
                gates: Optional[jax.Array]) -> jax.Array:
-    """Σ_j ω_j B_j A_j x  (paper Eq. 8).  A: (E, r, k); B: (E, n, r)."""
+    """Σ_j ω_j B_j A_j x  (paper Eq. 8).  A: (E, r, k); B: (E, n, r).
+
+    ``gates`` is normally a float gate matrix — (B, E) per-request
+    weights or (E,) global weights.  A 1-D INTEGER ``gates`` is the
+    slot-decode fast path: per-row adapter slot ids (negative = no
+    adapter), routed through the scalar-prefetch
+    ``moe_lora_delta_slots`` kernel, which gathers exactly one expert
+    per row instead of sweeping the dense Σ over E — the serving
+    engines' ``use_slot_kernel`` decode hot path.  Adaptive-rank banks
+    (``rank_mask``) fall back to the dense path through an equivalent
+    one-hot matrix (the mask multiplies the rank axis, which the slot
+    kernel does not thread)."""
     A, B = lora["A"], lora["B"]
+    if gates is not None and gates.ndim == 1 \
+            and jnp.issubdtype(gates.dtype, jnp.integer):
+        if "rank_mask" in lora:
+            gates = jax.nn.one_hot(jnp.clip(gates, 0, A.shape[0] - 1),
+                                   A.shape[0], dtype=jnp.float32
+                                   ) * (gates >= 0)[:, None]
+        else:
+            from repro.kernels.moe_lora.kernel import moe_lora_delta_slots
+            lead = x.shape[:-1]
+            xf = x.reshape(-1, x.shape[-1])
+            slots = jnp.broadcast_to(
+                gates.reshape(gates.shape[0],
+                              *([1] * (len(lead) - 1))), lead
+            ).reshape(-1)
+            delta = moe_lora_delta_slots(
+                xf, A, B, slots,
+                interpret=jax.default_backend() == "cpu")
+            return delta.reshape(*lead, B.shape[1]).astype(jnp.float32)
     u = jnp.einsum("...k,erk->...er", x, A,
                    preferred_element_type=jnp.float32)
     if "rank_mask" in lora:            # adaptive-rank compression Q_r (Thm. 1)

@@ -824,6 +824,131 @@ class LM:
                 return w
         return 0
 
+    # ------------------------------------------- speculative rollback
+    # A speculative draft/verify burst runs up to k masked decode steps
+    # whose KV scatters land at positions [pos0, pos0+k) of every
+    # attention leaf.  ``spec_snapshot`` captures exactly those write
+    # targets beforehand; ``spec_restore`` puts back every slot at or
+    # past the per-row accepted count, so a rejected draft suffix
+    # leaves the cache bitwise as if it was never decoded.  Both mirror
+    # the decode write path's slot arithmetic and ``mode="drop"``
+    # discipline (attention.py): full leaves write slot p (dropped at
+    # p >= S), ring/local leaves slot p % window, paged leaves go
+    # through the row's block/local table — and freed rows
+    # (pos >= FREED_POS) never wrote, so they never restore.
+
+    def _spec_kinds(self, cache, max_seq: int):
+        """(kind-name, is_local) pairs of the lane cache's KV kinds.
+        Name "" addresses the top-level {"k","v"} of the plain layout."""
+        if self.cfg.family != "dense":
+            raise NotImplementedError(
+                "speculative rollback: dense-family caches only "
+                f"(got {self.cfg.family})")
+        kind, *_ = self._layout()
+        if kind == "plain":
+            return [("", False)]
+        local = self._ring_local_len(max_seq) > 0
+        return [("inner", local), ("tail", local), ("global", False)]
+
+    def _spec_slots(self, cache, leaf, pos0, k: int, is_local: bool,
+                    max_seq: int):
+        """(targets, sentinel) for the k decode writes of one KV leaf:
+        dense slot indices or paged flat pool indices, shape (B, k),
+        with ``sentinel`` (one past the extent) marking entries the
+        decode write path would have dropped."""
+        idx = pos0[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+        alive = pos0[:, None] < ATT.FREED_POS
+        if "block" not in cache:
+            s_len = leaf.shape[-3]
+            if is_local:
+                return jnp.where(alive, idx % s_len, s_len), s_len
+            return jnp.where(alive & (idx < s_len), idx, s_len), s_len
+        ps = leaf.shape[-3]
+        cap = leaf.shape[-4] * ps
+        if is_local:
+            s = idx % self._ring_local_len(max_seq)
+            tbl = cache["local"]
+            ok = alive
+        else:
+            s = idx
+            tbl = cache["block"]
+            ok = alive & (s < tbl.shape[1] * ps)
+        page = jnp.take_along_axis(
+            tbl, jnp.clip(s // ps, 0, tbl.shape[1] - 1), axis=1)
+        # NO_PAGE entries put flat past ``cap`` on their own (NO_PAGE*ps
+        # >> pool slots), landing in the same drop bucket
+        return jnp.where(ok, page * ps + s % ps, cap), cap
+
+    def spec_snapshot(self, cache, pos0, k: int, max_seq: int):
+        """Snapshot the k decode-write targets [pos0, pos0+k) of every
+        KV leaf before a speculative burst.  pos0: (B,) per-row depth.
+        Returns {kind: {"k"/"v": (..., B, k, KV, hd)}} for
+        ``spec_restore``; dropped/freed targets snapshot garbage that
+        restore skips with the same sentinel arithmetic."""
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        paged = "block" in cache
+
+        def grab(leaf, is_local):
+            slot, cap = self._spec_slots(cache, leaf, pos0, k, is_local,
+                                         max_seq)
+            if paged:
+                fl = leaf.reshape(leaf.shape[:-4] + (cap,)
+                                  + leaf.shape[-2:])
+                g = jnp.take(fl, jnp.clip(slot, 0, cap - 1).reshape(-1),
+                             axis=-3)
+                return g.reshape(leaf.shape[:-4] + slot.shape
+                                 + leaf.shape[-2:])
+            g = jnp.clip(slot, 0, leaf.shape[-3] - 1)
+            g = g.reshape((1,) * (leaf.ndim - 4) + g.shape + (1, 1))
+            return jnp.take_along_axis(leaf, g, axis=-3)
+
+        out = {}
+        for name, is_local in self._spec_kinds(cache, max_seq):
+            sub = cache if name == "" else cache[name]
+            out[name] = {c: grab(sub[c], is_local) for c in ("k", "v")}
+        return out
+
+    def spec_restore(self, cache, snap, pos0, keep, max_seq: int):
+        """Roll back a speculative write window: restore slot pos0+j of
+        every KV leaf from ``snap`` for every j >= keep[b] (the
+        rejected suffix), leaving j < keep[b] (the accepted writes) in
+        place.  keep: (B,) int32; keep[b] = k restores nothing for row
+        b, keep[b] = 0 rolls the whole window back.  Returns the cache
+        with KV leaves rewritten; "pos" is untouched (the caller owns
+        the position fixup)."""
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        keep = jnp.asarray(keep, jnp.int32)
+        paged = "block" in cache
+        kinds = self._spec_kinds(cache, max_seq)
+        first = snap[kinds[0][0]]["k"]
+        k = first.shape[-3]
+        roll = jnp.arange(k, dtype=jnp.int32)[None, :] >= keep[:, None]
+
+        def put(leaf, sv, is_local):
+            slot, cap = self._spec_slots(cache, leaf, pos0, k, is_local,
+                                         max_seq)
+            slot = jnp.where(roll, slot, cap)
+            if paged:
+                fl = leaf.reshape(leaf.shape[:-4] + (cap,)
+                                  + leaf.shape[-2:])
+                fl = fl.at[..., slot, :, :].set(sv.astype(leaf.dtype),
+                                                mode="drop")
+                return fl.reshape(leaf.shape)
+            rows = jnp.arange(leaf.shape[-4])[:, None]
+            return leaf.at[..., rows, slot, :, :].set(
+                sv.astype(leaf.dtype), mode="drop")
+
+        out = dict(cache)
+        for name, is_local in kinds:
+            sub = cache if name == "" else cache[name]
+            new = {c: put(sub[c], snap[name][c], is_local)
+                   for c in ("k", "v")}
+            if name == "":
+                out.update(new)
+            else:
+                out[name] = dict(sub, **new)
+        return out
+
     def build_prefix(self, params, tokens, lora=None, gates=None):
         """Prefill a shared preamble ONCE (B=1) -> attention history.
 

@@ -327,6 +327,7 @@ class ServingDeployment:
         self.fetch_traces = jax.device_get
         if llm is not None:
             self.macro_cloud = self._make_macro(use_cloud=True)
+            self.spec_cloud = self._make_spec()
         self.macro_edge = self._make_macro(use_cloud=False)
 
     # ------------------------------------------------------ param layout
@@ -575,6 +576,192 @@ class ServingDeployment:
                                   + (None,) * 14)
         # k/sample are positional statics: pjit rejects kwargs when
         # in_shardings is given, so the engine passes them by position
+        return jax.jit(impl, static_argnums=(16, 17),
+                       donate_argnums=(4, 5, 6, 7, 8, 9), **kw)
+
+    # ------------------------------------------------ speculative burst
+    def _make_spec(self):
+        """Build the jitted speculative draft/verify/accept burst
+        (tentpole PR 10): the SLM autoregressively drafts k tokens
+        (greedy over its OWN logits, the ordinary masked decode step +
+        KV writes), ONE chained LLM dispatch then scores all k draft
+        positions for the whole lane batch, and the fused epilogue
+        accepts the longest prefix where the fused distribution's
+        choice equals the draft, rolling rejected KV/ring/page writes
+        back via ``spec_snapshot``/``spec_restore``.  One call == ONE
+        cloud round-trip: the k inner LLM decode steps live in a single
+        device dispatch, so the simulated link is charged once per
+        burst instead of once per token.
+
+        Speculative state invariant (held between bursts): the SLM sits
+        at depth p = prompt_len + emitted; ``sl`` is its logits for the
+        next emit; the LLM sits ONE BEHIND at depth p-1 with the last
+        emitted token pending in ``lt`` — the verify scan feeds
+        [lt, d_0..d_{k-2}] so its k logit rows are the baseline cloud
+        logits for emit positions steps+[0, k), making the fused
+        distributions along the accepted prefix bitwise the per-token
+        path's (greedy reconciliation contract; seeded sampling keys
+        each position at steps+i exactly like the baseline).
+
+        Network weather is drawn ONCE per burst, keyed by the burst's
+        FIRST step (counter-based, order-independent); the breaker
+        transition runs once per burst, and degraded / non-arrived rows
+        fuse against w=1 — pure SLM drafting at zero cloud cost, which
+        under greedy accepts the whole window (zero rollback).
+
+        Same donation/sharding discipline as ``_make_macro``: caches,
+        logits, ``lt`` and breaker state donated (argnums 4-9), params
+        pinned, carry pinned to the lane layout at both ends.  Traces:
+        (sels (k,B), n_emit, c_sel, arrived, lat, w (k,B), lost)."""
+        dep = self
+        fault = self.fault
+
+        def impl(slm_params, llm_params, lora, gates,
+                 s_cache, l_cache, sl, lt, fails, cooldown,
+                 rids, key_ids, steps, max_new, greedy, done,
+                 k: int, sample: bool):
+            b = sl.shape[0]
+            active = ~done
+            pos_s0 = s_cache["pos"]
+            pos_l0 = l_cache["pos"]
+            snap_s = dep.slm.spec_snapshot(s_cache, pos_s0, k,
+                                           dep.max_seq)
+            snap_l = dep.llm.spec_snapshot(l_cache, pos_l0, k,
+                                           dep.max_seq)
+
+            def pin_s(c, cur):
+                if dep.mesh is None:
+                    return c, cur
+                return (dep.constrain_lane(c, dep._axes_like(c, "slm")),
+                        dep.replicated(cur))
+
+            def pin_l(c):
+                if dep.mesh is None:
+                    return c
+                return dep.constrain_lane(c, dep._axes_like(c, "llm"))
+
+            # ---- draft: k masked SLM decode steps, greedy over the
+            # SLM's own logits; inactive rows' writes drop at FREED_POS
+            def dbody(carry, _):
+                c, cur = carry
+                d = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+                feed = jnp.where(active, d, 0)[:, None]
+                logits, c = dep.slm_decode(slm_params, c, feed, lora,
+                                           gates)
+                return pin_s(c, logits[:, 0]), (cur, d)
+
+            (s_c, sl_k), (sls, ds) = jax.lax.scan(
+                dbody, pin_s(s_cache, sl), None, length=k)
+
+            # ---- verify: ONE dispatch, k chained LLM decode steps over
+            # [lt, d_0..d_{k-2}] — the one-behind protocol needs no
+            # same-depth re-dispatch after a rejection
+            feeds = jnp.concatenate([lt[None, :], ds[:-1]], axis=0)
+
+            def vbody(c, tok):
+                feed = jnp.where(active, tok, 0)[:, None]
+                logits, c = dep.llm_decode(llm_params, c, feed)
+                return pin_l(c), logits[:, 0]
+
+            l_c, lls = jax.lax.scan(vbody, pin_l(l_cache), feeds)
+
+            # ---- burst weather: one draw, keyed at the first step
+            new_fails, new_cooldown = fails, cooldown
+            lost = jnp.zeros((b,), bool)
+            lat, ok = dep.lat_batched(rids, steps)
+            if fault is not None:
+                lost, outage = dep.fault_batched(rids, steps)
+                raw = lost | outage
+                (new_fails, new_cooldown, degraded, _attempt,
+                 fail, _trip, _recover) = LAT.breaker_transition_device(
+                    fails, cooldown, active, raw,
+                    fault.breaker_n, fault.breaker_m)
+                arrived = OPS.cloud_arrival_mask(ok, active, lost,
+                                                 outage, degraded)
+                edge = jnp.float32(dep.latency.edge_compute_ms)
+                lat = jnp.where(
+                    degraded, edge,
+                    jnp.where(fail, jnp.maximum(
+                        edge, jnp.float32(dep.timeout_ms)), lat))
+            else:
+                arrived = OPS.cloud_arrival_mask(ok, active)
+
+            # ---- fused accept epilogue: position i fuses the baseline
+            # pair (sls[i], lls[i]) and selects with the baseline key
+            sels, ws = [], []
+            for i in range(k):
+                probs_i, w_i = dep.fuse_batched(sls[i], lls[i], arrived)
+                sels.append(OPS.select_sample_fused(
+                    probs_i, greedy, key_ids, steps + i,
+                    seed=dep.sample_seed, sample=sample))
+                ws.append(w_i)
+            sels = jnp.stack(sels)
+            w = jnp.stack(ws)
+            n_emit, c_sel, done_now, correction = OPS.accept_prefix(
+                ds, sels, steps, max_new, active, TOK.EOS)
+
+            # ---- rollback: keep the accepted draft writes (the tokens
+            # the baseline would have fed), restore the rest.  SLM:
+            # done/correction rows never fed their last emitted token;
+            # LLM (one behind): exactly n_emit feeds were baseline
+            # (n_emit-1 <= c_sel always)
+            keep_s = jnp.where(
+                active, jnp.where(done_now | correction, n_emit - 1, k),
+                k)
+            keep_l = jnp.where(active, n_emit, k)
+            s_c = dep.slm.spec_restore(s_c, snap_s, pos_s0, keep_s,
+                                       dep.max_seq)
+            l_c = dep.llm.spec_restore(l_c, snap_l, pos_l0, keep_l,
+                                       dep.max_seq)
+
+            # ---- correction decode: feed the diverged token to the
+            # SLM only (the LLM stays one behind, it becomes lt)
+            last_sel = jnp.take_along_axis(
+                sels, jnp.maximum(n_emit - 1, 0)[None, :], axis=0)[0]
+            s_c = dict(s_c, pos=jnp.where(correction,
+                                          pos_s0 + n_emit - 1,
+                                          ATT.FREED_POS))
+            corr_logits, s_c = dep.slm_decode(
+                slm_params, s_c,
+                jnp.where(correction, last_sel, 0)[:, None], lora, gates)
+
+            # ---- position fixup: ongoing rows advance n_emit, done
+            # rows park at FREED_POS (the macro park discipline),
+            # untouched rows keep their entry pos
+            s_c = dict(s_c, pos=jnp.where(
+                active & ~done_now, pos_s0 + n_emit,
+                jnp.where(done_now, ATT.FREED_POS, pos_s0)))
+            l_c = dict(l_c, pos=jnp.where(
+                active & ~done_now, pos_l0 + n_emit,
+                jnp.where(done_now, ATT.FREED_POS, pos_l0)))
+
+            # ---- next-emit logits: full accept continues from the
+            # draft chain's last logits; a correction row continues
+            # from the just-decoded diverged token; a done row keeps
+            # the logits that produced its final token (the macro
+            # keep-pending discipline)
+            sls_ext = jnp.concatenate([sls, sl_k[None]], axis=0)
+            idx = jnp.where(done_now, jnp.maximum(n_emit - 1, 0), n_emit)
+            cand = jnp.take_along_axis(
+                sls_ext, idx[None, :, None], axis=0)[0]
+            new_sl = jnp.where(correction[:, None], corr_logits[:, 0],
+                               cand)
+            new_sl = jnp.where(active[:, None], new_sl, sl)
+            new_lt = jnp.where(active, last_sel, lt)
+            if dep.mesh is not None:
+                s_c = dep.constrain_lane(s_c, dep._axes_like(s_c, "slm"))
+                l_c = dep.constrain_lane(l_c, dep._axes_like(l_c, "llm"))
+                new_sl = dep.replicated(new_sl)
+                new_lt = dep.replicated(new_lt)
+            carry = (s_c, l_c, new_sl, new_lt, new_fails, new_cooldown,
+                     steps + n_emit, done | done_now)
+            return carry, (sels, n_emit, c_sel, arrived, lat, w, lost)
+
+        kw: Dict[str, Any] = {}
+        if self.mesh is not None:
+            kw["in_shardings"] = ((self.slm_param_shardings,
+                                   self.llm_param_shardings)
+                                  + (None,) * 14)
         return jax.jit(impl, static_argnums=(16, 17),
                        donate_argnums=(4, 5, 6, 7, 8, 9), **kw)
 

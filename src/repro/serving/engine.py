@@ -102,6 +102,18 @@ class GenStats:
     # reply was injected-lost (loss draw or outage window)
     degraded_tokens: int = 0
     cloud_lost: int = 0
+    # cloud DISPATCHES, distinct from cloud-fused TOKENS: every LLM
+    # round-trip the engine attempted for this request counts one,
+    # whether or not the reply arrived in time (a timed-out attempt is
+    # still a dispatch; a breaker-degraded token never dispatches).
+    # Speculative decode emits up to k tokens per dispatch, so
+    # cloud_calls < tokens is the tentpole's measurable win
+    cloud_calls: int = 0
+    # speculative decode telemetry: draft positions scored by the cloud
+    # and the subset the fused distribution accepted (accept-rate =
+    # spec_accepted / spec_drafted); zero on non-speculative engines
+    spec_drafted: int = 0
+    spec_accepted: int = 0
     # the request was cancelled at a decode boundary because its
     # simulated clock passed its deadline — the text is partial
     cancelled: bool = False
@@ -340,6 +352,7 @@ class HybridEngine:
                 else:        # rid-less legacy path: stateful host stream
                     lat_ms, arrived = self.latency.token_latency_ms(
                         self.timeout_ms, rid=rid, step=len(out_ids))
+                degraded = False
                 if lost_row is not None:
                     degraded, raw = self._mirror_breaker(
                         slot, bool(lost_row[len(out_ids)]), len(out_ids))
@@ -350,6 +363,9 @@ class HybridEngine:
                 p_out, w = dep.fuse(sl, ll, jnp.asarray(arrived))
                 stats.cloud_tokens += int(arrived)
                 stats.fallback_tokens += int(not arrived)
+                # one LLM round-trip per token on this path — degraded
+                # tokens are the only ones that never dispatch
+                stats.cloud_calls += int(not degraded)
             else:
                 lat_ms, arrived = self.latency.edge_compute_ms, False
                 p_out = jax.nn.softmax(sl.astype(jnp.float32), -1)
@@ -413,6 +429,11 @@ class _Slot:
     bcool: int = 0
     # simulated-clock deadline; None = no deadline
     deadline_ms: Optional[float] = None
+    # speculative lanes: an eviction-resumed row's LLM cache came back
+    # at FULL depth p (re-prefill of prompt + tokens-so-far) and must
+    # be rewound to the one-behind protocol depth p-1 with the last
+    # emitted token re-pended in ``lt`` before its next burst
+    needs_spec_init: bool = False
 
 
 @dataclass
@@ -453,6 +474,10 @@ class _Lane:
         self.l_cache = None
         self.sl = None               # (B, V) current SLM logits
         self.ll = None               # (B, V) current LLM logits
+        # speculative lanes only: the (B,) last emitted token per row,
+        # pending as the LLM's next feed (the one-behind protocol's
+        # device carry — never synced to host between bursts)
+        self.lt = None
         self.gates = None            # (B, E) router weights or None
         self._inflight = None        # dispatched macro awaiting replay
         # paged lanes: host-side page bookkeeping per model + the COW
@@ -465,6 +490,10 @@ class _Lane:
         # at the next collect
         self._evictq: List[_Slot] = []
         self._pending_done: List[Tuple[int, str, GenStats]] = []
+        # speculative lane: the LLM runs ONE BEHIND the SLM (depth p-1
+        # with the last emitted token pending in ``lt``), so position
+        # bookkeeping that unparks rows must restore the offset depth
+        self._spec = use_cloud and bool(getattr(engine, "spec_k", 0))
         if getattr(engine, "paged", False):
             self.pager_s = engine._make_pager(engine.dep.slm, batch)
             if use_cloud:
@@ -483,6 +512,27 @@ class _Lane:
     @property
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    def _decode_gates(self):
+        """The gates argument for DECODE dispatches: normally the dense
+        (B, E) one-hot buffer; with ``use_slot_kernel`` on an adapter-
+        serving engine, the (B,) int32 per-row adapter slots (-1 =
+        adapter-free) instead — ``layers.lora_delta`` routes integer
+        1-D gates through the scalar-prefetch ``moe_lora_delta_slots``
+        kernel, gathering exactly one expert per row instead of the
+        dense Σ over E.  Prefill always keeps the one-hot path (cold,
+        and the packed batch amortizes the dense sweep); router-gated
+        engines keep it too (their gates are soft weights, which the
+        engine constructor keeps mutually exclusive with adapters)."""
+        eng = self.eng
+        if not getattr(eng, "use_slot_kernel", False) \
+                or eng.adapters is None or self.gates is None:
+            return self.gates
+        slots = np.full((self.batch,), -1, np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None and s.aslot is not None:
+                slots[i] = s.aslot
+        return jnp.asarray(slots)
 
     def _alloc(self, vocab: int, n_experts: Optional[int]):
         dep = self.eng.dep
@@ -511,6 +561,7 @@ class _Lane:
                 self.l_cache = dep.init_lane_cache(dep.llm, b)
             self.ll = dep.commit_replicated(
                 jnp.zeros((b, vocab), jnp.float32))
+            self.lt = dep.commit_replicated(jnp.zeros((b,), jnp.int32))
         self.sl = dep.commit_replicated(jnp.zeros((b, vocab), jnp.float32))
         if n_experts is not None:
             self.gates = dep.commit_replicated(
@@ -720,6 +771,10 @@ class _Lane:
         if j.resume is not None:
             s = j.resume
             s.parked = False
+            if self.use_cloud and getattr(self.eng, "spec_k", 0):
+                # the resume re-prefill landed the LLM at full depth;
+                # _spec_seed rewinds it to the one-behind protocol
+                s.needs_spec_init = True
             self.slots[j.slot] = s
             return
         s = _Slot(j.rid, j.max_new, j.greedy,
@@ -1065,6 +1120,7 @@ class _Lane:
                 arrived = OPS.cloud_arrival_mask(ok, occ, raws,
                                                  degraded=degraded)
             else:
+                degraded = np.zeros((b,), bool)
                 arrived = OPS.cloud_arrival_mask(ok, occ)
             probs, w = dep.fuse_batched(self.sl, self.ll,
                                         jnp.asarray(arrived))
@@ -1100,6 +1156,7 @@ class _Lane:
             if self.use_cloud:
                 st.cloud_tokens += int(arrived[i])
                 st.fallback_tokens += int(not arrived[i])
+                st.cloud_calls += int(not degraded[i])
                 st.push_latency(float(lat[i]))
             else:
                 st.push_latency(float(eng.latency.edge_compute_ms))
@@ -1128,7 +1185,8 @@ class _Lane:
             old_sl, old_ll = self.sl, self.ll
             toks = jnp.asarray(next_tok)
             s_logits, self.s_cache = dep.slm_decode(
-                eng.slm_params, self.s_cache, toks, eng.lora, self.gates)
+                eng.slm_params, self.s_cache, toks, eng.lora,
+                self._decode_gates())
             self.sl = s_logits[:, 0]
             if self.use_cloud:
                 l_logits, self.l_cache = dep.llm_decode(
@@ -1194,6 +1252,11 @@ class _Lane:
         idx_j, val_j = jnp.asarray(idx), jnp.asarray(val)
         self.s_cache = dep.set_row_pos(self.s_cache, idx_j, val_j)
         if self.use_cloud:
+            if self._spec:
+                # unparks restore the one-behind LLM depth p-1; park
+                # sentinels (>= FREED_POS) pass through untouched
+                val = np.where(val < ATT.FREED_POS, val - 1, val)
+                val_j = jnp.asarray(val)
             self.l_cache = dep.set_row_pos(self.l_cache, idx_j, val_j)
 
     def _apply_growth(self, which: str, ups: List[Tuple[int, int, int]]):
@@ -1414,7 +1477,7 @@ class _Lane:
         fn = dep.macro_cloud if self.use_cloud else dep.macro_edge
         carry, traces = fn(
             eng.slm_params, eng.llm_params if self.use_cloud else None,
-            eng.lora, self.gates,
+            eng.lora, self._decode_gates(),
             self.s_cache, self.l_cache, self.sl, self.ll,
             jnp.asarray(bfails), jnp.asarray(bcool),
             jnp.asarray(rids), jnp.asarray(keys), jnp.asarray(steps),
@@ -1458,16 +1521,18 @@ class _Lane:
                     out_done.append(self._cancel_row(i, s))
                     cancelled.append(i)
                     continue
+                deg = False
                 if fault is not None:
                     # replay the breaker mirror on the traced loss draw
                     # + host-recomputed outage schedule; emit == the
                     # scan's active mask, so the mirror sees exactly
                     # the transitions the device carry integrated
-                    eng._mirror_breaker(s, bool(lost[t, i]),
-                                        len(s.out_ids))
+                    deg, _ = eng._mirror_breaker(s, bool(lost[t, i]),
+                                                 len(s.out_ids))
                 if self.use_cloud:
                     st.cloud_tokens += int(arrived[t, i])
                     st.fallback_tokens += int(not arrived[t, i])
+                    st.cloud_calls += int(not deg)
                     st.push_latency(float(lat[t, i]))
                     st.fusion_w.append(float(w[t, i]))
                 else:
@@ -1499,6 +1564,296 @@ class _Lane:
         frozen) and their freed slots refill at the next boundary."""
         self.macro_dispatch(k)
         return self.macro_collect()
+
+    # -------------------------------------------------- speculative decode
+    def _row_pos(self, cache, updates: List[Tuple[int, int]]):
+        """Single-cache row-pos scatter (``_set_positions`` touches both
+        caches symmetrically; the spec seed needs them independently),
+        padded to a power of two like every other host-batched update."""
+        dep = self.eng.dep
+        n = 1 << (len(updates) - 1).bit_length()
+        idx = np.full((n,), self.batch, np.int32)
+        val = np.zeros((n,), np.int32)
+        for t, (i, v) in enumerate(updates):
+            idx[t], val[t] = i, v
+        return dep.set_row_pos(cache, jnp.asarray(idx), jnp.asarray(val))
+
+    def _spec_seed(self):
+        """Move freshly admitted (and eviction-resumed) rows onto the
+        speculative protocol invariant: SLM at depth p = prompt_len + n
+        with ``sl`` predicting emit n, LLM ONE BEHIND at depth p-1 with
+        the last emitted token pending in ``lt``.
+
+        Fresh rows (no tokens yet) emit their FIRST token here exactly
+        like the per-token path — prefill left both models at prompt
+        depth, so the entry (sl, ll) pair IS the baseline fusion for
+        emit 0; the selected token is then fed to the SLM ONLY, which
+        lands the row precisely one-behind without ever rewinding the
+        LLM.  Eviction-resumed rows came back from a full re-prefill
+        (depth p on both models): the LLM row pos is rewound to p-1 and
+        the last emitted token re-pended in ``lt`` — the next burst's
+        first verify feed rewrites slot p-1 with the identical (token,
+        position) KV, so the rewind is bitwise free (prefill == decode,
+        the PR 7 eviction-resume contract)."""
+        eng = self.eng
+        dep = eng.dep
+        fresh = [i for i, s in enumerate(self.slots)
+                 if s is not None and not s.parked and not s.out_ids]
+        init = [i for i, s in enumerate(self.slots)
+                if s is not None and not s.parked and s.out_ids
+                and s.needs_spec_init]
+        if init:
+            self.l_cache = self._row_pos(
+                self.l_cache,
+                [(i, self.slots[i].prompt_len
+                  + len(self.slots[i].out_ids) - 1) for i in init])
+            idx = jnp.asarray(init, jnp.int32)
+            last = jnp.asarray([self.slots[i].out_ids[-1] for i in init],
+                               jnp.int32)
+            self.lt = dep.insert_row(self.lt, last,
+                                     jnp.arange(len(init)), idx)
+            for i in init:
+                self.slots[i].needs_spec_init = False
+        if not fresh:
+            return
+        b = self.batch
+        fault = eng.fault
+        occ = np.zeros((b,), bool)
+        rids = np.zeros((b,), np.int32)
+        steps = np.zeros((b,), np.int32)
+        for i in fresh:
+            occ[i], rids[i] = True, self.slots[i].rid
+        lat_d, ok_d = dep.lat_batched(jnp.asarray(rids),
+                                      jnp.asarray(steps))
+        lat = np.asarray(lat_d).copy()
+        ok = np.asarray(ok_d)
+        degraded = np.zeros((b,), bool)
+        if fault is not None:
+            lost_d, _ = dep.fault_batched(jnp.asarray(rids),
+                                          jnp.asarray(steps))
+            lost_h = np.asarray(lost_d)
+            raws = np.zeros((b,), bool)
+            edge32, fb32 = eng._fault_f32()
+            for i in fresh:
+                deg, raw = eng._mirror_breaker(self.slots[i],
+                                               bool(lost_h[i]), 0)
+                degraded[i], raws[i] = deg, raw
+                if deg:
+                    lat[i] = edge32
+                elif raw:
+                    lat[i] = fb32
+            arrived = OPS.cloud_arrival_mask(ok, occ, raws,
+                                             degraded=degraded)
+        else:
+            arrived = OPS.cloud_arrival_mask(ok, occ)
+        probs, w = dep.fuse_batched(self.sl, self.ll,
+                                    jnp.asarray(arrived))
+        nxt_greedy = np.asarray(dep.argmax_batched(probs))
+        w_host = np.asarray(w)
+        nxt_sampled = None
+        if any(not self.slots[i].greedy for i in fresh):
+            keys = np.zeros((b,), np.int32)
+            for i in fresh:
+                s = self.slots[i]
+                keys[i] = s.rid if s.key_id is None else s.key_id
+            nxt_sampled = np.asarray(dep.sample_batched(
+                probs, jnp.asarray(keys), jnp.asarray(steps)))
+        feed = np.zeros((b, 1), np.int32)
+        fed: List[int] = []
+        freed: List[int] = []
+        for i in fresh:
+            s = self.slots[i]
+            s.needs_spec_init = False
+            st = s.stats
+            if s.deadline_ms is not None and st.clock_ms >= s.deadline_ms:
+                self._pending_done.append(self._cancel_row(i, s))
+                freed.append(i)
+                continue
+            st.cloud_tokens += int(arrived[i])
+            st.fallback_tokens += int(not arrived[i])
+            st.cloud_calls += int(not degraded[i])
+            st.push_latency(float(lat[i]))
+            st.fusion_w.append(float(w_host[i]))
+            nxt = int(nxt_greedy[i]) if s.greedy else int(nxt_sampled[i])
+            s.out_ids.append(nxt)
+            st.tokens += 1
+            if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
+                self._pending_done.append(
+                    (s.rid, TOK.decode(s.out_ids), st))
+                eng._release_adapter(s)
+                self.slots[i] = None
+                freed.append(i)
+            else:
+                feed[i, 0] = nxt
+                fed.append(i)
+        if freed:
+            self._park_rows(freed)
+        if not fed:
+            return
+        # feed the seed tokens to the SLM ONLY: every other live row is
+        # parked for this one decode (writes drop at FREED_POS) and gets
+        # its pending logits restored right after
+        others = [(i, s.prompt_len + len(s.out_ids))
+                  for i, s in enumerate(self.slots)
+                  if s is not None and not s.parked and i not in fed]
+        if others:
+            self.s_cache = self._row_pos(
+                self.s_cache, [(i, ATT.FREED_POS) for i, _ in others])
+        old_sl = self.sl
+        s_logits, self.s_cache = dep.slm_decode(
+            eng.slm_params, self.s_cache, jnp.asarray(feed), eng.lora,
+            self._decode_gates())
+        self.sl = s_logits[:, 0]
+        keep = [i for i, s in enumerate(self.slots)
+                if s is not None and i not in fed]
+        if keep:
+            idx = jnp.asarray(keep, jnp.int32)
+            self.sl = dep.insert_row(self.sl, old_sl, idx, idx)
+        fed_j = jnp.asarray(fed, jnp.int32)
+        self.lt = dep.insert_row(self.lt, jnp.asarray(feed[:, 0]),
+                                 fed_j, fed_j)
+        if others:
+            self.s_cache = self._row_pos(self.s_cache, others)
+
+    def spec_dispatch(self, n_bursts: int, k: int):
+        """Dispatch ``n_bursts`` chained speculative bursts (tentpole
+        PR 10) WITHOUT a host sync: each burst drafts k tokens on the
+        SLM, verifies all k positions in ONE LLM dispatch, and rolls
+        rejected writes back on-device; the device carry (caches,
+        logits, ``lt``, breaker state, steps/done) threads straight
+        into the next burst.  LLM verify dispatches == ``spec_cloud``
+        invocations == n_bursts — the countable dispatch-discipline
+        contract.  Per-burst traces are stashed for ``spec_collect``'s
+        single ``fetch_traces`` sync."""
+        eng = self.eng
+        dep = eng.dep
+        if self._inflight is not None:
+            return
+        self._pending_done.extend(self._cancel_expired())
+        self._readmit_evicted()
+        # +1: the host-side seed token of a fresh row consumes one
+        # provisioned write before the bursts even start
+        self._pending_done.extend(self._provision(n_bursts * k + 1))
+        if self.active:
+            self._spec_seed()
+        if self.active == 0:
+            return
+        b = self.batch
+        rids = np.zeros((b,), np.int32)
+        keys = np.zeros((b,), np.int32)
+        steps = np.zeros((b,), np.int32)
+        maxn = np.zeros((b,), np.int32)
+        greedy = np.ones((b,), bool)
+        done = np.ones((b,), bool)
+        bfails = np.zeros((b,), np.int32)
+        bcool = np.zeros((b,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None or s.parked:
+                continue
+            done[i] = False
+            rids[i] = s.rid
+            keys[i] = s.rid if s.key_id is None else s.key_id
+            steps[i] = len(s.out_ids)
+            maxn[i] = s.max_new
+            greedy[i] = s.greedy
+            bfails[i], bcool[i] = s.bfails, s.bcool
+        sample = bool((~greedy & ~done).any())
+        gates = self._decode_gates()
+        s_c, l_c, sl, lt = self.s_cache, self.l_cache, self.sl, self.lt
+        fails_d, cool_d = jnp.asarray(bfails), jnp.asarray(bcool)
+        steps_d, done_d = jnp.asarray(steps), jnp.asarray(done)
+        rids_d, keys_d = jnp.asarray(rids), jnp.asarray(keys)
+        maxn_d, greedy_d = jnp.asarray(maxn), jnp.asarray(greedy)
+        bursts = []
+        for _ in range(n_bursts):
+            carry, traces = dep.spec_cloud(
+                eng.slm_params, eng.llm_params, eng.lora, gates,
+                s_c, l_c, sl, lt, fails_d, cool_d,
+                rids_d, keys_d, steps_d, maxn_d, greedy_d, done_d,
+                k, sample)
+            (s_c, l_c, sl, lt, fails_d, cool_d,
+             steps_d, done_d) = carry
+            bursts.append(traces)
+        self.s_cache, self.l_cache, self.sl, self.lt = s_c, l_c, sl, lt
+        self._inflight = ("spec", k, bursts)
+
+    def spec_collect(self) -> List[Tuple[int, str, GenStats]]:
+        """The ONE host sync of an in-flight burst chain: fetch every
+        burst's traces together and replay them into the slot
+        bookkeeping in burst order.  Token 0 of a burst is charged the
+        burst's (single) cloud round-trip latency; the accepted draft
+        tokens behind it cost the edge decode only — that is the
+        latency shape speculation buys.  Per burst per row: one breaker
+        transition (mirroring the device's per-burst recurrence),
+        cloud_calls += 1 unless the row ran degraded, spec_drafted += k
+        and spec_accepted += |accepted ∩ draft|."""
+        eng = self.eng
+        dep = eng.dep
+        if self._inflight is None:
+            out_done = self._pending_done
+            self._pending_done = []
+            return out_done
+        _tag, k, bursts = self._inflight
+        self._inflight = None
+        fetched = dep.fetch_traces(bursts)
+        fault = eng.fault
+        edge32, _ = eng._fault_f32()
+        out_done: List[Tuple[int, str, GenStats]] = []
+        out_done.extend(self._pending_done)
+        self._pending_done = []
+        freed: List[int] = []
+        cancelled: List[int] = []
+        for (sels, n_emit, c_sel, arrived, lat, w, lost) in fetched:
+            for i, s in enumerate(self.slots):
+                if s is None or not n_emit[i]:
+                    continue
+                st = s.stats
+                if s.deadline_ms is not None \
+                        and st.clock_ms >= s.deadline_ms:
+                    out_done.append(self._cancel_row(i, s))
+                    cancelled.append(i)
+                    continue
+                deg = False
+                if fault is not None:
+                    deg, _raw = eng._mirror_breaker(
+                        s, bool(lost[i]), len(s.out_ids))
+                st.spec_drafted += k
+                st.spec_accepted += int(min(n_emit[i], c_sel[i]))
+                st.cloud_calls += int(not deg)
+                if deg:
+                    # the device charged ONE degraded breaker step for
+                    # the whole burst; the remaining emitted tokens are
+                    # degraded too (pure SLM drafting, zero cloud cost)
+                    extra = int(n_emit[i]) - 1
+                    st.degraded_tokens += extra
+                    eng._health["degraded_tokens"] += extra
+                for t in range(int(n_emit[i])):
+                    if s.deadline_ms is not None \
+                            and st.clock_ms >= s.deadline_ms:
+                        out_done.append(self._cancel_row(i, s))
+                        cancelled.append(i)
+                        break
+                    st.cloud_tokens += int(arrived[i])
+                    st.fallback_tokens += int(not arrived[i])
+                    st.push_latency(float(lat[i]) if t == 0 else edge32)
+                    st.fusion_w.append(float(w[t, i]))
+                    nxt = int(sels[t, i])
+                    s.out_ids.append(nxt)
+                    st.tokens += 1
+                    if nxt == TOK.EOS or len(s.out_ids) >= s.max_new:
+                        out_done.append(
+                            (s.rid, TOK.decode(s.out_ids), st))
+                        eng._release_adapter(s)
+                        self.slots[i] = None
+                        freed.append(i)
+                        break
+        if cancelled:
+            # the burst chain knows no deadlines — cancelled rows are
+            # still live on device and must be parked/released
+            self._park_rows(cancelled)
+        if freed and eng.paged:
+            self._release_rows(freed)
+        return out_done
 
 
 class BatchedHybridEngine(HybridEngine):
@@ -1554,6 +1909,7 @@ class BatchedHybridEngine(HybridEngine):
                  llm_pool_pages: Optional[int] = None,
                  lazy_pages: bool = True,
                  chunk_width: Optional[int] = None,
+                 spec_k: int = 0, use_slot_kernel: bool = False,
                  deployment: Optional[ServingDeployment] = None):
         if deployment is None:
             deployment = ServingDeployment(
@@ -1609,6 +1965,27 @@ class BatchedHybridEngine(HybridEngine):
                 and ps <= self.chunk_width <= self.max_seq), \
             f"chunk_width={self.chunk_width} must be page-aligned in " \
             f"[{ps}, {self.max_seq}]"
+        # speculative decode (tentpole PR 10): spec_k > 0 switches the
+        # cloud lane to draft/verify bursts of k tokens per LLM
+        # dispatch; spec_k = 0 keeps the per-token/macro paths as the
+        # bit-exact oracle.  The k draft slots of a burst must be
+        # DISTINCT cache slots for snapshot/rollback, so k is bounded
+        # by any ring window in either model's cache layout.
+        if spec_k < 0:
+            raise ValueError(f"spec_k={spec_k} must be >= 0")
+        if spec_k:
+            for lm in (self.slm, self.llm):
+                loc = lm._ring_local_len(self.max_seq)
+                if loc and spec_k > loc:
+                    raise ValueError(
+                        f"spec_k={spec_k} exceeds the {loc}-slot ring "
+                        f"window of {lm.cfg.name}: a draft burst would "
+                        "wrap the ring and its rollback snapshot would "
+                        "alias slots")
+        self.spec_k = spec_k
+        # satellite: route decode-time LoRA through the scalar-prefetch
+        # slot-gather kernel instead of the dense one-hot einsum
+        self.use_slot_kernel = use_slot_kernel
         self._seq = 0
         self._stat = dict(grown_pages=0, parks=0, evictions=0, forced=0)
         self._rejected: List[Tuple[int, str]] = []
@@ -1918,7 +2295,11 @@ class BatchedHybridEngine(HybridEngine):
         with the in-flight decode, then ``collect_step()``."""
         if self.macro_k:
             self.edge_lane.macro_dispatch(self.macro_k)
-            self.cloud_lane.macro_dispatch(self.macro_k)
+            if self.spec_k:
+                self.cloud_lane.spec_dispatch(
+                    -(-self.macro_k // self.spec_k), self.spec_k)
+            else:
+                self.cloud_lane.macro_dispatch(self.macro_k)
 
     def collect_step(self) -> List[Tuple[int, str, GenStats]]:
         """Sync + replay the in-flight macro-steps (or, with
@@ -1926,8 +2307,15 @@ class BatchedHybridEngine(HybridEngine):
         requests that finished."""
         if self.macro_k:
             return (self.edge_lane.macro_collect()
-                    + self.cloud_lane.macro_collect())
-        return self.edge_lane.step() + self.cloud_lane.step()
+                    + (self.cloud_lane.spec_collect() if self.spec_k
+                       else self.cloud_lane.macro_collect()))
+        out = self.edge_lane.step()
+        if self.spec_k:
+            # per-token cadence, speculative cloud lane: ONE burst per
+            # boundary (k tokens per LLM dispatch, one sync)
+            self.cloud_lane.spec_dispatch(1, self.spec_k)
+            return out + self.cloud_lane.spec_collect()
+        return out + self.cloud_lane.step()
 
     def step(self) -> List[Tuple[int, str, GenStats]]:
         """Advance both lanes by one macro-step (``macro_k`` tokens per

@@ -15,6 +15,18 @@ weather, so sequential, per-step-batched and K-token macro-step engines
 all see the same per-(request, token) network state and host-side tests
 can still reason about a single draw at a time.
 
+Speculative verify bursts (``spec_k > 0``) consume the SAME entry
+points with a coarser key: one draw per burst, keyed by the burst's
+FIRST step counter ``(seed, rid, step_at_burst_start)`` — a burst is
+one physical round-trip, so it gets one weather sample, still
+counter-based and order-independent.  Consequence: a spec run matches
+the per-token oracle bit for bit only where the weather is
+burst-constant (CALM jitter, no faults); under jittery or faulty links
+the burst-keyed stream is self-deterministic but intentionally NOT
+comparable to the per-token stream, and a degraded row (open breaker)
+skips the draw entirely — its burst decodes SLM-only at
+``edge_compute_ms`` per token and zero cloud cost.
+
 ``FaultModel`` extends the weather from "slow" to "lossy/down" with the
 same discipline: per-token LOSS (the cloud reply is dropped after the
 wait) is a counter-based draw keyed ``(seed, rid, step)``; OUTAGE

@@ -250,6 +250,25 @@ class LanePager:
         del row.owned[len(row.owned) - len(pids):]
         self.alloc.release(pids)
 
+    def rollback_to(self, slot: int, pos: int) -> List[int]:
+        """Speculative rollback of a row to accepted depth ``pos``
+        (tokens [0, pos) kept): pages grown for rejected draft
+        positions STAY mapped — the row keeps its block-table
+        reservation and the next accepted tokens re-fill them — so
+        this never frees below (or above) the accepted position; it
+        only checks the invariant that the mapping still covers the
+        accepted prefix and reports the pages mapped beyond it.
+
+        Returns the still-mapped page ids past the accepted depth
+        (telemetry: the speculative over-reservation)."""
+        row = self.rows[slot]
+        assert row is not None, f"rollback of empty slot {slot}"
+        need = pages_for(pos, self.page_size)
+        assert len(row.full) >= need, \
+            f"slot {slot}: mapping ({len(row.full)} pages) lost the " \
+            f"accepted prefix ({need} pages for pos {pos})"
+        return row.full[need:]
+
     def release(self, slot: int) -> None:
         """Return a drained row's pages to the free lists (shared
         prefix pages drop one reader and survive for their siblings)."""

@@ -310,6 +310,8 @@ class ContinuousBatchScheduler:
 def summarize(responses: List[Response]) -> Dict[str, float]:
     lat = [r.stats.mean_latency_ms for r in responses if r.stats.latency_ms]
     waits = [r.queue_wait_seconds for r in responses]
+    drafted = sum(r.stats.spec_drafted for r in responses)
+    accepted = sum(r.stats.spec_accepted for r in responses)
     return {
         "requests": len(responses),
         "private_frac": float(np.mean([r.stats.private for r in responses])),
@@ -326,9 +328,19 @@ def summarize(responses: List[Response]) -> Dict[str, float]:
         "p99_token_latency_ms": float(np.percentile(
             [x for r in responses for x in r.stats.latency_ms], 99))
         if lat else 0.0,
-        "cloud_used_frac": float(np.mean(
-            [r.stats.cloud_tokens / max(1, r.stats.tokens)
+        # cloud DISPATCHES per emitted token, distinct from the fused-
+        # TOKEN fraction above: a speculative engine fuses (up to) k
+        # tokens per LLM round-trip, so this drops below
+        # cloud_token_frac exactly when speculation is paying off
+        "cloud_calls_per_token": float(np.mean(
+            [r.stats.cloud_calls / max(1, r.stats.tokens)
              for r in responses])),
+        "cloud_used_frac": float(np.mean(
+            [r.stats.cloud_calls / max(1, r.stats.tokens)
+             for r in responses])),
+        # speculative accept-rate over all responses (0.0 when the
+        # engine never drafted)
+        "accept_rate": float(accepted / max(1, drafted)),
         "degraded_token_frac": float(np.mean(
             [r.stats.degraded_tokens / max(1, r.stats.tokens)
              for r in responses])),

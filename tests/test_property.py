@@ -714,6 +714,125 @@ def test_fault_weather_seeded(seed, loss_rate, period, olen, n, m):
     check_fault_weather(seed, loss_rate, period, olen, n, m)
 
 
+# ----------------------------------- speculative acceptance (ISSUE 10)
+# The accept/rollback epilogue behind spec_k bursts: the fused jnp
+# epilogue must agree with the sequential host oracle everywhere, and
+# its outputs must satisfy the engine's replay invariants — the
+# accepted prefix IS draft agreement, rows always make progress, and
+# exactly one of {full window, correction, done} explains each burst.
+
+
+def check_accept_prefix(seed: int, k: int, b: int, vocab: int = 5,
+                        eos: int = 1):
+    """ops.accept_prefix == ref.accept_prefix_ref on random bursts
+    (small vocab so agreement, EOS and divergence all actually occur),
+    plus the structural invariants the spec_collect replay leans on."""
+    from repro.kernels.logit_fusion import ops as FOPS
+    from repro.kernels.logit_fusion import ref as FREF
+    rng = np.random.RandomState(seed)
+    draft = rng.randint(0, vocab, size=(k, b)).astype(np.int32)
+    sel = np.where(rng.rand(k, b) < 0.5, draft,
+                   rng.randint(0, vocab, size=(k, b))).astype(np.int32)
+    steps = rng.randint(0, 10, size=(b,)).astype(np.int32)
+    max_new = steps + rng.randint(1, k + 3, size=(b,)).astype(np.int32)
+    active = rng.rand(b) < 0.8
+    got = FOPS.accept_prefix(jnp.asarray(draft), jnp.asarray(sel),
+                             jnp.asarray(steps), jnp.asarray(max_new),
+                             jnp.asarray(active), eos)
+    want = FREF.accept_prefix_ref(draft, sel, steps, max_new, active,
+                                  eos)
+    for g, w, name in zip(got, want,
+                          ("n_emit", "c_sel", "done_now", "correction")):
+        np.testing.assert_array_equal(np.asarray(g), w, err_msg=name)
+    n_emit, c_sel, done, corr = (np.asarray(x) for x in got)
+    for j in range(b):
+        # c_sel is pure draft agreement, independent of activity
+        agree = 0
+        while agree < k and sel[agree, j] == draft[agree, j]:
+            agree += 1
+        assert c_sel[j] == agree
+        if not active[j]:
+            assert n_emit[j] == 0 and not done[j] and not corr[j]
+            continue
+        # progress: an active row always emits, never past the window
+        assert 1 <= n_emit[j] <= k
+        assert n_emit[j] <= max_new[j] - steps[j]
+        # every emitted token except the last agrees with the draft
+        assert all(sel[i, j] == draft[i, j] for i in range(n_emit[j] - 1))
+        # exactly one explanation per burst
+        assert not (done[j] and corr[j])
+        if corr[j]:
+            assert n_emit[j] == c_sel[j] + 1
+        elif not done[j]:
+            assert n_emit[j] == k and c_sel[j] >= k
+        else:
+            assert (sel[n_emit[j] - 1, j] == eos
+                    or steps[j] + n_emit[j] >= max_new[j])
+
+
+def check_rollback_to(seed: int, n_ops: int = 30):
+    """LanePager.rollback_to never frees (the grown reservation stays
+    for the re-fill), reports exactly the over-reserved page ids past
+    the accepted depth, and refuses a rollback target the mapping no
+    longer covers."""
+    rng = np.random.RandomState(seed)
+    batch, ps, max_seq = 2, 4, 32
+    pager = PAG.LanePager(batch, max_seq, ps,
+                          pages=batch * PAG.pages_for(max_seq, ps))
+    for _ in range(n_ops):
+        slot = int(rng.randint(batch))
+        row = pager.rows[slot]
+        if row is None:
+            nf, _ = pager.demand(int(rng.randint(1, max_seq + 1)), 0)
+            row = pager.admit(slot, nf)
+            assert row is not None           # pool sized for worst case
+            continue
+        if rng.rand() < 0.3:
+            pager.release(slot)
+            continue
+        covered = len(row.full) * ps
+        pos = int(rng.randint(0, covered + 1))
+        free_before = pager.alloc.free_pages
+        full_before = list(row.full)
+        over = pager.rollback_to(slot, pos)
+        assert over == full_before[PAG.pages_for(pos, ps):]
+        assert row.full == full_before, "rollback touched the mapping"
+        assert pager.alloc.free_pages == free_before, \
+            "rollback freed pages below/above the accepted position"
+        pager.alloc.check()
+        if covered < max_seq:                # target beyond the mapping
+            with pytest.raises(AssertionError, match="accepted prefix"):
+                pager.rollback_to(slot, covered + ps)
+    for s in range(batch):
+        pager.release(s)
+    assert pager.alloc.free_pages == pager.alloc.num_pages
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 5))
+@settings(**SET)
+def test_accept_prefix_matches_oracle(seed, k, b):
+    check_accept_prefix(seed, k, b)
+
+
+@pytest.mark.parametrize("seed,k,b", [
+    (0, 1, 1), (1, 2, 3), (2, 4, 4), (3, 4, 1), (4, 6, 2), (5, 3, 5),
+])
+def test_accept_prefix_seeded(seed, k, b):
+    """Seeded fallback of the @given sweep (runs w/o hypothesis)."""
+    check_accept_prefix(seed, k, b)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_rollback_to_invariants(seed):
+    check_rollback_to(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_rollback_to_seeded(seed):
+    check_rollback_to(seed)
+
+
 def test_adapter_cache_raises_on_misuse():
     """Unknown-id acquire and unpinned release must raise, not corrupt."""
     cache = ADP.AdapterCache(2)
